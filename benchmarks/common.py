@@ -1,0 +1,32 @@
+"""Shared benchmark plumbing: table rendering + artifact persistence."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Sequence
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "benchmarks")
+
+
+def save_result(name: str, payload) -> str:
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.abspath(os.path.join(ARTIFACTS, f"{name}.json"))
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def render_table(title: str, rows: List[Dict], columns: Sequence[str]) -> str:
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows)) for c in columns}
+    header = "  ".join(c.ljust(widths[c]) for c in columns)
+    lines = [title, "-" * len(header), header, "-" * len(header)]
+    for r in rows:
+        lines.append("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in columns))
+    return "\n".join(lines)
+
+
+def fmt(x, nd=3):
+    if isinstance(x, float):
+        return f"{x:.{nd}f}"
+    return x

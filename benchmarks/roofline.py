@@ -1,0 +1,89 @@
+"""Roofline report: aggregates the dry-run artifacts into the §Roofline table.
+
+Reads artifacts/dryrun/<arch>__<shape>__<mesh>.json (produced by
+``python -m repro.launch.dryrun``) and prints, per (arch x shape):
+
+  compute / memory / collective terms in seconds, the dominant term,
+  MODEL_FLOPS (6*N_active*D or 2*N_active*D), the useful-flops ratio, and
+  per-device peak bytes.
+
+Single-pod only, per the assignment (the multi-pod pass proves the pod axis
+shards; its artifacts are listed separately as a fits-check).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import fmt, render_table, save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load(mesh: str = "single"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_table(mesh: str = "single"):
+    recs = load(mesh)
+    if not recs:
+        print(f"No dry-run artifacts for mesh={mesh}. "
+              "Run: PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return []
+    rows = []
+    for r in recs:
+        if not r.get("ok"):
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "dominant": f"FAILED: {r.get('error', '?')[:40]}"})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "compute_ms": fmt(t["compute_s"] * 1e3, 1),
+            "memory_ms": fmt(t["memory_s"] * 1e3, 1),
+            "collective_ms": fmt(t["collective_s"] * 1e3, 1),
+            "dominant": t["dominant"],
+            "useful_ratio": fmt(t["useful_flops_ratio"], 2),
+            "peak_GiB": fmt(r["memory"]["peak_bytes"] / 2**30, 2),
+            "fits_16G": "yes" if r["memory"]["peak_bytes"] < 16 * 2**30 else "NO",
+        })
+    print(render_table(
+        f"Roofline terms per (arch x shape), mesh={mesh} "
+        "(per chip: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)",
+        rows,
+        ["arch", "shape", "compute_ms", "memory_ms", "collective_ms",
+         "dominant", "useful_ratio", "peak_GiB", "fits_16G"],
+    ))
+    save_result(f"roofline_{mesh}", rows)
+    return rows
+
+
+def pick_hillclimb_candidates(rows):
+    """Worst roofline fraction / most collective-bound / most representative."""
+    ok = [r for r in rows if "compute_ms" in r]
+    if not ok:
+        return []
+
+    def frac(r):  # compute / bound: closeness to the compute roofline
+        bound = max(float(r["compute_ms"]), float(r["memory_ms"]),
+                    float(r["collective_ms"]))
+        return float(r["compute_ms"]) / bound if bound else 1.0
+
+    worst = min(ok, key=frac)
+    coll = max(ok, key=lambda r: float(r["collective_ms"])
+               / max(float(r["compute_ms"]), 1e-9))
+    rep = next((r for r in ok
+                if r["arch"] == "llama3-405b" and r["shape"] == "prefill_32k"),
+               ok[0])
+    out = {"worst_roofline": worst, "most_collective_bound": coll,
+           "paper_representative": rep}
+    for k, v in out.items():
+        print(f"  hillclimb candidate [{k}]: {v['arch']} x {v['shape']}")
+    return out

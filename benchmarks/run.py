@@ -1,0 +1,62 @@
+"""Benchmark entrypoint: ``PYTHONPATH=src python -m benchmarks.run [--full]``.
+
+Runs, in order:
+  1. the paper-figure reproductions (Figs. 12-16) through the MI300X cache
+     simulator, with the paper-claim validation checklist,
+  2. the TPU-port reuse benchmarks (kernel HBM traffic + mesh placement),
+  3. the roofline report over any existing dry-run artifacts.
+
+Quick mode (default) trims sweep grids to run in minutes on one CPU core;
+``--full`` sweeps the paper's complete grids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale sweeps")
+    ap.add_argument("--skip-figures", action="store_true")
+    args = ap.parse_args(argv)
+
+    t0 = time.time()
+    print("=" * 78)
+    print("NUMA-aware attention scheduling — benchmark suite")
+    print("=" * 78)
+
+    from benchmarks import paper_figures, roofline, tpu_reuse
+
+    ok = True
+    if not args.skip_figures:
+        print("\n### Paper evaluation reproduction (MI300X cache simulator)\n")
+        rows12 = paper_figures.fig12_13_mha(full=args.full)
+        print()
+        paper_figures.fig14_gqa(full=args.full)
+        print()
+        paper_figures.fig15_deepseek(full=args.full)
+        print()
+        paper_figures.fig16_backward(full=args.full)
+        print("\n### Paper-claim validation")
+        checks = paper_figures.validate_paper_claims(rows12)
+        ok = all(checks.values()) if checks else ok
+
+    print("\n### TPU port: static reuse / placement analysis\n")
+    tpu_reuse.kernel_reuse_table()
+    print()
+    tpu_reuse.placement_table()
+
+    print("\n### Roofline (from dry-run artifacts)\n")
+    rows = roofline.roofline_table("single")
+    if rows:
+        roofline.pick_hillclimb_candidates(rows)
+
+    print(f"\nDone in {time.time() - t0:.0f}s")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

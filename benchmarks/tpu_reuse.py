@@ -1,0 +1,74 @@
+"""TPU-side mapping benchmark: HBM traffic per mapping (dry-run analogue of
+the paper's L2 hit rates) + mesh-level KV-duplication from head placement.
+
+On TPU there is no L2 counter to read: the analogue quantity is how many
+HBM->VMEM block copies the Pallas pipeline performs, which is *fully
+determined* by grid order + index maps (kernels.flash_attention.
+hbm_block_fetches), plus — at pod level — how many chips must hold each KV
+head under a placement (core.placement)."""
+
+from __future__ import annotations
+
+from repro.core import placement
+from repro.kernels.flash_attention import (
+    BLOCK_FIRST, HEAD_FIRST, MappingConfig, hbm_block_fetches,
+)
+
+from benchmarks.common import fmt, render_table, save_result
+
+MAPPINGS = {
+    "swizzled_head_first": MappingConfig(order=HEAD_FIRST, kv_resident=True),
+    "naive_head_first": MappingConfig(order=HEAD_FIRST, kv_resident=False),
+    "swizzled_block_first": MappingConfig(order=BLOCK_FIRST, kv_resident=True),
+    "naive_block_first": MappingConfig(order=BLOCK_FIRST, kv_resident=False),
+}
+
+CONFIGS = [
+    # name, hq, hkv, seq, d
+    ("llama3-8b", 32, 8, 8192, 128),
+    ("llama3-405b", 128, 8, 8192, 128),
+    ("llama3-405b-32k", 128, 8, 32768, 128),
+    ("gemma2-2b", 8, 4, 8192, 256),
+    ("musicgen-medium(MHA)", 24, 24, 8192, 64),
+]
+
+
+def kernel_reuse_table():
+    rows = []
+    for name, hq, hkv, seq, d in CONFIGS:
+        row = {"config": name}
+        for mname, mc in MAPPINGS.items():
+            r = hbm_block_fetches(
+                batch=1, num_q_heads=hq, num_kv_heads=hkv,
+                seq_q=seq, seq_kv=seq, head_dim=d, mapping=mc,
+            )
+            row[mname] = fmt(r["reuse_efficiency"] * 100, 1)
+        rows.append(row)
+    print(render_table(
+        "TPU kernel HBM reuse efficiency (%, 100 = each ACC fetched once)",
+        rows, ["config"] + list(MAPPINGS),
+    ))
+    save_result("tpu_kernel_reuse", rows)
+    return rows
+
+
+def placement_table(model_shards: int = 16):
+    rows = []
+    for name, hq, hkv, seq, d in CONFIGS:
+        aligned = placement.plan(hq, hkv, model_shards, placement.ACC_ALIGNED)
+        striped = placement.plan(hq, hkv, model_shards, placement.STRIPED)
+        extra = placement.kv_collective_bytes_per_layer(
+            striped, seq_len=seq, head_dim=d, batch=8)
+        rows.append({
+            "config": name,
+            "aligned_dup": fmt(aligned.kv_duplication, 2),
+            "striped_dup": fmt(striped.kv_duplication, 2),
+            "striped_extra_GB_per_layer": fmt(extra / 1e9, 3),
+        })
+    print(render_table(
+        f"Mesh-level KV duplication under {model_shards}-way head sharding",
+        rows,
+        ["config", "aligned_dup", "striped_dup", "striped_extra_GB_per_layer"],
+    ))
+    save_result("tpu_placement", rows)
+    return rows

@@ -1,0 +1,34 @@
+"""Full paper-grid NUMA sweep driver (Figs. 12-16 at paper scale).
+
+Equivalent to ``python -m benchmarks.run --full`` but exposed as a script
+with figure selection, so individual paper tables can be regenerated:
+
+  PYTHONPATH=src:. python examples/numa_sweep.py --figure 13 --full
+  PYTHONPATH=src:. python examples/numa_sweep.py --figure all
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--figure", default="all",
+                    choices=["12", "13", "14", "15", "16", "all"])
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import paper_figures as pf
+
+    if args.figure in ("12", "13", "all"):
+        rows = pf.fig12_13_mha(full=args.full)
+        pf.validate_paper_claims(rows)
+    if args.figure in ("14", "all"):
+        pf.fig14_gqa(full=args.full)
+    if args.figure in ("15", "all"):
+        pf.fig15_deepseek(full=args.full)
+    if args.figure in ("16", "all"):
+        pf.fig16_backward(full=args.full)
+
+
+if __name__ == "__main__":
+    main()

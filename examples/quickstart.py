@@ -1,0 +1,58 @@
+"""Quickstart: the paper's technique in five minutes, via the public API.
+
+1. The four workgroup mappings (paper Figs. 7-10) and how they place
+   attention heads on NUMA domains.
+2. The calibrated MI300X cache simulator reproducing the paper's headline
+   result (swizzled head-first sustains high L2 hit rates; block-first
+   collapses).
+3. The Pallas kernel with the mapping realized in its grid, validated
+   against the oracle, plus its static HBM-traffic analysis (the TPU
+   analogue of the L2 hit rate).
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cache_sim, numa, swizzle
+from repro.core.cache_sim import AttentionWorkload
+from repro.core.swizzle import AttentionGrid
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import (
+    HEAD_FIRST, BLOCK_FIRST, MappingConfig, hbm_block_fetches,
+)
+
+print("== 1. Mapping strategies (8 q-heads, 128 row blocks, 4 XCDs) ==")
+grid = AttentionGrid(batch=1, num_q_heads=8, blocks_per_head=128)
+for m in swizzle.ALL_MAPPINGS:
+    sets = swizzle.heads_per_domain_sets(m, grid, 4)
+    print(f"  {m:22s} -> heads per XCD: {[sorted(s) for s in sets]}")
+
+print("\n== 2. Paper reproduction: MHA H=128, N_CTX=32K on MI300X ==")
+wl = AttentionWorkload(
+    grid=AttentionGrid(batch=1, num_q_heads=128, blocks_per_head=0),
+    seq_len=32768, head_dim=128,
+)
+res = cache_sim.compare_mappings(wl, numa.MI300X, budget_accesses=600_000)
+base = res[swizzle.SWIZZLED_HEAD_FIRST].throughput
+for m, r in res.items():
+    print(f"  {m:22s} L2 hit {r.hit_rate*100:5.1f}%   relative perf {r.throughput/base:.2f}x")
+
+print("\n== 3. Pallas kernel: same attention, mapping in the grid ==")
+q = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 512, 64))
+k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 512, 64))
+v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 512, 64))
+o = ops.flash_attention(q, k, v, causal=True, impl="pallas")
+o_ref = ref.attention(q, k, v, causal=True)
+print(f"  kernel vs oracle max err: {float(jnp.max(jnp.abs(o - o_ref))):.2e}")
+
+for name, mc in [
+    ("swizzled_head_first", MappingConfig(order=HEAD_FIRST, kv_resident=True)),
+    ("naive_block_first", MappingConfig(order=BLOCK_FIRST, kv_resident=False)),
+]:
+    t = hbm_block_fetches(batch=1, num_q_heads=32, num_kv_heads=8,
+                          seq_q=8192, seq_kv=8192, head_dim=128, mapping=mc)
+    print(f"  {name:22s} HBM reuse efficiency {t['reuse_efficiency']*100:5.1f}% "
+          f"(KV traffic {t['kv_bytes']/1e9:.2f} GB)")
+print("\nDone. See examples/numa_sweep.py for the full paper grids.")

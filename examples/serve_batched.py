@@ -1,0 +1,51 @@
+"""Batched serving example: continuous batching over a mixed request stream.
+
+Demonstrates the serving half of the framework: bucketed prefill, slot-based
+continuous batching, EOS/max-token termination, and the decode kernel path
+(one KV fetch per (batch, kv-head) grid cell — the paper's ACC insight
+applied to decode).
+
+Run: PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import transformer
+from repro.serving.engine import Request, ServingEngine
+
+
+def main():
+    cfg = registry.get_smoke_config("llama3-8b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(
+        cfg, params, num_slots=4, cache_len=256, prompt_buckets=(32, 64),
+    )
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(
+            uid=i,
+            prompt=rng.integers(1, cfg.vocab, size=(int(rng.integers(8, 60)),)),
+            max_new_tokens=int(rng.integers(4, 12)),
+            temperature=0.0 if i % 2 == 0 else 0.8,
+        )
+        for i in range(10)
+    ]
+    print(f"serving {len(requests)} requests on {engine.num_slots} slots "
+          f"(continuous batching)")
+    t0 = time.time()
+    results = engine.run(requests)
+    dt = time.time() - t0
+    new_tokens = sum(len(r.tokens) for r in results)
+    print(f"completed in {dt:.1f}s — {new_tokens} new tokens "
+          f"({new_tokens/dt:.1f} tok/s incl. compile)")
+    for r in sorted(results, key=lambda r: r.uid):
+        toks = [int(np.asarray(t).reshape(-1)[0]) for t in r.tokens]
+        print(f"  req {r.uid:2d} (prompt {r.prompt_len:2d} tok) -> {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: NUMA-aware attention scheduling (Swizzled Head-first Mapping) in
+JAX/Pallas — multi-pod training + serving framework. See DESIGN.md."""
+
+__version__ = "1.0.0"

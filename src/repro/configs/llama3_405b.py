@@ -1,0 +1,41 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+
+The paper's Fig. 14 H_Q=128 row. 126 layers compile as one scanned body.
+[arXiv:2407.21783]
+"""
+
+from repro.configs.base import (
+    DECODE_32K, PREFILL_32K, TRAIN_4K, LayerSpec, ModelConfig,
+)
+
+CONFIG = ModelConfig(
+    name="llama3-405b",
+    d_model=16384,
+    n_layers=126,
+    n_heads=128,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=53248,
+    vocab=128256,
+    layer_pattern=(LayerSpec(kind="attn", ffn="mlp", rope_theta=500000.0),),
+    rope_theta=500000.0,
+    tie_embeddings=False,
+    max_seq_len=131072,
+)
+
+SMOKE = ModelConfig(
+    name="llama3-405b-smoke",
+    d_model=64,
+    n_layers=3,          # exercises the scan (3 periods of 1)
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=8,
+    d_ff=128,
+    vocab=512,
+    layer_pattern=(LayerSpec(kind="attn", ffn="mlp", rope_theta=500000.0),),
+    tie_embeddings=False,
+    max_seq_len=1024,
+    compute_dtype="float32",
+)
+
+SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K)  # pure full attention: no long_500k

@@ -1,0 +1,46 @@
+"""mamba2-1.3b [ssm]: 48L d_model=2048, attention-free (SSD), d_ff=0,
+vocab=50280, ssm_state=128. [arXiv:2405.21060]
+
+The paper's attention-scheduling technique is inapplicable (no K/V ACCs);
+implemented without it — see DESIGN.md §Arch-applicability. Decode is O(1)
+per step (constant-size recurrent state), so long_500k runs.
+"""
+
+from repro.configs.base import (
+    DECODE_32K, LONG_500K, PREFILL_32K, TRAIN_4K,
+    LayerSpec, ModelConfig, SSMConfig,
+)
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    d_model=2048,
+    n_layers=48,
+    n_heads=1,            # unused (attention-free)
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=0,
+    vocab=50280,
+    layer_pattern=(LayerSpec(kind="mamba", ffn="none"),),
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, conv_width=4,
+                  chunk=256, num_groups=1),
+    tie_embeddings=True,
+    max_seq_len=1048576,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke",
+    d_model=64,
+    n_layers=2,
+    n_heads=1,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=0,
+    vocab=512,
+    layer_pattern=(LayerSpec(kind="mamba", ffn="none"),),
+    ssm=SSMConfig(state_dim=16, head_dim=8, expand=2, conv_width=4,
+                  chunk=32, num_groups=1),
+    max_seq_len=1024,
+    compute_dtype="float32",
+)
+
+SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)

@@ -1,0 +1,53 @@
+"""Architecture registry: ``--arch <id>`` -> (ModelConfig, shapes).
+
+Each arch module defines:
+  CONFIG  — the exact published configuration (full scale),
+  SMOKE   — a reduced same-family config for CPU tests,
+  SHAPES  — its assigned InputShape cells (long_500k omitted for pure
+            full-attention archs; see DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.base import InputShape, ModelConfig
+
+ARCH_IDS = (
+    "mamba2-1.3b",
+    "hymba-1.5b",
+    "llama-3.2-vision-11b",
+    "gemma3-1b",
+    "llama3-405b",
+    "llama3-8b",
+    "gemma2-2b",
+    "mixtral-8x7b",
+    "moonshot-v1-16b-a3b",
+    "musicgen-medium",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list(_MODULES)}")
+    return importlib.import_module(_MODULES[arch])
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _mod(arch).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _mod(arch).SMOKE
+
+
+def get_shapes(arch: str) -> Tuple[InputShape, ...]:
+    return _mod(arch).SHAPES
+
+
+def all_cells() -> List[Tuple[str, InputShape]]:
+    """Every assigned (arch x shape) dry-run cell."""
+    return [(a, s) for a in ARCH_IDS for s in get_shapes(a)]

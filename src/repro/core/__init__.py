@@ -1,0 +1,20 @@
+"""Core: the paper's contribution — NUMA-aware attention scheduling.
+
+Modules:
+  swizzle     four workgroup mapping strategies (paper Figs. 7-11)
+  acc         Attention Compute Cluster abstraction (paper §3.1)
+  numa        NUMA topology descriptors (MI300X, TPU presets)
+  cache_sim   event-driven multi-domain LRU simulator (paper §4 evaluation)
+  perf_model  analytic hit-rate / throughput model
+  placement   mesh-level ACC-aligned head sharding (TPU-pod adaptation)
+"""
+
+from repro.core import acc, cache_sim, numa, perf_model, placement, swizzle  # noqa: F401
+from repro.core.swizzle import (  # noqa: F401
+    ALL_MAPPINGS,
+    NAIVE_BLOCK_FIRST,
+    NAIVE_HEAD_FIRST,
+    SWIZZLED_BLOCK_FIRST,
+    SWIZZLED_HEAD_FIRST,
+    AttentionGrid,
+)

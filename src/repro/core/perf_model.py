@@ -1,0 +1,115 @@
+"""Analytic performance / hit-rate model, cross-validated against cache_sim.
+
+Two uses:
+  1. a fast path for the benchmark sweeps (the event simulator is exact but
+     slow at paper scale; the analytic model is O(1) per config),
+  2. napkin math for the §Perf hillclimb — predicted deltas before a change.
+
+Model (per domain, steady state):
+  Let ``w`` = concurrent workgroup slots per domain, ``a`` = mean distinct
+  ACCs among the ``w`` resident workgroups (from the dispatch order of the
+  mapping), ``R`` = reuse window in bytes that the cache must retain for
+  concurrent sharers to hit (tile size x drift distance x streams).
+
+  * If the *whole shared working set* of the resident ACCs fits in cache
+    (short sequences), everything after cold misses hits:
+        hit_rate ~= 1 - cold/accesses.
+  * Else sharing is stream-wise: of each group of ``w/a`` workgroups walking
+    one KV stream, the leader misses and the rest hit — provided the group's
+    drift window fits in cache:
+        hit_rate ~= 1 - a / w      (fits)
+        hit_rate ~= 0              (thrash: a distinct streams overflow)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.core import acc as acc_lib
+from repro.core import swizzle
+from repro.core.cache_sim import AttentionWorkload
+from repro.core.numa import Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyticEstimate:
+    mapping: str
+    hit_rate: float
+    time: float          # seconds per launch (model)
+    hbm_bytes: float
+    flops: float
+
+    @property
+    def throughput(self) -> float:
+        return self.flops / self.time if self.time else 0.0
+
+
+def _mean_kv_tiles(wl: AttentionWorkload) -> float:
+    blocks = -(-wl.seq_len // wl.block_m)
+    if not wl.causal:
+        return float(wl.kv_tiles_total)
+    return (blocks + 1) * wl.block_m / (2.0 * wl.block_n)
+
+
+def estimate(
+    mapping: str, wl: AttentionWorkload, topo: Topology, *, drift_tiles: int = 16
+) -> AnalyticEstimate:
+    blocks = -(-wl.seq_len // wl.block_m)
+    grid = dataclasses.replace(wl.grid, blocks_per_head=blocks)
+    w = topo.slots_per_domain
+    a = swizzle.accs_per_domain_concurrent(mapping, grid, topo.num_domains, w)
+    a = max(a, 1.0)
+
+    info = acc_lib.acc_info(
+        grid,
+        seq_len_kv=wl.seq_len,
+        head_dim=wl.head_dim,
+        block_m=wl.block_m,
+        dtype_bytes=wl.dtype_bytes,
+    )
+    mean_tiles = _mean_kv_tiles(wl)
+    accesses_per_wg = 1 + 2 * mean_tiles
+    total_wgs = grid.total_wgs
+    accesses = total_wgs * accesses_per_wg
+
+    if a * info.kv_bytes <= topo.cache_bytes:
+        # Resident regime: each domain cold-loads its ACCs' KV once.
+        unique_accs = grid.batch * grid.num_accs
+        cold = unique_accs * (2 * wl.kv_tiles_total) / max(topo.num_domains, 1)
+        # naive mappings replicate ACCs across all domains:
+        if mapping in (swizzle.NAIVE_HEAD_FIRST, swizzle.NAIVE_BLOCK_FIRST):
+            cold *= topo.num_domains
+        hit = max(0.0, 1.0 - cold * topo.num_domains / accesses)
+    else:
+        # Streaming regime: leader-miss / follower-hit within each stream,
+        # if the drift window of `a` concurrent streams fits in cache.
+        window_bytes = a * drift_tiles * 2 * wl.kv_tile_bytes * (w / a)
+        if window_bytes <= topo.cache_bytes:
+            hit = max(0.0, 1.0 - a / w)
+        else:
+            hit = 0.02  # residual (Q tiles, boundary reuse)
+
+    flops = total_wgs * mean_tiles * wl.flops_per_tile_pair
+    hbm_bytes = (1 - hit) * accesses * 2 * wl.kv_tile_bytes
+    t_compute = flops / topo.peak_flops
+    t_mem = hbm_bytes / topo.hbm_bw
+    return AnalyticEstimate(
+        mapping=mapping,
+        hit_rate=hit,
+        time=max(t_compute, t_mem),
+        hbm_bytes=hbm_bytes,
+        flops=flops,
+    )
+
+
+def relative_performance(
+    wl: AttentionWorkload,
+    topo: Topology,
+    baseline: str = swizzle.SWIZZLED_HEAD_FIRST,
+    mappings=swizzle.ALL_MAPPINGS,
+) -> Dict[str, float]:
+    """Throughput of each mapping relative to the baseline (paper Figs 12/14/15)."""
+    ests = {m: estimate(m, wl, topo) for m in mappings}
+    base = ests[baseline].throughput
+    return {m: (e.throughput / base if base else 0.0) for m, e in ests.items()}

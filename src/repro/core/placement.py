@@ -1,0 +1,133 @@
+"""Mesh-level ACC placement: the paper's insight applied to a TPU pod.
+
+Each TPU chip owns private HBM; sharding the head axis over the ``model`` mesh
+axis makes every chip a NUMA domain holding a subset of heads' K/V. The
+choice the paper studies at WG->XCD granularity recurs verbatim at
+head->chip granularity:
+
+  * ``striped`` (naive): q-head h -> shard h % n. A GQA KV group is split
+    across ``min(group_size, n)`` shards, so its K/V must be replicated or
+    all-gathered — cross-domain traffic, the pod-scale analogue of the
+    paper's fragmented L2.
+  * ``acc_aligned`` (swizzled): contiguous ranges of whole KV groups per
+    shard. Every shard computes attention for its groups entirely from local
+    K/V — zero duplication, zero collective inside attention.
+
+`plan()` returns the q/kv head permutations plus the duplication factor, and
+`distributed/sharding.py` consumes it when building PartitionSpecs. The
+duplication factor feeds the collective-bytes roofline term (§Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+ACC_ALIGNED = "acc_aligned"
+STRIPED = "striped"
+
+
+@dataclasses.dataclass(frozen=True)
+class HeadPlacement:
+    """Head -> model-shard assignment for one attention layer family."""
+
+    num_q_heads: int
+    num_kv_heads: int
+    num_shards: int
+    strategy: str
+    q_perm: Tuple[int, ...]   # new order of q heads (gather indices)
+    kv_perm: Tuple[int, ...]  # new order of kv heads
+    kv_duplication: float     # mean #shards holding each kv head (1.0 = ideal)
+
+    @property
+    def q_heads_per_shard(self) -> int:
+        return self.num_q_heads // self.num_shards
+
+    def shard_of_q_head(self, h: int) -> int:
+        """Shard serving (permuted) q-head position h."""
+        return h // max(1, self.q_heads_per_shard)
+
+
+def plan(
+    num_q_heads: int,
+    num_kv_heads: int,
+    num_shards: int,
+    strategy: str = ACC_ALIGNED,
+) -> HeadPlacement:
+    """Compute the head permutation realizing a placement strategy.
+
+    Sharding is always "contiguous blocks of the permuted axis" (that is what
+    a PartitionSpec does), so the strategy is encoded entirely in the
+    permutation — mirroring how the paper encodes it entirely in the wid
+    swizzle while hardware dispatch stays fixed.
+    """
+    if num_q_heads % num_kv_heads:
+        raise ValueError("num_q_heads must be divisible by num_kv_heads")
+    group = num_q_heads // num_kv_heads
+    n = num_shards
+
+    if strategy == ACC_ALIGNED:
+        # Identity: q heads are already laid out group-contiguously
+        # (h_kv = h_q // group), so contiguous shards hold whole groups
+        # whenever shards divide evenly into groups or vice versa.
+        q_perm = np.arange(num_q_heads)
+        kv_perm = np.arange(num_kv_heads)
+    elif strategy == STRIPED:
+        # Round-robin: shard s gets q heads s, s+n, s+2n, ... — the naive
+        # baseline. Realized as a permutation placing those heads
+        # contiguously so a block-sharded axis reproduces the striping.
+        # Stripe width = largest divisor of the head count <= n (fewer heads
+        # than shards stripes across all heads).
+        def _stripe(count: int) -> np.ndarray:
+            eff = max(d for d in range(1, min(n, count) + 1) if count % d == 0)
+            return np.arange(count).reshape(-1, eff).T.reshape(-1)
+
+        q_perm = _stripe(num_q_heads)
+        kv_perm = _stripe(num_kv_heads)
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}")
+
+    # Duplication factor: for each kv head, how many shards host at least one
+    # of its q heads. KV must live on (or be gathered to) all of them.
+    if num_q_heads % n == 0:
+        qps = num_q_heads // n
+        shard_of_pos = np.arange(num_q_heads) // qps
+    else:
+        shard_of_pos = (np.arange(num_q_heads) * n) // num_q_heads
+    kv_of_head = q_perm // group  # kv head of the q head at each position
+    dup = [
+        len(np.unique(shard_of_pos[kv_of_head == kv]))
+        for kv in range(num_kv_heads)
+    ]
+    return HeadPlacement(
+        num_q_heads=num_q_heads,
+        num_kv_heads=num_kv_heads,
+        num_shards=n,
+        strategy=strategy,
+        q_perm=tuple(int(x) for x in q_perm),
+        kv_perm=tuple(int(x) for x in kv_perm),
+        kv_duplication=float(np.mean(dup)),
+    )
+
+
+def kv_collective_bytes_per_layer(
+    placement: HeadPlacement,
+    *,
+    seq_len: int,
+    head_dim: int,
+    batch: int,
+    dtype_bytes: int = 2,
+) -> float:
+    """Extra cross-chip K/V traffic a placement implies, bytes per layer.
+
+    ACC-aligned placement ideally yields 0 (duplication 1.0): each shard's
+    attention reads only local K/V. Striped placement must move each KV head
+    to (dup - 1) extra shards — an all-gather over the model axis in the
+    lowered HLO. This is the pod-scale quantity corresponding to the paper's
+    'redundant HBM fetches'.
+    """
+    kv_bytes = 2 * batch * seq_len * head_dim * dtype_bytes  # K and V, one head
+    extra = max(0.0, placement.kv_duplication - 1.0)
+    return placement.num_kv_heads * kv_bytes * extra

@@ -1,0 +1,209 @@
+"""Workgroup-ID swizzling: the paper's core contribution (Figs. 7-11).
+
+A FlashAttention2 launch is a 1-D grid of ``batch * num_q_heads *
+blocks_per_head`` workgroups. The hardware dispatches workgroup ``wid`` to
+NUMA domain ``wid % num_domains`` (chunked round-robin, chunk size 1 — paper
+§2.2). A *mapping strategy* decides which ``(batch, q_head, q_block)`` cell a
+given ``wid`` executes; combined with the fixed hardware policy this fully
+determines which domain serves which cell.
+
+The four strategies of paper §3.2-3.3:
+
+  naive_block_first     block-major iteration, no swizzle        (Fig. 7)
+  swizzled_block_first  block-major, GQA-group swizzle (AITER)   (Fig. 8)
+  naive_head_first      head-major iteration, no swizzle (Triton)(Fig. 9)
+  swizzled_head_first   head-major, ACC-aligned swizzle (OURS)   (Fig. 10/11)
+
+All functions here are pure integer arithmetic on ``//``, ``%``, ``*`` so they
+evaluate identically on Python ints, numpy arrays and JAX tracers — the same
+code feeds the cache simulator, the Pallas ``index_map``s, and the property
+tests.
+
+Deviation from paper Fig. 11: the paper interleaves batches at the finest
+granularity (``wid_per_batch = wid // BATCH``); we order batch outermost. When
+``num_q_heads * blocks_per_head % num_domains == 0`` (all paper configs) the
+wid→domain assignment of cells is identical, and the outermost-batch form is
+the one a Pallas grid can express directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+NAIVE_BLOCK_FIRST = "naive_block_first"
+SWIZZLED_BLOCK_FIRST = "swizzled_block_first"
+NAIVE_HEAD_FIRST = "naive_head_first"
+SWIZZLED_HEAD_FIRST = "swizzled_head_first"
+
+ALL_MAPPINGS = (
+    NAIVE_BLOCK_FIRST,
+    SWIZZLED_BLOCK_FIRST,
+    NAIVE_HEAD_FIRST,
+    SWIZZLED_HEAD_FIRST,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionGrid:
+    """Shape of the FA2 workgroup grid for one kernel launch.
+
+    ``group_size`` is the number of query heads sharing one KV head
+    (GQA group; 1 for MHA). An Attention Compute Cluster (ACC, paper §3.1) is
+    the set of workgroups sharing a KV tensor: ``group_size * blocks_per_head``
+    workgroups per (batch, kv_head).
+    """
+
+    batch: int
+    num_q_heads: int
+    blocks_per_head: int
+    group_size: int = 1
+
+    def __post_init__(self):
+        if self.num_q_heads % self.group_size:
+            raise ValueError(
+                f"num_q_heads={self.num_q_heads} not divisible by "
+                f"group_size={self.group_size}"
+            )
+
+    @property
+    def num_kv_heads(self) -> int:
+        return self.num_q_heads // self.group_size
+
+    @property
+    def wgs_per_batch(self) -> int:
+        return self.num_q_heads * self.blocks_per_head
+
+    @property
+    def total_wgs(self) -> int:
+        return self.batch * self.wgs_per_batch
+
+    @property
+    def num_accs(self) -> int:
+        """ACCs per batch element: one per KV head."""
+        return self.num_kv_heads
+
+
+def domain_of(wid, num_domains: int):
+    """Hardware dispatch policy: chunked round-robin with chunk size 1."""
+    return wid % num_domains
+
+
+def _heads_per_domain(num_q_heads: int, num_domains: int) -> int:
+    """Paper assumes H % D == 0; we round up and wrap for the general case."""
+    return max(1, -(-num_q_heads // num_domains))
+
+
+def decode(mapping: str, wid, grid: AttentionGrid, num_domains: int):
+    """Map a linear workgroup id to its ``(batch, q_head, q_block)`` cell.
+
+    This is the inverse view of the paper's swizzles: given the wid the
+    hardware hands us (and hence the domain ``wid % num_domains`` we run on),
+    which cell should we compute so that the *set of cells per domain* matches
+    the strategy's intent.
+    """
+    wpb = grid.wgs_per_batch
+    b = wid // wpb
+    r = wid % wpb
+    h_count = grid.num_q_heads
+    m_count = grid.blocks_per_head
+    d = num_domains
+
+    if mapping == NAIVE_BLOCK_FIRST:
+        # for block m: for head h: wid++  => XCD_i gets block0 of head i, ...
+        h = r % h_count
+        m = r // h_count
+    elif mapping == SWIZZLED_BLOCK_FIRST:
+        # Block-major within each domain, contiguous head ranges per domain
+        # (AITER): domain d serves heads [d*hpx, (d+1)*hpx), iterating
+        # block-first across them.
+        hpx = _heads_per_domain(h_count, d)
+        dom = r % d
+        slot = r // d
+        h = (dom * hpx + slot % hpx) % h_count
+        m = (slot // hpx) % m_count
+    elif mapping == NAIVE_HEAD_FIRST:
+        # All blocks of head 0, then head 1, ... (Triton default); round-robin
+        # dispatch stripes each head across every domain.
+        h = r // m_count
+        m = r % m_count
+    elif mapping == SWIZZLED_HEAD_FIRST:
+        # Paper Fig. 11: domain d serves heads [d*hpx, (d+1)*hpx) one full
+        # head at a time, blocks in order within the head.
+        hpx = _heads_per_domain(h_count, d)
+        dom = r % d
+        h = (dom * hpx + r // (d * m_count)) % h_count
+        m = (r % (d * m_count)) // d
+    else:
+        raise ValueError(f"unknown mapping {mapping!r}")
+    return b, h, m
+
+
+def encode(mapping: str, b, h, m, grid: AttentionGrid, num_domains: int):
+    """Inverse of :func:`decode` (exists when H % D == 0 and M % ... aligns).
+
+    Only used by tests (bijectivity property) and the placement planner.
+    """
+    wpb = grid.wgs_per_batch
+    h_count = grid.num_q_heads
+    m_count = grid.blocks_per_head
+    d = num_domains
+
+    if mapping == NAIVE_BLOCK_FIRST:
+        r = m * h_count + h
+    elif mapping == SWIZZLED_BLOCK_FIRST:
+        hpx = _heads_per_domain(h_count, d)
+        dom = h // hpx
+        slot = m * hpx + h % hpx
+        r = slot * d + dom
+    elif mapping == NAIVE_HEAD_FIRST:
+        r = h * m_count + m
+    elif mapping == SWIZZLED_HEAD_FIRST:
+        hpx = _heads_per_domain(h_count, d)
+        dom = h // hpx
+        r = (h % hpx) * (d * m_count) + m * d + dom
+    else:
+        raise ValueError(f"unknown mapping {mapping!r}")
+    return b * wpb + r
+
+
+def heads_per_domain_sets(
+    mapping: str, grid: AttentionGrid, num_domains: int
+) -> Tuple[set, ...]:
+    """Which q-heads each domain touches (batch 0). Used by tests/benchmarks.
+
+    The paper's co-location property: under ``swizzled_head_first`` each
+    domain's set is a contiguous range of ``H/D`` heads — whole ACCs.
+    """
+    import numpy as np
+
+    wids = np.arange(grid.wgs_per_batch)
+    _, h, _ = decode(mapping, wids, grid, num_domains)
+    doms = domain_of(wids, num_domains)
+    return tuple(
+        set(np.unique(h[doms == dom]).tolist()) for dom in range(num_domains)
+    )
+
+
+def accs_per_domain_concurrent(
+    mapping: str, grid: AttentionGrid, num_domains: int, window: int
+) -> float:
+    """Mean number of *distinct ACCs* live in a domain's dispatch window.
+
+    ``window`` models the number of concurrently resident workgroups per
+    domain (38 CUs on an MI300X XCD). This is the quantity the paper's L2
+    argument is about: 1 distinct ACC per window => one shared KV stream =>
+    hits; ``window`` distinct ACCs => thrash.
+    """
+    import numpy as np
+
+    wids = np.arange(grid.total_wgs)
+    b, h, _ = decode(mapping, wids, grid, num_domains)
+    doms = domain_of(wids, num_domains)
+    acc = b * grid.num_kv_heads + h // grid.group_size
+    counts = []
+    for dom in range(num_domains):
+        stream = acc[doms == dom]
+        for i in range(0, len(stream) - window + 1, window):
+            counts.append(len(np.unique(stream[i : i + window])))
+    return float(np.mean(counts)) if counts else 0.0

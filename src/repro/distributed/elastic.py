@@ -1,0 +1,103 @@
+"""Elastic scaling: re-mesh and reshard a run onto a different chip count.
+
+Scenario: a 512-chip job loses a pod (or gains one). The checkpoint is
+mesh-agnostic (shard files + global indices), so scaling is:
+
+  1. pick the new mesh for the surviving chip count (`choose_mesh_shape`
+     keeps the model axis if possible — ACC-aligned head sharding must keep
+     dividing the KV heads' groups — and gives the remainder to data),
+  2. build target shardings from the same naming-convention rules,
+  3. ``checkpoint.restore(..., shardings=new)`` reassembles and re-places,
+  4. the data pipeline re-shards by construction (batch = f(seed, step,
+     shard)); global batch is preserved, per-shard batch changes.
+
+`rescale_plan` is the deterministic policy piece; it is unit-tested across
+chip counts, and examples/train_small.py demonstrates a live 1-device
+"rescale" round trip.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RescalePlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    global_batch: int
+    per_shard_batch: int
+
+
+def _divisors_desc(n: int):
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def choose_mesh_shape(
+    num_devices: int,
+    cfg: ModelConfig,
+    *,
+    prefer_model: int = 16,
+    multi_pod_size: int = 256,
+) -> Tuple[Tuple[int, ...], Tuple[str, ...]]:
+    """Pick (shape, axes) for a device count.
+
+    model axis: the largest divisor of num_devices that is <= prefer_model
+    and keeps ACC alignment (divides n_kv_heads, or n_kv_heads divides it
+    while it divides n_heads). Data gets the rest; a pod axis appears when
+    more than one full pod is present.
+    """
+    model = 1
+    for d in _divisors_desc(num_devices):
+        if d > prefer_model:
+            continue
+        acc_ok = (
+            cfg.n_kv_heads % d == 0
+            or (d % cfg.n_kv_heads == 0 and cfg.n_heads % d == 0)
+            or cfg.ssm is not None
+        )
+        if acc_ok:
+            model = d
+            break
+    rest = num_devices // model
+    if num_devices > multi_pod_size and rest % (num_devices // multi_pod_size) == 0:
+        pods = num_devices // multi_pod_size
+        data = rest // pods
+        return (pods, data, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def rescale_plan(
+    old_mesh_shape: Tuple[int, ...],
+    new_num_devices: int,
+    cfg: ModelConfig,
+    global_batch: int,
+) -> RescalePlan:
+    shape, axes = choose_mesh_shape(new_num_devices, cfg)
+    data_shards = 1
+    for n, a in zip(shape, axes):
+        if a in ("pod", "data"):
+            data_shards *= n
+    if global_batch % data_shards:
+        raise ValueError(
+            f"global batch {global_batch} not divisible across {data_shards} data shards"
+        )
+    return RescalePlan(
+        old_shape=tuple(old_mesh_shape),
+        new_shape=shape,
+        axis_names=axes,
+        global_batch=global_batch,
+        per_shard_batch=global_batch // data_shards,
+    )
+
+
+def make_mesh_for(num_devices: int, cfg: ModelConfig) -> Mesh:
+    shape, axes = choose_mesh_shape(num_devices, cfg)
+    return jax.make_mesh(shape, axes)

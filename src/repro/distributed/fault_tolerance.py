@@ -1,0 +1,127 @@
+"""Fault-tolerance primitives for multi-pod training.
+
+What runs where:
+  * StragglerWatchdog — per-step wall-time EMA + deadline; on breach it
+    records the event and calls the (pluggable) mitigation hook. On a real
+    deployment the hook maps to: exclude the slow replica from the next
+    allocation (pod-level), or re-dispatch its shard (data-level). The
+    policy logic and bookkeeping are fully implemented and unit-tested; the
+    actuation layer is a callback because this container has one host.
+  * HeartbeatFile — liveness marker per process; the launcher's supervisor
+    restarts ranks whose heartbeat goes stale (standard k8s/xmanager
+    pattern). Written atomically.
+  * StepFailure — exception type the trainer's retry loop recognizes; fault
+    injection in tests raises it to exercise restore-and-replay.
+
+Recovery model (trainer.py): deterministic data (batch = f(seed, step)) +
+atomic checkpoints => crash anywhere, restart anywhere, replay exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from typing import Callable, List, Optional
+
+
+class StepFailure(RuntimeError):
+    """A step-level fault (collective timeout, preemption, injected)."""
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    deadline: float
+
+
+class StragglerWatchdog:
+    """EMA-based step-deadline detector with pluggable mitigation."""
+
+    def __init__(
+        self,
+        deadline_factor: float = 3.0,
+        ema_alpha: float = 0.1,
+        warmup_steps: int = 3,
+        on_straggler: Optional[Callable[[StragglerEvent], None]] = None,
+    ):
+        self.deadline_factor = deadline_factor
+        self.ema_alpha = ema_alpha
+        self.warmup_steps = warmup_steps
+        self.on_straggler = on_straggler
+        self.ema: Optional[float] = None
+        self.observed = 0
+        self.events: List[StragglerEvent] = []
+
+    @property
+    def straggler_count(self) -> int:
+        return len(self.events)
+
+    @property
+    def deadline(self) -> Optional[float]:
+        if self.ema is None or self.observed < self.warmup_steps:
+            return None
+        return self.deadline_factor * self.ema
+
+    def observe(self, step: int, duration: float) -> bool:
+        """Returns True if this step breached the deadline."""
+        breach = False
+        dl = self.deadline
+        if dl is not None and duration > dl:
+            ev = StragglerEvent(step=step, duration=duration, deadline=dl)
+            self.events.append(ev)
+            if self.on_straggler:
+                self.on_straggler(ev)
+            breach = True
+            # Breaching steps do not poison the EMA.
+        else:
+            self.ema = (
+                duration
+                if self.ema is None
+                else (1 - self.ema_alpha) * self.ema + self.ema_alpha * duration
+            )
+        self.observed += 1
+        return breach
+
+
+class HeartbeatFile:
+    """Atomic liveness marker: supervisor restarts ranks with stale beats."""
+
+    def __init__(self, path: str, rank: int = 0):
+        self.path = path
+        self.rank = rank
+
+    def beat(self, step: int):
+        payload = {"rank": self.rank, "step": step, "time": time.time()}
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d)
+        with os.fdopen(fd, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, self.path)
+
+    def age(self) -> Optional[float]:
+        try:
+            with open(self.path) as f:
+                return time.time() - json.load(f)["time"]
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def is_stale(self, timeout: float) -> bool:
+        a = self.age()
+        return a is None or a > timeout
+
+
+def failure_injector(fail_at_steps, exc=StepFailure):
+    """Test helper: raises at the given steps exactly once each."""
+    remaining = set(fail_at_steps)
+
+    def hook(step: int):
+        if step in remaining:
+            remaining.discard(step)
+            raise exc(f"injected failure at step {step}")
+
+    return hook

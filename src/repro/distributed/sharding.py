@@ -1,0 +1,244 @@
+"""Sharding rules: parameter PartitionSpecs by tree-path naming convention.
+
+Weight-dict keys carry semantic suffixes (models/layers.py):
+
+  _dm   (d_model, d_out)        -> shard the output dim on "model"
+  _md   (d_in, d_model)         -> shard the input dim on "model"
+  _vd   (vocab, d_model)        -> shard vocab on "model"
+  _kvd  (K, vocab, d_model)     -> shard vocab on "model"
+  _edm  (E, d_model, d_ff)      -> expert parallelism: shard E on "model"
+  _emd  (E, d_ff, d_model)      -> shard E on "model"
+  _de   (d_model, E) router     -> replicated
+  _r / norms / small vectors    -> replicated
+
+Stacked scan-over-period parameters carry one extra leading dim, handled by
+right-aligning the spec. The attention q/k/v `_dm` sharding IS the paper's
+technique at mesh scale: heads are emitted ACC-contiguously
+(``core.placement.ACC_ALIGNED``), so a block-sharded head axis keeps whole
+KV groups per chip — no KV duplication, no attention collectives. Striped
+placement (the paper's naive baseline) is exposed for the benchmark
+comparison via ``placement_strategy="striped"``.
+
+Batch/activation rules: batch shards over ("pod", "data"); sequence over
+"model" only for the long-context decode cells (KV cache too big per chip).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+MODEL_AXIS = "model"
+DATA_AXES = ("pod", "data")  # whichever exist in the mesh
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def _right_align(spec_tail: Tuple[Optional[str], ...], rank: int) -> P:
+    entries = list((None,) * (rank - len(spec_tail)) + tuple(spec_tail))
+    while entries and entries[-1] is None:  # canonical form: no trailing Nones
+        entries.pop()
+    return P(*entries)
+
+
+_SUFFIX_RULES = (
+    ("_kvd", (None, MODEL_AXIS, None)),
+    ("_edm", (MODEL_AXIS, None, None)),
+    ("_emd", (MODEL_AXIS, None, None)),
+    ("_vd", (MODEL_AXIS, None)),
+    ("_dm", (None, MODEL_AXIS)),
+    ("_md", (MODEL_AXIS, None)),
+    ("_de", (None, None)),
+    ("_r", ()),
+)
+
+
+def spec_for_path(path: Tuple[Any, ...], leaf) -> P:
+    """PartitionSpec for one parameter leaf from its tree path."""
+    key = ""
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            key = str(entry.key)
+            break
+        if isinstance(entry, str):
+            key = entry
+            break
+    rank = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+    for suffix, tail in _SUFFIX_RULES:
+        if key.endswith(suffix):
+            if len(tail) > rank:  # e.g. scalar gates
+                return P()
+            return _right_align(tail, rank)
+    return P()  # norms, biases, scalars: replicated
+
+
+def fix_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Repair divisibility: move mesh axes off dims they don't divide.
+
+    Real configs are full of awkward dims — vocab 50280 or 32001, 8 experts
+    under a 16-way model axis. For each sharded dim that the axis product
+    does not divide, re-home the axes onto the largest other dim that
+    divides (e.g. embedding: vocab -> d_model; stacked expert weights:
+    expert dim -> per-expert d_ff); replicate as the last resort.
+    """
+    sizes = dict(mesh.shape)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+
+    def axes_size(ax) -> int:
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axs:
+            n *= sizes.get(a, 1)
+        return n
+
+    for i, ax in enumerate(entries):
+        if ax is None:
+            continue
+        if shape[i] % axes_size(ax) == 0:
+            continue
+        entries[i] = None
+        candidates = sorted(
+            (j for j in range(len(shape)) if entries[j] is None and j != i),
+            key=lambda j: -shape[j],
+        )
+        for j in candidates:
+            if shape[j] % axes_size(ax) == 0 and shape[j] >= axes_size(ax):
+                entries[j] = ax
+                break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_specs(params_shape, mesh: Optional[Mesh] = None) -> Any:
+    """Tree of PartitionSpecs matching a (shape-)tree of parameters.
+
+    With ``mesh``, specs are divisibility-repaired against the leaf shapes.
+    """
+
+    def one(path, leaf):
+        s = spec_for_path(path, leaf)
+        if mesh is not None:
+            s = fix_spec(s, leaf.shape, mesh)
+        return s
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_shardings(mesh: Mesh, params_shape) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh)
+    )
+
+
+# -----------------------------------------------------------------------------
+# Batch / activation / cache specs
+# -----------------------------------------------------------------------------
+
+
+def data_shards(mesh: Mesh) -> int:
+    n = 1
+    for a in _data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_spec(mesh: Mesh, global_batch: Optional[int] = None) -> P:
+    """Batch axis spec; replicated when the batch doesn't divide the data
+    axes (long_500k has global_batch=1)."""
+    axes = _data_axes(mesh)
+    if global_batch is not None and (
+        not axes or global_batch % data_shards(mesh)
+    ):
+        return P(None)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def tokens_spec(mesh: Mesh, ndim: int = 2) -> P:
+    """tokens (B, S[, K]) — batch over data axes."""
+    b = batch_spec(mesh)
+    return P(b[0] if len(b) else None, *([None] * (ndim - 1)))
+
+
+def activation_spec(mesh: Mesh) -> P:
+    """(B, S, D) activations: batch on data, features on model."""
+    b = batch_spec(mesh)
+    return P(b[0] if len(b) else None, None, MODEL_AXIS)
+
+
+def kv_cache_spec(mesh: Mesh, *, shard_seq: bool = False) -> P:
+    """(B, Hkv, S, hd): batch on data; heads on model (ACC-aligned) unless
+    the config demands sequence sharding (long_500k: B=1, S=512k)."""
+    b = batch_spec(mesh)
+    bax = b[0] if len(b) else None
+    if shard_seq:
+        return P(bax, None, MODEL_AXIS, None)
+    return P(bax, MODEL_AXIS, None, None)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, caches_shape, *,
+                shard_seq: bool = False, global_batch: Optional[int] = None):
+    """Specs for the full cache tree emitted by transformer.init_caches."""
+    b = batch_spec(mesh, global_batch)
+    bax = b[0] if len(b) else None
+
+    def spec(path, leaf):
+        key = ""
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                key = str(entry.key)
+                break
+        rank = leaf.ndim
+        if key in ("k", "v"):
+            tail = kv_cache_spec(mesh, shard_seq=shard_seq)
+            if bax is None:
+                tail = P(None, *tuple(tail)[1:])
+        elif key == "ssm":  # (B, H, P, N)
+            tail = P(bax, MODEL_AXIS, None, None)
+        elif key == "conv":  # (B, W-1, C)
+            tail = P(bax, None, MODEL_AXIS)
+        else:
+            tail = P()
+        pad = (None,) * (rank - len(tail))
+        return fix_spec(P(*(pad + tuple(tail))), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, caches_shape)
+
+
+def shard_moe_buffers(mesh: Optional[Mesh], mode: str = "ep"):
+    """Constraint function threaded into models.moe.
+
+    mode="ep":    (E, C, D) buffers shard experts on "model" — the canonical
+                  expert-parallel layout. When E < model shards (Mixtral's 8
+                  under a 16-way axis) fix_spec re-homes the axis to the
+                  capacity dim.
+    mode="ep_dp": experts on "model" AND capacity on the data axes — the
+                  expert GEMMs then shard over the full mesh instead of
+                  leaving every data replica to redo all expert compute
+                  (a 16x compute reduction on the production mesh; see
+                  EXPERIMENTS.md §Perf, mixtral hillclimb)."""
+    if mesh is None:
+        return lambda t: t
+    tail: Tuple = (MODEL_AXIS, None, None)
+    if mode == "ep_dp":
+        tail = (MODEL_AXIS, _data_axes(mesh) or None, None)
+
+    def f(t):
+        spec = fix_spec(P(*tail), t.shape, mesh)
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    return f
+
+
+def logical_constraint(mesh: Optional[Mesh], x, spec: P):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,22 @@
+"""NUMA-aware attention kernels (Pallas TPU) + oracles.
+
+flash_attention  FA2 forward: mapping-parameterized grid (paper's technique)
+flash_attention_bwd  dQ / dK/dV kernels with the same grid-order choice
+decode_attention  flash-decode: one ACC per (batch, kv-head) grid cell
+ssd              Mamba-2 SSD intra-chunk kernel (head-first grid)
+ops              public jit'd API with impl dispatch + custom VJP
+ref              pure-jnp oracles for all of the above
+"""
+
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.flash_attention import (  # noqa: F401
+    BLOCK_FIRST,
+    HEAD_FIRST,
+    PAPER_MAPPINGS,
+    MappingConfig,
+    flash_attention_fwd,
+    hbm_block_fetches,
+)
+from repro.kernels.flash_attention_bwd import flash_attention_bwd  # noqa: F401
+from repro.kernels.decode_attention import flash_decode  # noqa: F401
+from repro.kernels.ssd import ssd_chunked_pallas, ssd_intra_chunk  # noqa: F401

@@ -1,0 +1,150 @@
+"""Flash-decode Pallas kernel: one new token against a long KV cache.
+
+Serving-shape companion of ``flash_attention.py`` (decode_32k / long_500k
+dry-run cells lower this). The ACC structure survives in decode: all query
+heads of a GQA group read the same KV cache, so the q-block of the kernel is
+the *whole group* — KV is fetched once per (batch, kv head) and the group
+dimension rides the MXU rows. Grid order is head-first by construction
+(one ACC per (b, hkv) grid cell), i.e. the paper's co-location applied to
+decode; there is no block-first analogue because a single token has one row
+block.
+
+Sequence lengths are dynamic (per-request): ``lengths`` rides in SMEM and
+gates both the masking and the chunk relevance test, so compute scales with
+the actual prefix length, not the cache capacity.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale, softcap, window, chunk, num_chunks, group_padded,
+):
+    n_idx = pl.program_id(2)
+    length = len_ref[0, 0]
+
+    @pl.when(n_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    chunk_start = n_idx * chunk
+    relevant = chunk_start < length
+    if window is not None and window > 0:
+        relevant &= chunk_start + chunk - 1 >= length - 1 - window + 1
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)  # (Gp, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (chunk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap is not None and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = chunk_start + jax.lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+        valid = pos < length
+        if window is not None and window > 0:
+            valid &= pos > length - 1 - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[:, 0:1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = jnp.broadcast_to(
+            l_ref[:, 0:1] * alpha + jnp.sum(p, axis=1, keepdims=True), l_ref.shape
+        )
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(n_idx == num_chunks - 1)
+    def _emit():
+        l = l_ref[:, 0:1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def flash_decode(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (B, Hq, D); caches: (B, Hkv, Smax, D); lengths: (B,) int32.
+
+    Returns (B, Hq, D). Smax must be a multiple of ``chunk`` (ops.py pads).
+    The GQA group dimension is padded to the sublane count inside.
+    """
+    b, hq, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / d**0.5
+    chunk = min(chunk, smax)
+    num_chunks = smax // chunk
+
+    gp = max(8, -(-group // 8) * 8)  # pad group to sublane multiple
+    qg = q.reshape(b, hkv, group, d)
+    if gp != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - group), (0, 0)))
+    lengths2d = lengths.reshape(b, 1).astype(jnp.int32)
+
+    fn = pl.pallas_call(
+        functools.partial(
+            _decode_kernel,
+            scale=scale, softcap=softcap, window=window,
+            chunk=chunk, num_chunks=num_chunks, group_padded=gp,
+        ),
+        grid=(b, hkv, num_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b_, h_, n_: (b_, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, gp, d), lambda b_, h_, n_: (b_, h_, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, n_: (b_, h_, n_, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda b_, h_, n_: (b_, h_, n_, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, gp, d), lambda b_, h_, n_: (b_, h_, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gp, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((gp, d), jnp.float32),
+            pltpu.VMEM((gp, 128), jnp.float32),
+            pltpu.VMEM((gp, 128), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.ARBITRARY,
+            ),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=int(4.0 * b * hq * smax * d),
+            bytes_accessed=int(
+                q.dtype.itemsize * b * (2 * hkv * smax * d + 2 * hq * d)
+            ),
+            transcendentals=int(b * hq * smax),
+        ),
+        interpret=interpret,
+        name="flash_decode",
+    )
+    out = fn(lengths2d, qg, k_cache, v_cache)
+    return out[:, :, :group, :].reshape(b, hq, d)

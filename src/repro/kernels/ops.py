@@ -1,0 +1,291 @@
+"""Public jit'd attention ops: impl dispatch, padding, custom VJP.
+
+Three implementations behind one API:
+
+  * ``pallas``    — the NUMA-aware Pallas kernels (flash_attention.py /
+                    flash_attention_bwd.py / decode_attention.py). Real
+                    Mosaic lowering on TPU; ``interpret=True`` elsewhere.
+  * ``xla_flash`` — chunked online-softmax in pure jnp (lax.scan over KV
+                    chunks). Differentiable, remat-friendly, O(S·chunk)
+                    memory. Used for the multi-pod dry-run (the CPU backend
+                    cannot lower Mosaic) and for CPU-hosted training smokes.
+  * ``xla_flash_tri`` — beyond-paper §Perf variant: causally-triangular
+                    unrolled chunking that skips above-diagonal work, halving
+                    attention HLO FLOPs on training shapes (see
+                    EXPERIMENTS.md §Perf).
+  * ``ref``       — exact attention (tests only).
+
+``impl='auto'`` picks pallas on TPU and xla_flash elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_mod
+from repro.kernels.decode_attention import flash_decode
+from repro.kernels.flash_attention import MappingConfig, flash_attention_fwd
+from repro.kernels.flash_attention_bwd import flash_attention_bwd
+
+DEFAULT_MAPPING = MappingConfig()
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# -----------------------------------------------------------------------------
+# Pallas path with custom VJP
+# -----------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _pallas_attention(q, k, v, causal, window, softcap, scale, mapping, interpret):
+    o, _ = flash_attention_fwd(
+        q, k, v, mapping=mapping, causal=causal, window=window,
+        softcap=softcap, scale=scale, interpret=interpret,
+    )
+    return o
+
+
+def _pallas_attention_fwd(q, k, v, causal, window, softcap, scale, mapping, interpret):
+    o, lse = flash_attention_fwd(
+        q, k, v, mapping=mapping, causal=causal, window=window,
+        softcap=softcap, scale=scale, interpret=interpret,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _pallas_attention_bwd(causal, window, softcap, scale, mapping, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, o, lse, do, mapping=mapping, causal=causal, window=window,
+        softcap=softcap, scale=scale, interpret=interpret,
+    )
+    return dq, dk, dv
+
+
+_pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
+
+
+# -----------------------------------------------------------------------------
+# XLA flash (scan over KV chunks) — dry-run / CPU path
+# -----------------------------------------------------------------------------
+
+
+def _xla_flash(q, k, v, *, causal, window, softcap, scale, kv_len, chunk=1024,
+               unroll=False):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    chunk = min(chunk, skv)
+    nc = -(-skv // chunk)
+    kp = _pad_to(k, 2, chunk).reshape(b, hkv, nc, chunk, d)
+    vp = _pad_to(v, 2, chunk).reshape(b, hkv, nc, chunk, d)
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    if scale is None:
+        scale = 1.0 / d**0.5
+    rows = jnp.arange(sq)[:, None]
+
+    def step(carry, xs):
+        m_prev, l_prev, acc = carry
+        kc, vc, off = xs
+        s = jnp.einsum(
+            "bhgqd,bhcd->bhgqc", qg, kc.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        ) * scale
+        if softcap is not None and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        cols = off + jnp.arange(chunk)[None, :]
+        mask = cols < kv_len
+        if causal:
+            mask &= cols <= rows
+        if window is not None and window > 0:
+            mask &= cols > rows - window
+        s = jnp.where(mask[None, None, None], s, ref_mod.NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask[None, None, None], jnp.exp(s - m_new), 0.0)
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum(
+            "bhgqc,bhcd->bhgqd", p, vc.astype(jnp.float32),
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((b, hkv, g, sq, 1), ref_mod.NEG_INF, jnp.float32),
+        jnp.zeros((b, hkv, g, sq, 1), jnp.float32),
+        jnp.zeros((b, hkv, g, sq, d), jnp.float32),
+    )
+    xs = (
+        jnp.moveaxis(kp, 2, 0),
+        jnp.moveaxis(vp, 2, 0),
+        jnp.arange(nc) * chunk,
+    )
+    (m_fin, l_fin, acc), _ = jax.lax.scan(step, init, xs,
+                                          unroll=nc if unroll else 1)
+    l_safe = jnp.where(l_fin == 0.0, 1.0, l_fin)
+    o = (acc / l_safe).reshape(b, hq, sq, d)
+    return o.astype(q.dtype)
+
+
+def _xla_flash_tri(q, k, v, *, causal, window, softcap, scale, kv_len, chunk=1024):
+    """Causal-triangular variant: q chunk i only attends kv[: (i+1)*chunk].
+
+    Unrolled over q chunks with per-iteration static shapes, so the
+    above-diagonal half of the score matrix is never built — the compiled
+    HLO carries ~half the attention FLOPs of the scan variant on causal
+    training shapes. Falls back to the scan variant when not causal or when
+    q/kv lengths differ (prefix-cache prefill).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if not causal or sq != skv or sq % chunk:
+        return _xla_flash(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, kv_len=kv_len, chunk=chunk,
+        )
+    nq = sq // chunk
+    outs = []
+    for i in range(nq):
+        qi = q[:, :, i * chunk : (i + 1) * chunk]
+        hi = (i + 1) * chunk
+        lo = 0
+        if window is not None and window > 0:
+            lo = max(0, (i * chunk - window + 1) // chunk * chunk)
+        ki = k[:, :, lo:hi]
+        vi = v[:, :, lo:hi]
+        # positions are absolute: shift rows by q_offset via kv_len masking
+        oi = _xla_flash_offset(
+            qi, ki, vi, abs_q=i * chunk, abs_k=lo, causal=True, window=window,
+            softcap=softcap, scale=scale, kv_len=min(kv_len, hi), chunk=chunk,
+        )
+        outs.append(oi)
+    return jnp.concatenate(outs, axis=2)
+
+
+def _xla_flash_offset(
+    q, k, v, *, abs_q, abs_k, causal, window, softcap, scale, kv_len, chunk
+):
+    """One (q-chunk x kv-prefix) tile with absolute position masking."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    if scale is None:
+        scale = 1.0 / d**0.5
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum(
+        "bhgqd,bhcd->bhgqc", qg, k.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    if softcap is not None and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    rows = abs_q + jnp.arange(sq)[:, None]
+    cols = abs_k + jnp.arange(skv)[None, :]
+    mask = cols < kv_len
+    if causal:
+        mask &= cols <= rows
+    if window is not None and window > 0:
+        mask &= cols > rows - window
+    s = jnp.where(mask[None, None, None], s, ref_mod.NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqc,bhcd->bhgqd", p / jnp.where(l == 0, 1, l),
+                   v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+# -----------------------------------------------------------------------------
+# Public API
+# -----------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    mapping: MappingConfig = DEFAULT_MAPPING,
+    impl: str = "auto",
+    chunk_unroll: bool = False,
+) -> jnp.ndarray:
+    """Multi-head / grouped-query attention. q: (B,Hq,Sq,D); k,v: (B,Hkv,Skv,D)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla_flash"
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    if impl == "ref":
+        return ref_mod.attention(
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+        )
+    if impl == "xla_flash":
+        return _xla_flash(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, kv_len=skv, unroll=chunk_unroll,
+        )
+    if impl == "xla_flash_tri":
+        return _xla_flash_tri(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, kv_len=skv,
+        )
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+
+    bm, bn = mapping.block_m, mapping.block_n
+    qp = _pad_to(q, 2, bm)
+    kp = _pad_to(k, 2, bn)
+    vp = _pad_to(v, 2, bn)
+    interpret = not _on_tpu()
+    o = _pallas_attention(
+        qp, kp, vp, causal, window, softcap, scale, mapping, interpret
+    )
+    return o[:, :, :sq]
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Single-token decode. q: (B,Hq,D); caches: (B,Hkv,Smax,D); lengths: (B,)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla" or impl == "ref":
+        return ref_mod.decode_attention(
+            q, k_cache, v_cache, lengths, softcap=softcap, scale=scale, window=window
+        )
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    smax = k_cache.shape[2]
+    chunk = 512 if smax % 512 == 0 else smax
+    return flash_decode(
+        q, k_cache, v_cache, lengths,
+        softcap=softcap, scale=scale, window=window, chunk=chunk,
+        interpret=not _on_tpu(),
+    )

@@ -1,0 +1,146 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth for the per-kernel allclose sweeps in
+``tests/test_flash_attention.py`` / ``tests/test_decode_attention.py``.
+They implement exact (non-flash) attention in float32 with all the mask /
+softcap / GQA variants the assigned architectures need. Gradients of the
+Pallas backward kernels are checked against ``jax.grad`` of these.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # large-but-finite: keeps fully-masked rows NaN-free
+
+
+def _expand_kv(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """(B, Hkv, S, D) -> (B, Hkv*group, S, D) by repetition (GQA)."""
+    if group == 1:
+        return x
+    b, hkv, s, d = x.shape
+    return jnp.repeat(x, group, axis=1)
+
+
+def attention_mask(
+    q_len: int,
+    kv_len: int,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """(q_len, kv_len) boolean mask. True = attend.
+
+    ``window``: sliding-window size W — position i attends to [i-W+1, i]
+    (Mistral/Gemma-style local attention). ``q_offset`` positions the query
+    block absolutely (decode: q_offset = kv_len - q_len).
+    """
+    rows = jnp.arange(q_len)[:, None] + q_offset
+    cols = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None and window > 0:
+        mask &= cols > rows - window
+    return mask
+
+
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Exact multi-head attention oracle.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+    Returns (B, Hq, Sq, D) in q.dtype; internals run in float32.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    k = _expand_kv(k, group)
+    v = _expand_kv(v, group)
+    if scale is None:
+        scale = 1.0 / d**0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal or window is not None:
+        mask = attention_mask(sq, skv, causal=causal, window=window, q_offset=q_offset)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / l, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def attention_lse(
+    q, k, v, *, causal=True, window=None, softcap=None, scale=None, q_offset=0
+) -> jnp.ndarray:
+    """Row logsumexp of the (scaled, capped, masked) logits — the auxiliary
+    output of the flash forward used by the backward pass. (B, Hq, Sq)."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    k = _expand_kv(k, hq // hkv)
+    if scale is None:
+        scale = 1.0 / d**0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    if causal or window is not None:
+        mask = attention_mask(sq, skv, causal=causal, window=window, q_offset=q_offset)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    return m + jnp.log(jnp.sum(jnp.exp(s - m[..., None]), axis=-1))
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Single-token decode oracle.
+
+    q: (B, Hq, D) — one new token per sequence;
+    k_cache/v_cache: (B, Hkv, Smax, D); lengths: (B,) valid prefix lengths
+    (the new token is at position lengths-1).
+    Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    group = hq // hkv
+    k = _expand_kv(k_cache, group)
+    v = _expand_kv(v_cache, group)
+    if scale is None:
+        scale = 1.0 / d**0.5
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(smax)[None, None, :]
+    valid = pos < lengths[:, None, None]
+    if window is not None and window > 0:
+        valid &= pos > (lengths[:, None, None] - 1 - window)
+    s = jnp.where(valid, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    o = jnp.einsum("bhk,bhkd->bhd", p / jnp.sum(p, axis=-1, keepdims=True),
+                   v.astype(jnp.float32))
+    return o.astype(q.dtype)

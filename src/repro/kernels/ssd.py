@@ -1,0 +1,177 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk block.
+
+The SSD hot spot is the intra-chunk quadratic: per (batch, chunk, head),
+   y_intra = ((C Bᵀ) ⊙ L) · (dt·x),     L_ij = exp(acum_i - acum_j)·[j<=i]
+   S_c     = (B ⊙ exp(acum_last - acum))ᵀ · (dt·x)
+— three (chunk × N × chunk/P) matmuls per grid cell, MXU-shaped, with the
+decay math fused in VMEM. The hymba/mamba prefill cells are memory-bound on
+exactly these tensors in the XLA path (EXPERIMENTS.md §Roofline); fusing the
+masked-decay epilogue removes the materialized (q × q) f32 intermediates.
+
+Grid order follows the paper's generalized insight: (batch, head, chunk) —
+all chunks of one head stream consecutively, so the per-head decay/state
+context stays resident, and the chunk axis is ARBITRARY (sequential) while
+batch/head are PARALLEL for megacore.
+
+The inter-chunk recurrence (O(L/q) scan) and output stitching remain in
+jnp — see ``ssd_chunked_pallas`` and ``models.ssm.ssd_chunked`` (the
+oracle); tests/test_ssd_kernel.py sweeps shapes x chunk sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_chunk_kernel(xdt_ref, bh_ref, ch_ref, acum_ref, y_ref, s_ref, *, chunk):
+    xdt = xdt_ref[0, 0, 0].astype(jnp.float32)   # (q, P)
+    bh = bh_ref[0, 0, 0].astype(jnp.float32)     # (q, N)
+    ch = ch_ref[0, 0, 0].astype(jnp.float32)     # (q, N)
+    ac = acum_ref[0, 0, 0].astype(jnp.float32)   # (q,)
+
+    cb = jax.lax.dot_general(
+        ch, bh, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                          # (q, q)
+    seg = ac[:, None] - ac[None, :]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    # Mask in log space BEFORE exp (above-diagonal seg > 0 overflows).
+    seg = jnp.where(cols <= rows, seg, NEG_INF)
+    y = jax.lax.dot_general(
+        cb * jnp.exp(seg), xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                          # (q, P)
+    dte = jnp.exp(ac[-1] - ac)                 # decay to chunk end
+    s = jax.lax.dot_general(
+        bh * dte[:, None], xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                          # (N, P)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    s_ref[0, 0, 0] = s.astype(s_ref.dtype)
+
+
+def ssd_intra_chunk(
+    xdt: jnp.ndarray,    # (B, nc, H, q, P) dt-scaled inputs
+    bh: jnp.ndarray,     # (B, nc, H, q, N)
+    ch: jnp.ndarray,     # (B, nc, H, q, N)
+    acum: jnp.ndarray,   # (B, nc, H, q) inclusive cumsum of dt*A
+    *,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y_intra (B,nc,H,q,P), chunk_states (B,nc,H,N,P))."""
+    b, nc, h, q, p = xdt.shape
+    n = bh.shape[-1]
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=q)
+    grid = (b, h, nc)  # head-first: chunks of one head stream consecutively
+
+    def xmap(b_, h_, c_):
+        return (b_, c_, h_, 0, 0)
+
+    def amap(b_, h_, c_):
+        return (b_, c_, h_, 0)
+
+    y, s = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), xmap),
+            pl.BlockSpec((1, 1, 1, q, n), xmap),
+            pl.BlockSpec((1, 1, 1, q, n), xmap),
+            pl.BlockSpec((1, 1, 1, q), amap),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), xmap),
+            pl.BlockSpec((1, 1, 1, n, p), xmap),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, h, q, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=(
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.PARALLEL,
+                pltpu.GridDimensionSemantics.ARBITRARY,
+            ),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=int(2.0 * b * nc * h * (q * q * n + q * q * p + q * n * p)),
+            bytes_accessed=int(4 * b * nc * h * q * (p + 2 * n + 1)),
+            transcendentals=int(b * nc * h * q * q),
+        ),
+        interpret=interpret,
+        name="ssd_intra_chunk",
+    )(xdt, bh, ch, acum)
+    return y, s
+
+
+def ssd_chunked_pallas(
+    x: jnp.ndarray,      # (B, L, H, P)
+    dt: jnp.ndarray,     # (B, L, H)
+    a: jnp.ndarray,      # (H,)
+    b_mat: jnp.ndarray,  # (B, L, G, N)
+    c_mat: jnp.ndarray,  # (B, L, G, N)
+    chunk: int,
+    h0: jnp.ndarray = None,
+    *,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-in for models.ssm.ssd_chunked with the intra-chunk block on the
+    Pallas kernel. Same padding/initial-state semantics."""
+    bsz, l, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    rep = h // g
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    l_pad = l + pad
+    nc = l_pad // q
+    f32 = jnp.float32
+
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    adt = dtc * a[None, None, None, :]
+    acum = jnp.cumsum(adt, axis=2)                      # (B,nc,q,H)
+    xdt = (x.reshape(bsz, nc, q, h, p).astype(f32) * dtc[..., None])
+    bh = jnp.repeat(b_mat.reshape(bsz, nc, q, g, n), rep, axis=3).astype(f32)
+    ch = jnp.repeat(c_mat.reshape(bsz, nc, q, g, n), rep, axis=3).astype(f32)
+
+    y_intra, s_c = ssd_intra_chunk(
+        xdt.transpose(0, 1, 3, 2, 4),                   # (B,nc,H,q,P)
+        bh.transpose(0, 1, 3, 2, 4),
+        ch.transpose(0, 1, 3, 2, 4),
+        acum.transpose(0, 1, 3, 2),                     # (B,nc,H,q)
+        interpret=interpret,
+    )
+    y_intra = y_intra.transpose(0, 1, 3, 2, 4)          # (B,nc,q,H,P)
+    s_c = s_c.transpose(0, 1, 2, 4, 3)                  # (B,nc,H,P,N)
+
+    # Inter-chunk recurrence + cross-chunk output term (cheap, stays in jnp).
+    last = acum[:, :, -1, :]                            # (B,nc,H)
+    chunk_decay = jnp.exp(last)
+
+    def step(hprev, inp):
+        dec, s = inp
+        return hprev * dec[:, :, None, None] + s, hprev
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), f32)
+    hT, h_in = jax.lax.scan(
+        step, h0.astype(f32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_c, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                     # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp", ch * jnp.exp(acum)[..., None], h_in)
+    y = (y_intra + y_inter).reshape(bsz, l_pad, h, p)[:, :l]
+    return y.astype(x.dtype), hT

@@ -1,0 +1,455 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each assigned architecture x input shape this builds the real step
+function (train_step / prefill / decode_step), with the production sharding
+rules, lowers it against ShapeDtypeStruct inputs (no allocation), compiles
+for the single-pod (16x16) and multi-pod (2x16x16) meshes, and records:
+
+  * memory_analysis()  — per-device argument/output/temp bytes (fits-check),
+  * cost_analysis()    — per-device FLOPs + bytes accessed,
+  * collective bytes   — parsed from the compiled HLO (hlo_analysis.py),
+  * roofline terms     — compute / memory / collective seconds + dominant.
+
+Artifacts land in artifacts/dryrun/<arch>__<shape>__<mesh>.json and feed
+benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --all
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import InputShape, ModelConfig
+from repro.distributed import sharding as shlib
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.optim import adamw
+from repro.training import train_step as ts_lib
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "artifacts", "dryrun")
+
+
+# -----------------------------------------------------------------------------
+# Abstract inputs
+# -----------------------------------------------------------------------------
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    sh = NamedSharding(mesh, spec) if mesh is not None and spec is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def input_specs(arch: str, shape: InputShape, mesh: Optional[Mesh] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    cfg = registry.get_config(arch)
+    b, s = shape.global_batch, shape.seq_len
+    bspec = shlib.batch_spec(mesh, b) if mesh is not None else None
+    bax = (bspec[0] if mesh is not None and len(bspec) else None)
+    tok_shape = (b, s) if cfg.num_codebooks == 1 else (b, s, cfg.num_codebooks)
+    tok_spec = P(bax, *([None] * (len(tok_shape) - 1))) if mesh is not None else None
+
+    if shape.step == "train":
+        out = {
+            "tokens": _sds(tok_shape, jnp.int32, mesh, tok_spec),
+            "targets": _sds(tok_shape, jnp.int32, mesh, tok_spec),
+            "mask": _sds((b, s), jnp.float32, mesh, P(bax, None) if mesh else None),
+        }
+        if cfg.vision_tokens:
+            out["image_embeds"] = _sds(
+                (b, cfg.vision_tokens, cfg.vision_dim), jnp.bfloat16,
+                mesh, P(bax, None, None) if mesh else None,
+            )
+        return out
+    if shape.step == "prefill":
+        out = {"tokens": _sds(tok_shape, jnp.int32, mesh, tok_spec)}
+        if cfg.vision_tokens:
+            out["image_embeds"] = _sds(
+                (b, cfg.vision_tokens, cfg.vision_dim), jnp.bfloat16,
+                mesh, P(bax, None, None) if mesh else None,
+            )
+        return out
+    # decode: one new token against a seq_len cache
+    tshape = (b,) if cfg.num_codebooks == 1 else (b, cfg.num_codebooks)
+    out = {
+        "token": _sds(tshape, jnp.int32, mesh, P(bax, *([None] * (len(tshape) - 1))) if mesh else None),
+        "lengths": _sds((b,), jnp.int32, mesh, P(bax) if mesh else None),
+    }
+    return out
+
+
+def _abstract_params(cfg: ModelConfig, dtype=None):
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_model(k, cfg), jax.random.PRNGKey(0)
+    )
+    if dtype is None:
+        return shapes
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, dtype if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype
+        ),
+        shapes,
+    )
+
+
+def _serve_param_specs(params_shape, mesh: Mesh):
+    """2-D fully-sharded serving weights: big matrices over (data, model).
+
+    Required for llama3-405b-class models at inference (811 GB bf16 cannot
+    live on a 16-way model axis alone); smaller models also benefit from the
+    extra HBM headroom. Expert tensors keep experts on "model" and shard the
+    expert-ff dim on "data"."""
+    both = ("data", "model")
+
+    def spec(path, leaf):
+        base = shlib.spec_for_path(path, leaf)
+        rank = leaf.ndim
+        key = ""
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                key = str(entry.key)
+                break
+        if key.endswith("_edm"):
+            base = shlib._right_align(("model", None, "data"), rank)
+        elif key.endswith("_emd"):
+            base = shlib._right_align(("model", "data", None), rank)
+        elif key.endswith("_dm"):
+            base = shlib._right_align((None, both), rank)
+        elif key.endswith(("_md", "_vd")):
+            base = shlib._right_align((both, None), rank)
+        elif key.endswith("_kvd"):
+            base = shlib._right_align((None, both, None), rank)
+        return shlib.fix_spec(base, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# -----------------------------------------------------------------------------
+# Step builders: (fn, example_args (SDS w/ shardings), donate_argnums)
+# -----------------------------------------------------------------------------
+
+
+def _data_shards(mesh: Mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            n *= mesh.shape[a]
+    return n
+
+
+#: keys build_cell understands in ``overrides`` (the Perf hillclimb levers):
+#:   attn_impl        xla_flash | xla_flash_tri
+#:   microbatches     int
+#:   remat_policy     nothing | dots
+#:   head_placement   acc_aligned | striped (paper-technique A/B)
+#:   moment_dtype     float32 | bfloat16 (optimizer HBM)
+#:   serve_sharding   2d | model_only (inference weight layout)
+def build_cell(arch: str, shape: InputShape, mesh: Mesh,
+               cfg: Optional[ModelConfig] = None, attn_impl: str = "xla_flash",
+               microbatches: Optional[int] = None,
+               overrides: Optional[Dict[str, Any]] = None):
+    ov = dict(overrides or {})
+    if cfg is None:
+        cfg = registry.get_config(arch)
+    # Dry-run lowers the XLA flash path (Mosaic does not target host CPU);
+    # the Pallas kernels carry their own cost model and are exercised by the
+    # kernel test suite.
+    cfg = dataclasses.replace(
+        cfg,
+        attn_impl=ov.get("attn_impl", attn_impl),
+        remat_policy=ov.get("remat_policy", cfg.remat_policy),
+        head_placement=ov.get("head_placement", cfg.head_placement),
+    )
+    microbatches = ov.get("microbatches", microbatches)
+    shard_moe = shlib.shard_moe_buffers(mesh, ov.get("moe_sharding", "ep"))
+    batch = input_specs(arch, shape, mesh)
+
+    if shape.step == "train":
+        # Microbatch so each accumulation step carries ~2 sequences per data
+        # shard — decouples the 256-sequence global batch from HBM.
+        if microbatches is None:
+            per_shard = max(1, shape.global_batch // _data_shards(mesh))
+            microbatches = max(1, per_shard // 2)
+        tcfg = ts_lib.TrainConfig(
+            optimizer=adamw.AdamWConfig(
+                moment_dtype=ov.get("moment_dtype", "float32")
+            ),
+            microbatches=microbatches,
+            remat=True,
+        )
+        params_shape = _abstract_params(cfg)
+        state_shape = {
+            "params": params_shape,
+            "opt": jax.eval_shape(lambda p: adamw.init(p, tcfg.optimizer),
+                                  params_shape),
+        }
+        if ov.get("train_sharding") == "2d":
+            # FSDP/ZeRO-3 posture: parameters AND optimizer moments sharded
+            # over (data x model); XLA all-gathers weights per layer.
+            state_specs = _serve_param_specs(state_shape, mesh)
+        else:
+            state_specs = shlib.param_specs(state_shape, mesh)
+        state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
+        state_sds = jax.tree.map(
+            lambda x, sh: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh),
+            state_shape, state_sh,
+        )
+        step = ts_lib.make_train_step(cfg, tcfg, shard_moe=shard_moe)
+        fn = jax.jit(step, donate_argnums=(0,))
+        return fn, (state_sds, batch), cfg
+
+    params_shape = _abstract_params(cfg, jnp.bfloat16)
+    if ov.get("serve_sharding", "2d") == "model_only":
+        pspecs = shlib.param_specs(params_shape, mesh)
+    else:
+        pspecs = _serve_param_specs(params_shape, mesh)
+    params_sds = jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s)),
+        params_shape, pspecs,
+    )
+
+    if shape.step == "prefill":
+        def prefill_fn(params, batch_):
+            return transformer.prefill(
+                params, cfg, batch_["tokens"], cache_len=shape.seq_len,
+                image_embeds=batch_.get("image_embeds"), shard_moe=shard_moe,
+            )
+        fn = jax.jit(prefill_fn)
+        return fn, (params_sds, batch), cfg
+
+    # decode
+    shard_seq = shape.name == "long_500k"
+    caches_shape = jax.eval_shape(
+        lambda: transformer.init_caches(
+            None, cfg, shape.global_batch, shape.seq_len,
+            image_len=cfg.vision_tokens or 0,
+        )
+    )
+    cspecs = shlib.cache_specs(cfg, mesh, caches_shape, shard_seq=shard_seq,
+                               global_batch=shape.global_batch)
+    caches_sds = jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=NamedSharding(mesh, s)),
+        caches_shape, cspecs,
+    )
+
+    def decode_fn(params, token, caches, lengths):
+        return transformer.decode_step(
+            params, cfg, token, caches, lengths, shard_moe=shard_moe
+        )
+
+    fn = jax.jit(decode_fn, donate_argnums=(2,))
+    return fn, (params_sds, batch["token"], caches_sds, batch["lengths"]), cfg
+
+
+# -----------------------------------------------------------------------------
+# Roofline bookkeeping
+# -----------------------------------------------------------------------------
+
+
+def _cell_costs(arch, shape, mesh, cfg, *, attn_impl="xla_flash", microbatches=None,
+                overrides=None):
+    """(flops, bytes_accessed, collective_bytes) per device for one config."""
+    fn, args, _ = build_cell(arch, shape, mesh, cfg=cfg, attn_impl=attn_impl,
+                             microbatches=microbatches, overrides=overrides)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+    ca = compiled.cost_analysis() or {}
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    return (
+        float(ca.get("flops", 0.0)),
+        float(ca.get("bytes accessed", 0.0)),
+        float(coll["total"]),
+    )
+
+
+def probe_corrected_costs(arch: str, shape: InputShape, mesh: Mesh,
+                          *, attn_impl="xla_flash", microbatches=None,
+                          overrides=None):
+    """Depth-probe correction for XLA's count-while-body-once cost analysis.
+
+    ``lax.scan`` over layer periods compiles to a while loop whose body the
+    HLO cost model counts ONCE (verified experimentally), so the real cell's
+    flops/bytes are undercounted by ~n_periods. We compile two shallow
+    *unrolled* variants — 1 period and 2 periods (scan_unroll = trip count,
+    so no while loop remains) — and extrapolate linearly in depth:
+
+        cost(L) = cost_1p + (cost_2p - cost_1p) * (L - P) / P
+
+    which is exact for per-layer-homogeneous stacks (all of ours are, within
+    a period) and includes the depth-independent base (embedding, vocab head,
+    loss) via the intercept.
+    """
+    base_cfg = registry.get_config(arch)
+    plen = len(base_cfg.layer_pattern)
+    # attn_chunk_unroll: the xla_flash KV-chunk scan is an inner while loop
+    # that cost analysis would also count once — unroll it in the probes.
+    cfg1 = dataclasses.replace(base_cfg, n_layers=plen, scan_unroll=1,
+                               attn_chunk_unroll=True)
+    cfg2 = dataclasses.replace(base_cfg, n_layers=2 * plen, scan_unroll=2,
+                               attn_chunk_unroll=True)
+    # microbatches=1: the grad-accumulation scan is ALSO a while loop that
+    # the cost model counts once. Total flops/collectives are microbatch-
+    # invariant, so the unaccumulated probe measures them exactly (weight
+    # re-reads across microbatches are the one term this under-counts).
+    ov = dict(overrides or {})
+    ov["microbatches"] = 1
+    c1 = _cell_costs(arch, shape, mesh, cfg1, attn_impl=attn_impl, overrides=ov)
+    c2 = _cell_costs(arch, shape, mesh, cfg2, attn_impl=attn_impl, overrides=ov)
+    L = base_cfg.n_layers
+    return tuple(a + (b - a) * (L - plen) / plen for a, b in zip(c1, c2))
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape, num_devices: int) -> float:
+    """6*N_active*D (train) / 2*N_active*D (inference), per device."""
+    n = cfg.active_param_count()
+    if shape.step == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n * tokens
+    elif shape.step == "prefill":
+        total = 2.0 * n * shape.global_batch * shape.seq_len
+    else:
+        total = 2.0 * n * shape.global_batch
+    return total / num_devices
+
+
+def run_cell(arch: str, shape: InputShape, mesh_kind: str, out_dir: str,
+             overrides: Optional[Dict[str, Any]] = None,
+             tag: Optional[str] = None) -> Dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    num_devices = int(np.prod(list(mesh.shape.values())))
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape.name, "step": shape.step,
+        "mesh": mesh_kind, "devices": num_devices, "ok": False,
+        "overrides": overrides or {},
+    }
+    t0 = time.time()
+    try:
+        fn, args, cfg = build_cell(arch, shape, mesh, overrides=overrides)
+        with mesh:
+            lowered = fn.lower(*args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+            ),
+        }
+        ca = compiled.cost_analysis() or {}
+        flops = float(ca.get("flops", 0.0))
+        bytes_accessed = float(ca.get("bytes accessed", 0.0))
+        rec["cost_raw"] = {
+            "flops": flops, "bytes_accessed": bytes_accessed,
+            "note": "while(scan) bodies counted once by XLA — see cost",
+        }
+        coll = hlo_analysis.collective_bytes(compiled.as_text())
+        # HLO is SPMD: one program per device => bytes are per-device.
+        rec["collectives_raw"] = coll
+        # Depth-probe corrected costs (scan bodies re-multiplied by depth).
+        t2 = time.time()
+        cflops, cbytes, ccoll = probe_corrected_costs(arch, shape, mesh,
+                                                       overrides=overrides)
+        # Floor at the raw (counted-once) measurement: extrapolation noise
+        # between the two probe compiles must never go below it.
+        cflops = max(cflops, flops)
+        cbytes = max(cbytes, bytes_accessed)
+        ccoll = max(ccoll, float(coll["total"]))
+        rec["probe_s"] = round(time.time() - t2, 1)
+        rec["cost"] = {"flops": cflops, "bytes_accessed": cbytes,
+                       "collective_bytes": ccoll}
+        terms = hlo_analysis.roofline_terms(cflops, cbytes, ccoll)
+        mf = model_flops(cfg, shape, num_devices)
+        terms["model_flops"] = mf
+        terms["useful_flops_ratio"] = (mf / cflops) if cflops else 0.0
+        rec["roofline"] = terms
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    os.makedirs(out_dir, exist_ok=True)
+    stem = f"{arch}__{shape.name}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, stem + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACT_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = registry.all_cells()
+    if args.list:
+        for a, s in cells:
+            print(f"{a:24s} {s.name}")
+        return
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s.name == args.shape]
+    if not cells:
+        raise SystemExit("no cells selected")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_ok = n_fail = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            path = os.path.join(args.out, f"{arch}__{shape.name}__{mk}.json")
+            if args.skip_existing and os.path.exists(path):
+                rec = json.load(open(path))
+                if rec.get("ok"):
+                    print(f"SKIP  {arch:24s} {shape.name:12s} {mk}")
+                    n_ok += 1
+                    continue
+            rec = run_cell(arch, shape, mk, args.out)
+            if rec["ok"]:
+                n_ok += 1
+                r = rec["roofline"]
+                print(
+                    f"OK    {arch:24s} {shape.name:12s} {mk:6s} "
+                    f"compile={rec['compile_s']:.0f}s "
+                    f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB/dev "
+                    f"compute={r['compute_s']*1e3:.1f}ms mem={r['memory_s']*1e3:.1f}ms "
+                    f"coll={r['collective_s']*1e3:.1f}ms dom={r['dominant']}"
+                )
+            else:
+                n_fail += 1
+                print(f"FAIL  {arch:24s} {shape.name:12s} {mk:6s} {rec['error']}")
+    print(f"\n{n_ok} ok, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Post-compile HLO introspection: collective bytes, roofline terms.
+
+``cost_analysis()`` gives per-device FLOPs and memory-traffic bytes but no
+collective breakdown, so collective bytes are extracted from the compiled
+HLO text: for every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op we sum the result-shape bytes (operand-size proxy; for
+all-reduce in==out, for all-gather it is the post-gather size — the wire
+cost upper bound on a ring).
+
+Roofline terms (per step, per chip — TPU v5e constants from the brief):
+    compute    = flops / PEAK_FLOPS
+    memory     = bytes_accessed / HBM_BW
+    collective = collective_bytes / LINK_BW
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / ICI link
+
+COLLECTIVE_OPS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(sig: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind + grand total."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        lhs, rhs = stripped.split("=", 1)
+        rhs = rhs.strip()
+        for op in COLLECTIVE_OPS:
+            # match ' op(' or ' op-start(' after the result signature
+            m = re.match(rf"((?:\([^)]*\))|(?:\w+\[[\d,]*\]\S*))\s+{op}(?:-start)?\(", rhs)
+            if m:
+                out[op] += _shape_bytes(m.group(1))
+                break
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+def roofline_terms(
+    flops: float, bytes_accessed: float, coll_bytes: float
+) -> Dict[str, float]:
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": coll_bytes / LINK_BW,
+    }
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom.replace("_s", "")
+    terms["bound_s"] = terms[dom]
+    return terms

@@ -1,0 +1,31 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod v5e-256 is (data=16, model=16); multi-pod is
+(pod=2, data=16, model=16) = 512 chips, with the pod axis carrying pure DP.
+
+The model axis size 16 divides (or is divided by) every assigned arch's KV
+head count under ACC-aligned placement (core/placement.py); elastic.py picks
+alternative shapes for other chip counts.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever this host offers (tests / examples): (data=N, model=1)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (n, 1), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
+    )

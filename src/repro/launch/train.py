@@ -1,0 +1,103 @@
+"""Training launcher.
+
+Runs the fault-tolerant trainer on whatever devices this host exposes (the
+production meshes come from ``mesh.make_production_mesh``; on a dev box the
+host mesh is used). Sharding, checkpointing, resume, and the data pipeline
+are the same code paths the dry-run lowers for 512 chips.
+
+Examples:
+  python -m repro.launch.train --arch llama3-8b --smoke --steps 200 \
+      --seq-len 256 --global-batch 16 --ckpt-dir /tmp/run1
+  python -m repro.launch.train --arch mixtral-8x7b --smoke --steps 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.distributed import sharding as shlib
+from repro.launch.mesh import make_host_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.training.train_step import TrainConfig, init_train_state, make_train_step
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8_ef"])
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO, format="%(message)s")
+    cfg = (registry.get_smoke_config if args.smoke else registry.get_config)(args.arch)
+    mesh = make_host_mesh()
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=args.lr, warmup_steps=args.warmup,
+                              total_steps=args.steps),
+        microbatches=args.microbatches,
+        grad_compression=args.grad_compression,
+    )
+    state = init_train_state(jax.random.PRNGKey(args.seed), cfg, tcfg)
+    state_sh = shlib.param_shardings(mesh, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+    state = jax.tree.map(jax.device_put, state, state_sh)
+
+    with mesh:
+        step_fn = jax.jit(
+            make_train_step(cfg, tcfg,
+                            shard_moe=shlib.shard_moe_buffers(mesh, "ep_dp")),
+            donate_argnums=(0,),
+        )
+        dcfg = DataConfig(
+            seq_len=args.seq_len, global_batch=args.global_batch,
+            seed=args.seed, vocab=cfg.vocab, num_codebooks=cfg.num_codebooks,
+        )
+        pipe = make_pipeline(dcfg)
+        bspec = shlib.batch_spec(mesh, args.global_batch)
+
+        def put(b):
+            out = {}
+            for k, v in b.items():
+                spec = shlib.fix_spec(
+                    jax.sharding.PartitionSpec(
+                        bspec[0] if len(bspec) else None,
+                        *([None] * (v.ndim - 1))),
+                    v.shape, mesh)
+                out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+            return out
+
+        trainer = Trainer(
+            step_fn, state, pipe,
+            TrainerConfig(
+                total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                ckpt_every=args.ckpt_every, log_every=args.log_every,
+            ),
+            put_batch=put,
+        )
+        trainer.try_resume()
+        metrics = trainer.run()
+    print("final metrics:", {k: round(v, 4) for k, v in metrics.items()})
+
+
+if __name__ == "__main__":
+    main()

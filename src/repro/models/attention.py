@@ -1,0 +1,187 @@
+"""Attention blocks: GQA self-attention, cross-attention, decode paths.
+
+The kernel-facing layer of the model stack. The paper's technique enters in
+two ways:
+  * the ``mapping`` handed to ``kernels.ops.flash_attention`` (grid order /
+    KV residency / megacore semantics),
+  * head layout: q/k/v projections emit heads in ACC-contiguous order so the
+    model-axis shard boundaries coincide with KV groups
+    (``core.placement.ACC_ALIGNED``) — KV is never duplicated across shards.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.kernels import ops
+from repro.kernels.flash_attention import PAPER_MAPPINGS, MappingConfig
+from repro.models import layers
+
+
+def init_attention(key, cfg: ModelConfig) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(h * hd)
+    p = {
+        "wq_dm": jax.random.normal(ks[0], (d, h * hd), layers.default_dtype()) * s,
+        "wk_dm": jax.random.normal(ks[1], (d, hkv * hd), layers.default_dtype()) * s,
+        "wv_dm": jax.random.normal(ks[2], (d, hkv * hd), layers.default_dtype()) * s,
+        "wo_md": jax.random.normal(ks[3], (h * hd, d), layers.default_dtype()) * so,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = layers.init_rmsnorm(hd)
+        p["k_norm"] = layers.init_rmsnorm(hd)
+    return p
+
+
+def _mapping(cfg: ModelConfig) -> MappingConfig:
+    return PAPER_MAPPINGS[cfg.mapping_name]
+
+
+def _project_qkv(params, x, cfg: ModelConfig, positions, rope_theta, kv_x=None,
+                 rope: bool = True):
+    """x: (B, S, D) -> q (B,H,S,hd), k/v (B,Hkv,Skv,hd)."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    skv = src.shape[1]
+    q = (x @ params["wq_dm"].astype(x.dtype)).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (src @ params["wk_dm"].astype(x.dtype)).reshape(b, skv, hkv, hd).transpose(0, 2, 1, 3)
+    v = (src @ params["wv_dm"].astype(x.dtype)).reshape(b, skv, hkv, hd).transpose(0, 2, 1, 3)
+    if cfg.head_placement == "striped":
+        # Naive round-robin head placement (paper baseline): the physical
+        # head order emitted by the (sharded) projections is striped across
+        # model shards, so regrouping into logical ACC order moves Q and K/V
+        # across shards — the pod-scale analogue of the fragmented L2. The
+        # permutation gathers land as collectives in the compiled HLO;
+        # benchmarks/roofline A/Bs this against acc_aligned.
+        from repro.core import placement as placement_lib
+
+        plan = placement_lib.plan(
+            h, hkv, cfg.placement_shards, placement_lib.STRIPED
+        )
+        q = jnp.take(q, jnp.asarray(plan.q_perm), axis=1)
+        k = jnp.take(k, jnp.asarray(plan.kv_perm), axis=1)
+        v = jnp.take(v, jnp.asarray(plan.kv_perm), axis=1)
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q)
+        k = layers.rmsnorm(params["k_norm"], k)
+    if rope:
+        q = layers.apply_rotary(q, positions, rope_theta)
+        k = layers.apply_rotary(k, positions, rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    params: dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    spec: LayerSpec,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    encoder_states: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Full-sequence self- (or cross-) attention. x: (B, S, D)."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    cross = spec.cross_attn and encoder_states is not None
+    q, k, v = _project_qkv(
+        params, x, cfg, positions, spec.rope_theta,
+        kv_x=encoder_states if cross else None,
+        rope=not cross,
+    )
+    o = ops.flash_attention(
+        q, k, v,
+        causal=not cross,
+        window=None if cross else spec.window,
+        softcap=cfg.attn_softcap,
+        mapping=_mapping(cfg),
+        impl=cfg.attn_impl,
+        chunk_unroll=cfg.attn_chunk_unroll,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    return o @ params["wo_md"].astype(x.dtype)
+
+
+def attention_prefill(
+    params, x, cfg: ModelConfig, spec: LayerSpec, *, cache_len: int,
+    positions=None, encoder_states=None,
+) -> Tuple[jnp.ndarray, dict]:
+    """Like attention_block but also returns the populated KV cache
+    (padded to ``cache_len``) for subsequent decode steps."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    cross = spec.cross_attn and encoder_states is not None
+    q, k, v = _project_qkv(
+        params, x, cfg, positions, spec.rope_theta,
+        kv_x=encoder_states if cross else None, rope=not cross,
+    )
+    o = ops.flash_attention(
+        q, k, v, causal=not cross, window=None if cross else spec.window,
+        softcap=cfg.attn_softcap, mapping=_mapping(cfg), impl=cfg.attn_impl,
+        chunk_unroll=cfg.attn_chunk_unroll,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    pad = cache_len - k.shape[2]
+    cache = {
+        "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+        "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))),
+    }
+    return o @ params["wo_md"].astype(x.dtype), cache
+
+
+def attention_decode(
+    params, x, cfg: ModelConfig, spec: LayerSpec, cache: dict, lengths: jnp.ndarray,
+    *, is_cross: bool = False,
+) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode. x: (B, 1, D); cache k/v: (B, Hkv, Smax, hd);
+    lengths: (B,) prefix length *including* the new token. ``is_cross``:
+    the cache holds static encoder (image) K/V — read-only."""
+    b, _, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if is_cross:
+        # Cross-attn KV is static (image tokens): cache holds it untouched.
+        q = (x @ params["wq_dm"].astype(x.dtype)).reshape(b, 1, h, hd).transpose(0, 2, 1, 3)
+        if cfg.qk_norm:
+            q = layers.rmsnorm(params["q_norm"], q)
+        kv_len = jnp.full((b,), cache["k"].shape[2], jnp.int32)
+        o = ops.decode_attention(
+            q[:, :, 0], cache["k"], cache["v"], kv_len,
+            softcap=cfg.attn_softcap, impl=cfg.attn_impl if cfg.attn_impl != "xla_flash" else "xla",
+        )
+        o = o.reshape(b, 1, h * hd)
+        return o @ params["wo_md"].astype(x.dtype), cache
+
+    positions = (lengths - 1)[:, None]  # (B, 1) absolute position of new token
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions, spec.rope_theta)
+    # In-place row write at position lengths-1 (donated cache buffers alias).
+    idx = lengths - 1
+
+    def _write(c, new, i):
+        return jax.lax.dynamic_update_slice(c, new, (0, i, 0))
+
+    k = jax.vmap(_write)(cache["k"], k_new, idx)
+    v = jax.vmap(_write)(cache["v"], v_new, idx)
+    impl = cfg.attn_impl if cfg.attn_impl not in ("xla_flash", "xla_flash_tri") else "xla"
+    o = ops.decode_attention(
+        q[:, :, 0], k, v, lengths,
+        softcap=cfg.attn_softcap, window=spec.window, impl=impl,
+    )
+    o = o.reshape(b, 1, h * hd)
+    return o @ params["wo_md"].astype(x.dtype), {"k": k, "v": v}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, hkv, cache_len, hd), dtype),
+        "v": jnp.zeros((batch, hkv, cache_len, hd), dtype),
+    }

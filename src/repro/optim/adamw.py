@@ -1,0 +1,111 @@
+"""AdamW with decoupled weight decay, global-norm clipping, cosine schedule.
+
+Self-contained (no optax in this environment). Optimizer state mirrors the
+parameter tree, so parameter PartitionSpecs apply verbatim to both moments —
+ZeRO-style sharded optimizer state falls out of the same sharding rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    # Moment storage dtype. bf16 moments cut optimizer HBM by half — the
+    # lever that fits llama3-405b training on a single v5e-256 pod (see
+    # EXPERIMENTS.md §Perf); updates are still computed in f32.
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def init(params, cfg: "AdamWConfig" = None) -> OptState:
+    dt = jnp.dtype(cfg.moment_dtype) if cfg is not None else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dtype=dt)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def schedule(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def _decayable(path) -> bool:
+    """No decay on norms / scalars / 1-D vectors (biases, gates)."""
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            k = str(entry.key)
+            return not (k.endswith("_r") or "norm" in k or k.startswith("ln"))
+    return True
+
+
+def update(
+    cfg: AdamWConfig, params, grads, state: OptState
+) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = cfg.betas
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, mu, nu):
+        mdt = mu.dtype
+        g = g.astype(jnp.float32) * clip
+        mu = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu = b2 * nu.astype(jnp.float32) + (1 - b2) * g * g
+        step_dir = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if _decayable(path):
+            step_dir = step_dir + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype)
+        return new_p, mu.astype(mdt), nu.astype(mdt)
+
+    paths_and_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    g_leaves = treedef.flatten_up_to(grads)
+    mu_leaves = treedef.flatten_up_to(state.mu)
+    nu_leaves = treedef.flatten_up_to(state.nu)
+    new_p, new_m, new_n = [], [], []
+    for (path, p), g, mu, nu in zip(paths_and_p, g_leaves, mu_leaves, nu_leaves):
+        p2, m2, n2 = upd(path, p, g, mu, nu)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_n.append(n2)
+    new_params = jax.tree_util.tree_unflatten(treedef, new_p)
+    new_mu = jax.tree_util.tree_unflatten(treedef, new_m)
+    new_nu = jax.tree_util.tree_unflatten(treedef, new_n)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step=step, mu=new_mu, nu=new_nu), metrics

@@ -1,0 +1,95 @@
+"""Gradient compression for cross-replica reduction: int8 + error feedback.
+
+At 1000+ nodes the data-parallel gradient all-reduce dominates the step's
+collective bytes. This module provides:
+
+  * ``quantize`` / ``dequantize`` — blockwise symmetric int8 with per-block
+    f32 scales (4x compression on the wire),
+  * ``ErrorFeedback`` — residual accumulator so quantization error is
+    re-injected next step (EF-SGD; keeps convergence),
+  * ``compressed_psum`` — a shard_map-compatible reduction: quantize ->
+    psum int32 accumulation of int8 payloads -> dequantize with max-scale.
+    Under plain pjit the all-reduce is XLA-inserted and cannot be re-typed,
+    so compression must be explicit: train_step exposes
+    ``grad_compression="int8"`` which reduces DP gradients through this path
+    inside a shard_map over the data axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 2048
+
+
+class Compressed(NamedTuple):
+    q: jnp.ndarray       # int8 payload, shape = padded flat
+    scale: jnp.ndarray   # f32 per-block scales
+
+
+def quantize(x: jnp.ndarray, block: int = BLOCK) -> Compressed:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Compressed(q=q, scale=scale[:, 0])
+
+
+def dequantize(c: Compressed, shape, dtype=jnp.float32) -> jnp.ndarray:
+    flat = (c.q.astype(jnp.float32) * c.scale[:, None]).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any  # tree like grads
+
+
+def init_error_feedback(grads_shape) -> ErrorFeedback:
+    return ErrorFeedback(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_shape)
+    )
+
+
+def compress_with_feedback(
+    grads, ef: ErrorFeedback
+) -> Tuple[Any, ErrorFeedback]:
+    """Quantize (grad + residual); stash the new residual. Returns the
+    dequantized tree (what the wire would deliver) + updated feedback."""
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        c = quantize(target)
+        deq = dequantize(c, g.shape)
+        return deq.astype(g.dtype), target - deq
+
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    r_leaves = treedef.flatten_up_to(ef.residual)
+    outs = [one(g, r) for g, r in zip(g_leaves, r_leaves)]
+    deq = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    res = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return deq, ErrorFeedback(residual=res)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Inside shard_map: reduce ``x`` over ``axis_name`` with an int8 wire
+    format. Payload rides as int32 (psum-able); scales reduce by max."""
+    c = quantize(x)
+    scale_max = jax.lax.pmax(c.scale, axis_name)
+    # Re-quantize against the shared scale so the integer sum is coherent.
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    blocks = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    q = jnp.clip(jnp.round(blocks / scale_max[:, None]), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.int32), axis_name)
+    deq = (total.astype(jnp.float32) * scale_max[:, None] / n.astype(jnp.float32))
+    return deq.reshape(-1)[: flat.size].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,153 @@
+"""The jitted training step: loss, grads, microbatching, optimizer, sharding.
+
+Built for the production mesh:
+  * donated (params, opt_state) — in-place buffers at 405B scale,
+  * microbatch gradient accumulation (``lax.scan``) so global batch is
+    decoupled from per-device memory; the scan also naturally overlaps the
+    DP reduce-scatter of microbatch k with the backward of k+1 under XLA
+    latency hiding,
+  * remat policy on the scanned layer body (set in transformer.forward),
+  * optional int8 gradient compression with error feedback
+    (optim/grad_compress.py) on the explicitly-reduced path,
+  * MoE aux losses folded with configurable coefficients.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, transformer
+from repro.optim import adamw, grad_compress
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatches: int = 1
+    moe_lb_coef: float = 0.01
+    moe_z_coef: float = 1e-3
+    remat: bool = True
+    grad_compression: str = "none"   # "none" | "int8_ef"
+
+
+def loss_fn(
+    params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+    *, tcfg: TrainConfig, shard_moe=lambda t: t,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = transformer.forward(
+        params, cfg, batch["tokens"],
+        image_embeds=batch.get("image_embeds"),
+        remat=tcfg.remat, shard_moe=shard_moe,
+    )
+    if cfg.num_codebooks > 1:
+        # logits (B,S,K,V); targets (B,S,K)
+        loss, metrics = layers.softmax_cross_entropy(
+            logits, batch["targets"],
+            batch["mask"][..., None] * jnp.ones_like(batch["targets"], jnp.float32),
+            z_loss=cfg.z_loss,
+        )
+    else:
+        loss, metrics = layers.softmax_cross_entropy(
+            logits, batch["targets"], batch["mask"], z_loss=cfg.z_loss,
+        )
+    total = (
+        loss
+        + tcfg.moe_lb_coef * aux["moe_lb_loss"]
+        + tcfg.moe_z_coef * aux["moe_z_loss"]
+    )
+    metrics = dict(metrics)
+    metrics.update(
+        moe_lb_loss=aux["moe_lb_loss"], moe_dropped=aux["moe_dropped_frac"]
+    )
+    return total, metrics
+
+
+def _accumulate_grads(params, cfg, batch, tcfg: TrainConfig, shard_moe):
+    """Microbatch scan: mean of grads/metrics over tcfg.microbatches splits."""
+    n = tcfg.microbatches
+    if n == 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch, tcfg=tcfg, shard_moe=shard_moe
+        )
+        return grads, loss, metrics
+
+    def split(x):
+        # Strided split: microbatch m = rows [m::n]. Keeps each microbatch
+        # aligned with the contiguous batch sharding (every data shard
+        # contributes rows to every microbatch); a plain reshape(n, B//n)
+        # would give microbatch m to only B/(n*shard) devices and force XLA
+        # to reshard the scan xs.
+        b = x.shape[0]
+        return x.reshape(b // n, n, *x.shape[1:]).swapaxes(0, 1)
+
+    micro = jax.tree.map(split, batch)
+
+    def body(carry, mb):
+        g_acc, l_acc, m_acc = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, mb, tcfg=tcfg, shard_moe=shard_moe
+        )
+        g_acc = jax.tree.map(lambda a, b_: a + b_.astype(a.dtype), g_acc, grads)
+        m_acc = jax.tree.map(lambda a, b_: a + b_, m_acc, metrics)
+        return (g_acc, l_acc + loss, m_acc), None
+
+    zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    zeros_m = {
+        "loss": jnp.zeros((), jnp.float32),
+        "accuracy": jnp.zeros((), jnp.float32),
+        "tokens": jnp.zeros((), jnp.float32),
+        "moe_lb_loss": jnp.zeros((), jnp.float32),
+        "moe_dropped": jnp.zeros((), jnp.float32),
+    }
+    (g, loss, metrics), _ = jax.lax.scan(body, (zeros_g, jnp.zeros(()), zeros_m), micro)
+    inv = 1.0 / n
+    return (
+        jax.tree.map(lambda x: x * inv, g),
+        loss * inv,
+        jax.tree.map(lambda x: x * inv, metrics),
+    )
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    *,
+    shard_moe=lambda t: t,
+):
+    """Returns train_step(state, batch) -> (state, metrics) ready for jit.
+
+    state = {"params": ..., "opt": OptState, "ef": ErrorFeedback|None}
+    """
+
+    def train_step(state, batch):
+        params, opt = state["params"], state["opt"]
+        grads, loss, metrics = _accumulate_grads(params, cfg, batch, tcfg, shard_moe)
+        ef = state.get("ef")
+        if tcfg.grad_compression == "int8_ef" and ef is not None:
+            grads, ef = grad_compress.compress_with_feedback(grads, ef)
+        new_params, new_opt, opt_metrics = adamw.update(
+            tcfg.optimizer, params, grads, opt
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss_total"] = loss
+        new_state = {"params": new_params, "opt": new_opt}
+        if ef is not None:
+            new_state["ef"] = ef
+        return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig):
+    params = transformer.init_model(key, cfg)
+    state = {"params": params, "opt": adamw.init(params, tcfg.optimizer)}
+    if tcfg.grad_compression == "int8_ef":
+        state["ef"] = grad_compress.init_error_feedback(params)
+    return state

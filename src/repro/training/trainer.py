@@ -1,0 +1,142 @@
+"""Fault-tolerant training loop.
+
+Responsibilities beyond calling train_step:
+  * periodic async checkpoints (atomic; data position in meta),
+  * auto-resume from the latest valid checkpoint, incl. after mid-step crash,
+  * step retry with restore-on-failure (transient-fault recovery: a failed
+    collective / preempted host raises; we reload the last checkpoint and
+    replay — deterministic data makes the replay exact),
+  * straggler watchdog: per-step wall time tracked with an EMA; steps
+    exceeding ``deadline_factor``x the EMA are logged and counted (on a real
+    pod the hook triggers replica exclusion / re-dispatch; see
+    distributed/fault_tolerance.py),
+  * throughput metrics (tokens/s, step time).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.distributed.fault_tolerance import StragglerWatchdog, StepFailure
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_async: bool = True
+    keep_last: int = 3
+    log_every: int = 10
+    max_retries: int = 3
+    deadline_factor: float = 3.0
+
+
+class Trainer:
+    def __init__(
+        self,
+        step_fn: Callable,            # (state, batch) -> (state, metrics), jitted
+        state: Any,
+        pipeline,                     # data pipeline with .batch_at(step)
+        cfg: TrainerConfig,
+        *,
+        put_batch: Callable = lambda b: b,   # host batch -> device arrays
+    ):
+        self.step_fn = step_fn
+        self.state = state
+        self.pipeline = pipeline
+        self.cfg = cfg
+        self.put_batch = put_batch
+        self.step = 0
+        self.watchdog = StragglerWatchdog(deadline_factor=cfg.deadline_factor)
+        self.history: list = []
+
+    # -- checkpoint plumbing ---------------------------------------------
+
+    def try_resume(self) -> bool:
+        if not self.cfg.ckpt_dir:
+            return False
+        latest = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if latest is None:
+            return False
+        self.state, meta, _ = ckpt_lib.restore(self.cfg.ckpt_dir, self.state)
+        self.step = int(meta.get("data_step", latest))
+        log.info("resumed from checkpoint step=%d", self.step)
+        return True
+
+    def _save(self):
+        if not self.cfg.ckpt_dir:
+            return
+        ckpt_lib.save(
+            self.cfg.ckpt_dir,
+            self.step,
+            self.state,
+            meta={"data_step": self.step},
+            async_write=self.cfg.ckpt_async,
+            keep_last=self.cfg.keep_last,
+        )
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self, inject_failure: Optional[Callable[[int], None]] = None
+            ) -> Dict[str, float]:
+        last_metrics: Dict[str, float] = {}
+        while self.step < self.cfg.total_steps:
+            batch = self.put_batch(self.pipeline.batch_at(self.step))
+            retries = 0
+            while True:
+                t0 = time.time()
+                try:
+                    if inject_failure is not None:
+                        inject_failure(self.step)
+                    new_state, metrics = self.step_fn(self.state, batch)
+                    jax.block_until_ready(jax.tree.leaves(metrics)[0])
+                    break
+                except (StepFailure, RuntimeError, jax.errors.JaxRuntimeError) as e:
+                    retries += 1
+                    log.warning("step %d failed (%s); retry %d", self.step, e, retries)
+                    if retries > self.cfg.max_retries:
+                        raise
+                    # transient-fault recovery: reload last good state
+                    if self.cfg.ckpt_dir and ckpt_lib.latest_step(self.cfg.ckpt_dir) is not None:
+                        self.state, meta, _ = ckpt_lib.restore(
+                            self.cfg.ckpt_dir, self.state
+                        )
+                        self.step = int(meta.get("data_step", self.step))
+                        batch = self.put_batch(self.pipeline.batch_at(self.step))
+            dt = time.time() - t0
+            self.watchdog.observe(self.step, dt)
+            self.state = new_state
+            self.step += 1
+
+            last_metrics = {
+                k: float(np.asarray(v)) for k, v in metrics.items()
+            }
+            last_metrics["step_time_s"] = dt
+            tokens = last_metrics.get("tokens", 0.0)
+            if tokens:
+                last_metrics["tokens_per_s"] = tokens / dt
+            self.history.append({"step": self.step, **last_metrics})
+            if self.step % self.cfg.log_every == 0:
+                log.info(
+                    "step %d loss=%.4f acc=%.3f %.0f tok/s stragglers=%d",
+                    self.step,
+                    last_metrics.get("loss", float("nan")),
+                    last_metrics.get("accuracy", 0.0),
+                    last_metrics.get("tokens_per_s", 0.0),
+                    self.watchdog.straggler_count,
+                )
+            if self.cfg.ckpt_dir and self.step % self.cfg.ckpt_every == 0:
+                self._save()
+        if self.cfg.ckpt_dir:
+            self._save()
+        return last_metrics

@@ -1,0 +1,73 @@
+"""Unit tests for the analysis tooling: HLO collective parsing, roofline
+terms, analytic perf model consistency with the event simulator."""
+
+import pytest
+
+from repro.core import cache_sim, numa, perf_model, swizzle
+from repro.core.cache_sim import AttentionWorkload
+from repro.core.swizzle import AttentionGrid
+from repro.launch import hlo_analysis
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+      %ar = f32[16,1024]{1,0} all-reduce(%x), channel_id=1
+      %ag = bf16[8,256,128]{2,1,0} all-gather(%y), dims={0}
+      %rs = f32[4,4]{1,0} reduce-scatter(%z)
+      %aa = (f32[2,8]{1,0}, f32[2,8]{1,0}) all-to-all(%a, %b)
+      %cp = s32[16]{0} collective-permute(%c)
+      %not_a_collective = f32[999,999]{1,0} dot(%p, %q)
+      %ar2 = f32[8]{0} all-reduce-start(%w)
+    """
+    out = hlo_analysis.collective_bytes(hlo)
+    assert out["all-reduce"] == 16 * 1024 * 4 + 8 * 4
+    assert out["all-gather"] == 8 * 256 * 128 * 2
+    assert out["reduce-scatter"] == 16 * 4
+    assert out["all-to-all"] == 2 * 2 * 8 * 4
+    assert out["collective-permute"] == 16 * 4
+    assert out["total"] == sum(out[k] for k in hlo_analysis.COLLECTIVE_OPS)
+
+
+def test_collective_bytes_ignores_plain_ops():
+    assert hlo_analysis.collective_bytes("%d = f32[10]{0} dot(%a, %b)")["total"] == 0
+
+
+def test_roofline_terms_dominance():
+    t = hlo_analysis.roofline_terms(
+        flops=197e12,            # exactly 1s of compute
+        bytes_accessed=819e9 / 2,  # 0.5s of HBM
+        coll_bytes=50e9 / 4,       # 0.25s of ICI
+    )
+    assert t["dominant"] == "compute"
+    assert t["compute_s"] == pytest.approx(1.0)
+    assert t["memory_s"] == pytest.approx(0.5)
+    assert t["collective_s"] == pytest.approx(0.25)
+    assert t["bound_s"] == pytest.approx(1.0)
+
+
+def test_analytic_model_orders_match_simulator():
+    """The fast analytic model must preserve the simulator's mapping order
+    (used for quick sweeps; the event sim is ground truth)."""
+    wl = AttentionWorkload(
+        grid=AttentionGrid(batch=1, num_q_heads=32, blocks_per_head=0),
+        seq_len=8192, head_dim=128,
+    )
+    sim = cache_sim.compare_mappings(wl, numa.MI300X, budget_accesses=400_000)
+    for m in (swizzle.SWIZZLED_HEAD_FIRST, swizzle.NAIVE_BLOCK_FIRST):
+        est = perf_model.estimate(m, wl, numa.MI300X)
+        assert 0.0 <= est.hit_rate <= 1.0
+    rel = perf_model.relative_performance(wl, numa.MI300X)
+    # block-first must not beat swizzled head-first in either model
+    assert rel[swizzle.NAIVE_BLOCK_FIRST] <= 1.05
+    assert (sim[swizzle.NAIVE_BLOCK_FIRST].throughput
+            <= sim[swizzle.SWIZZLED_HEAD_FIRST].throughput * 1.05)
+
+
+def test_acc_info_fits():
+    from repro.core import acc
+    grid = AttentionGrid(batch=1, num_q_heads=8, blocks_per_head=64, group_size=2)
+    info = acc.acc_info(grid, seq_len_kv=8192, head_dim=128, block_m=128)
+    assert info.kv_bytes == 2 * 8192 * 128 * 2
+    assert info.fits_cache(4 * 1024 * 1024)       # 4 MB: fits exactly
+    assert not info.fits_cache(4 * 1024 * 1024 - 1)
+    assert info.num_wgs == 2 * 64

@@ -1,0 +1,116 @@
+"""Fault-tolerance tests: watchdog, heartbeat, trainer restore-and-replay,
+elastic rescale policy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.distributed import elastic
+from repro.distributed.fault_tolerance import (
+    HeartbeatFile, StragglerWatchdog, failure_injector, StepFailure,
+)
+from repro.optim.adamw import AdamWConfig
+from repro.training.train_step import TrainConfig, init_train_state, make_train_step
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def test_watchdog_flags_stragglers():
+    w = StragglerWatchdog(deadline_factor=2.0, warmup_steps=2)
+    for i in range(5):
+        assert not w.observe(i, 1.0)
+    assert w.observe(5, 5.0)       # 5x the EMA
+    assert w.straggler_count == 1
+    # the breach did not poison the EMA
+    assert abs(w.ema - 1.0) < 1e-6
+    assert not w.observe(6, 1.1)
+
+
+def test_watchdog_hook_called():
+    events = []
+    w = StragglerWatchdog(deadline_factor=2.0, warmup_steps=1,
+                          on_straggler=events.append)
+    w.observe(0, 1.0)
+    w.observe(1, 1.0)
+    w.observe(2, 10.0)
+    assert len(events) == 1 and events[0].step == 2
+
+
+def test_heartbeat(tmp_path):
+    hb = HeartbeatFile(str(tmp_path / "hb.json"), rank=3)
+    assert hb.is_stale(0.1)
+    hb.beat(step=12)
+    assert not hb.is_stale(10.0)
+    assert hb.age() < 5.0
+
+
+def test_trainer_recovers_from_injected_failures(tmp_path):
+    cfg = registry.get_smoke_config("llama3-8b")
+    tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3, warmup_steps=2,
+                                             total_steps=20))
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    pipe = make_pipeline(DataConfig(seq_len=32, global_batch=4, vocab=cfg.vocab))
+    tr = Trainer(
+        step_fn, state, pipe,
+        TrainerConfig(total_steps=12, ckpt_dir=str(tmp_path), ckpt_every=4,
+                      ckpt_async=False, log_every=1000),
+        put_batch=lambda b: {k: jnp.asarray(v) for k, v in b.items()},
+    )
+    tr.run(inject_failure=failure_injector({5, 9}))
+    assert tr.step == 12
+    # And a fresh trainer resumes from the persisted checkpoint:
+    tr2 = Trainer(
+        step_fn, init_train_state(jax.random.PRNGKey(1), cfg, tcfg), pipe,
+        TrainerConfig(total_steps=12, ckpt_dir=str(tmp_path)),
+        put_batch=lambda b: {k: jnp.asarray(v) for k, v in b.items()},
+    )
+    assert tr2.try_resume()
+    assert tr2.step == 12
+
+
+def test_trainer_gives_up_after_max_retries(tmp_path):
+    cfg = registry.get_smoke_config("llama3-8b")
+    tcfg = TrainConfig(optimizer=AdamWConfig())
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    pipe = make_pipeline(DataConfig(seq_len=16, global_batch=2, vocab=cfg.vocab))
+    tr = Trainer(
+        step_fn, state, pipe,
+        TrainerConfig(total_steps=3, max_retries=2, log_every=1000),
+        put_batch=lambda b: {k: jnp.asarray(v) for k, v in b.items()},
+    )
+
+    def always_fail(step):
+        raise StepFailure("permanent")
+
+    with pytest.raises(StepFailure):
+        tr.run(inject_failure=always_fail)
+
+
+# --- Elastic rescaling policy ------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(num=st.sampled_from([8, 16, 32, 64, 128, 256, 512, 1024]))
+def test_choose_mesh_shape_consistent(num):
+    cfg = registry.get_config("llama3-8b")
+    shape, axes = elastic.choose_mesh_shape(num, cfg)
+    assert int(np.prod(shape)) == num
+    assert len(shape) == len(axes)
+    model = shape[axes.index("model")]
+    # ACC alignment: model axis divides kv heads or vice versa.
+    assert cfg.n_kv_heads % model == 0 or model % cfg.n_kv_heads == 0
+
+
+def test_rescale_plan_batch_divisibility():
+    cfg = registry.get_config("llama3-8b")
+    plan = elastic.rescale_plan((16, 16), 128, cfg, global_batch=256)
+    assert plan.per_shard_batch * np.prod(
+        [n for n, a in zip(plan.new_shape, plan.axis_names) if a in ("pod", "data")]
+    ) == 256
+    with pytest.raises(ValueError):
+        elastic.rescale_plan((16, 16), 96, cfg, global_batch=25)

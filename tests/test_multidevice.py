@@ -1,0 +1,82 @@
+"""Multi-device compile tests (subprocess: forces 8 host platform devices).
+
+Validates in CI what the full dry-run validates at production scale:
+  * a smoke config lowers + compiles on a (data=2, model=4) mesh,
+  * sharded-state training step executes and the loss is finite,
+  * the paper's mesh-level technique: ACC-aligned head placement compiles
+    to FEWER collective bytes than the naive striped baseline.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import dataclasses
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, AxisType
+
+from repro.configs import registry
+from repro.distributed import sharding as shlib
+from repro.launch import hlo_analysis
+from repro.optim.adamw import AdamWConfig
+from repro.training.train_step import TrainConfig, init_train_state, make_train_step
+
+mesh = jax.make_mesh((2, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto, AxisType.Auto))
+base = registry.get_smoke_config("llama3-8b")
+# 8 q heads / 4 kv heads so the 4-way model axis has real head structure.
+cfg0 = dataclasses.replace(base, n_heads=8, n_kv_heads=4, head_dim=16,
+                           d_model=128, d_ff=256, placement_shards=4)
+tcfg = TrainConfig(optimizer=AdamWConfig(lr=1e-3), microbatches=2)
+
+out = {}
+for placement in ("acc_aligned", "striped"):
+    cfg = dataclasses.replace(cfg0, head_placement=placement)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    sh = shlib.param_shardings(mesh, jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state))
+    state = jax.tree.map(jax.device_put, state, sh)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0, cfg.vocab)
+    batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1),
+             "mask": jnp.ones((8, 64), jnp.float32)}
+    bspec = shlib.batch_spec(mesh, 8)
+    batch = {k: jax.device_put(v, NamedSharding(mesh, shlib.fix_spec(
+        jax.sharding.PartitionSpec(bspec[0] if len(bspec) else None,
+                                   *([None]*(v.ndim-1))), v.shape, mesh)))
+        for k, v in batch.items()}
+    with mesh:
+        fn = jax.jit(make_train_step(
+            cfg, tcfg, shard_moe=shlib.shard_moe_buffers(mesh)))
+        lowered = fn.lower(state, batch)
+        compiled = lowered.compile()
+        coll = hlo_analysis.collective_bytes(compiled.as_text())
+        new_state, metrics = fn(state, batch)
+        loss = float(metrics["loss"])
+    out[placement] = {"collective_bytes": coll["total"], "loss": loss}
+print("RESULT " + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_mesh_compile_and_placement_ab(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], env=env,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = next(l for l in proc.stdout.splitlines() if l.startswith("RESULT "))
+    res = json.loads(line[len("RESULT "):])
+    for placement, r in res.items():
+        assert r["loss"] > 0 and r["loss"] < 100, (placement, r)
+    # The paper's claim at mesh level: ACC-aligned placement moves less data.
+    assert (res["acc_aligned"]["collective_bytes"]
+            < res["striped"]["collective_bytes"]), res

@@ -1,0 +1,118 @@
+"""Sharding-rule tests: naming convention, divisibility repair, placement."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import placement
+from repro.distributed import sharding as shlib
+
+
+def host_mesh(shape=(2, 2), axes=("data", "model")):
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:1] * n).reshape(shape)  # fake for spec math
+    # fix_spec only reads mesh.shape, so a trivial mesh suffices:
+    return jax.sharding.Mesh(
+        np.array(jax.devices() * n)[:n].reshape(shape), axes
+    )
+
+
+MESH = host_mesh()
+
+
+class FakeLeaf:
+    def __init__(self, shape):
+        self.shape = shape
+        self.ndim = len(shape)
+
+
+def spec_of(key, shape):
+    from jax.tree_util import DictKey
+    return shlib.spec_for_path((DictKey(key),), FakeLeaf(shape))
+
+
+def test_suffix_rules():
+    assert spec_of("wq_dm", (64, 64)) == P(None, "model")
+    assert spec_of("wo_md", (64, 64)) == P("model")
+    assert spec_of("table_vd", (512, 64)) == P("model")
+    assert spec_of("wi_gate_edm", (8, 64, 128)) == P("model")
+    assert spec_of("scale_r", (64,)) == P()
+    assert spec_of("router_de", (64, 8)) == P()
+
+
+def test_stacked_right_alignment():
+    # scan-stacked params carry a leading period dim.
+    assert spec_of("wq_dm", (4, 64, 64)) == P(None, None, "model")
+    assert spec_of("wo_md", (4, 64, 64)) == P(None, "model")
+
+
+def test_fix_spec_rehomes_vocab():
+    # 50280 % 2 == 0 so a 2-way axis fits; force failure with an odd vocab.
+    s = shlib.fix_spec(P("model", None), (32001, 64), MESH)
+    assert s == P(None, "model")  # moved to d_model
+
+
+def test_fix_spec_rehomes_expert_dim():
+    big = host_mesh((1, 16))
+    s = shlib.fix_spec(P(None, "model", None, None), (32, 8, 64, 14336), big)
+    assert s == P(None, None, None, "model")
+
+
+def test_fix_spec_replicates_when_hopeless():
+    s = shlib.fix_spec(P("model",), (7,), host_mesh((1, 16)))
+    assert s == P()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    dims=st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+    which=st.integers(0, 3),
+    msize=st.sampled_from([2, 4, 16]),
+)
+def test_fix_spec_always_valid(dims, which, msize):
+    mesh = host_mesh((1, msize))
+    spec = P(*[("model" if i == which % len(dims) else None) for i in range(len(dims))])
+    fixed = shlib.fix_spec(spec, tuple(dims), mesh)
+    for i, ax in enumerate(tuple(fixed)):
+        if ax is None:
+            continue
+        sz = msize if ax == "model" else 1
+        assert dims[i] % sz == 0
+
+
+def test_batch_spec_degenerate_batch():
+    assert shlib.batch_spec(MESH, 1) == P(None)
+    assert shlib.batch_spec(MESH, 8) == P("data")
+
+
+# --- ACC-aligned placement (the paper's technique at mesh level) -------------
+
+
+@pytest.mark.parametrize("hq,hkv,n", [(128, 8, 8), (32, 8, 4), (128, 8, 16), (16, 16, 4)])
+def test_acc_aligned_never_duplicates(hq, hkv, n):
+    pl = placement.plan(hq, hkv, n, placement.ACC_ALIGNED)
+    if n <= hkv or hkv % n == 0 or n % hkv == 0:
+        assert pl.kv_duplication == pytest.approx(max(1.0, n / hkv) if n > hkv else 1.0)
+
+
+def test_striped_duplicates_gqa():
+    pl = placement.plan(128, 8, 8, placement.STRIPED)
+    assert pl.kv_duplication > 1.0
+    aligned = placement.plan(128, 8, 8, placement.ACC_ALIGNED)
+    assert aligned.kv_duplication == 1.0
+    extra = placement.kv_collective_bytes_per_layer(
+        pl, seq_len=4096, head_dim=128, batch=4
+    )
+    assert extra > 0
+    assert placement.kv_collective_bytes_per_layer(
+        aligned, seq_len=4096, head_dim=128, batch=4
+    ) == 0.0
+
+
+def test_placement_permutations_are_permutations():
+    for strat in (placement.ACC_ALIGNED, placement.STRIPED):
+        pl = placement.plan(32, 8, 4, strat)
+        assert sorted(pl.q_perm) == list(range(32))
+        assert sorted(pl.kv_perm) == list(range(8))
