@@ -47,6 +47,8 @@ def main(argv=None):
     print("\n### TPU port: static reuse / placement analysis\n")
     tpu_reuse.kernel_reuse_table()
     print()
+    tpu_reuse.resolver_table()
+    print()
     tpu_reuse.placement_table()
 
     print("\n### Roofline (from dry-run artifacts)\n")

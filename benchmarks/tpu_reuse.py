@@ -13,6 +13,7 @@ from repro.core import placement
 from repro.kernels.flash_attention import (
     BLOCK_FIRST, HEAD_FIRST, MappingConfig, hbm_block_fetches,
 )
+from repro.kernels.ops import resolve_mapping
 
 from benchmarks.common import fmt, render_table, save_result
 
@@ -49,6 +50,32 @@ def kernel_reuse_table():
         rows, ["config"] + list(MAPPINGS),
     ))
     save_result("tpu_kernel_reuse", rows)
+    return rows
+
+
+def resolver_table(batch: int = 8):
+    """What ``kernels.ops.resolve_mapping`` auto-selects per model config —
+    the schedule every workload now gets by default (mapping_name="auto"),
+    side by side with its predicted reuse efficiency."""
+    rows = []
+    for name, hq, hkv, seq, d in CONFIGS:
+        mc = resolve_mapping((batch, hq, hkv, seq, seq, d))
+        eff = hbm_block_fetches(
+            batch=batch, num_q_heads=hq, num_kv_heads=hkv,
+            seq_q=seq, seq_kv=seq, head_dim=d, mapping=mc,
+        )["reuse_efficiency"]
+        rows.append({
+            "config": name,
+            "order": mc.order,
+            "kv_resident": str(mc.kv_resident),
+            "blocks": f"{mc.block_m}x{mc.block_n}",
+            "reuse_%": fmt(eff * 100, 1),
+        })
+    print(render_table(
+        "Auto-resolved mapping per config (kernels.ops.resolve_mapping)",
+        rows, ["config", "order", "kv_resident", "blocks", "reuse_%"],
+    ))
+    save_result("tpu_resolver", rows)
     return rows
 
 

@@ -1,0 +1,149 @@
+"""JAX version / backend compatibility layer.
+
+Every JAX API whose surface has churned across the versions this repo
+supports is funnelled through here, so a JAX bump is a one-file change:
+
+  * ``tpu_compiler_params(...)`` — Pallas TPU compiler params. Newer JAX
+    exposes ``pltpu.CompilerParams`` and a ``GridDimensionSemantics`` enum;
+    0.4.x exposes ``pltpu.TPUCompilerParams`` taking the literal strings
+    ``"parallel"`` / ``"arbitrary"``. Callers always pass the string
+    constants :data:`PARALLEL` / :data:`ARBITRARY`; this shim converts to
+    whatever the installed JAX wants.
+  * ``make_mesh(...)`` — ``jax.make_mesh`` grew an ``axis_types=`` kwarg
+    (with ``jax.sharding.AxisType``) after 0.4.37. Callers pass the string
+    names ``"auto"`` / ``"explicit"`` / ``"manual"``; on JAX without axis
+    types the kwarg is dropped (0.4.x meshes behave like all-Auto).
+  * backend / interpret detection — ``default_backend()`` / ``on_tpu()`` /
+    ``use_interpret()`` centralize the "can this host lower Mosaic?" test
+    that the kernels, ops dispatch and models previously duplicated.
+
+Supported-JAX policy (see ROADMAP.md): oldest supported is 0.4.37 (the
+container's pinned toolchain); the shims are written against the 0.5-0.7
+renames so a newer host works unmodified. No other module may reference
+``CompilerParams`` / ``TPUCompilerParams`` / ``AxisType`` directly —
+``tests/test_mapping_resolver.py`` greps the tree to enforce this.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _parse_version(v: str) -> Tuple[int, ...]:
+    parts = []
+    for p in v.split("."):
+        if not p.isdigit():
+            break
+        parts.append(int(p))
+    return tuple(parts) or (0,)
+
+
+JAX_VERSION: Tuple[int, ...] = _parse_version(jax.__version__)
+
+# Grid-dimension semantics, spelled as the lowercase strings the 0.4.x
+# dataclass accepts. ``tpu_compiler_params`` upgrades them to the enum on
+# newer JAX.
+PARALLEL = "parallel"
+ARBITRARY = "arbitrary"
+
+# Mesh axis types, spelled as strings; upgraded to jax.sharding.AxisType
+# members when the installed JAX has them.
+AXIS_AUTO = "auto"
+AXIS_EXPLICIT = "explicit"
+AXIS_MANUAL = "manual"
+
+# The params dataclass was renamed TPUCompilerParams -> CompilerParams.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+_DIM_SEMANTICS_ENUM = getattr(pltpu, "GridDimensionSemantics", None)
+
+
+def _convert_dim_semantics(dims):
+    if dims is None:
+        return None
+    if _DIM_SEMANTICS_ENUM is None:
+        # Old JAX: pass the literal strings through (and downgrade any
+        # enum-ish values a caller might hand us).
+        return tuple(getattr(d, "name", str(d)).lower() for d in dims)
+    out = []
+    for d in dims:
+        if isinstance(d, str):
+            d = getattr(_DIM_SEMANTICS_ENUM, d.upper())
+        out.append(d)
+    return tuple(out)
+
+
+def tpu_compiler_params(
+    *, dimension_semantics: Optional[Sequence] = None, **kwargs
+):
+    """Build the Pallas TPU compiler-params object for the installed JAX.
+
+    ``dimension_semantics`` entries are the :data:`PARALLEL` /
+    :data:`ARBITRARY` strings (enum members also accepted). Remaining
+    kwargs (``vmem_limit_bytes``, ...) are forwarded unchanged.
+    """
+    return _COMPILER_PARAMS_CLS(
+        dimension_semantics=_convert_dim_semantics(dimension_semantics),
+        **kwargs,
+    )
+
+
+def _axis_type(name):
+    axis_type_enum = getattr(jax.sharding, "AxisType", None)
+    if axis_type_enum is None:
+        return None
+    if isinstance(name, axis_type_enum):
+        return name
+    return {
+        AXIS_AUTO: axis_type_enum.Auto,
+        AXIS_EXPLICIT: axis_type_enum.Explicit,
+        AXIS_MANUAL: axis_type_enum.Manual,
+    }[str(name).lower()]
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    axis_types: Optional[Sequence] = None,
+    devices=None,
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` that tolerates the ``axis_types`` API gap.
+
+    ``axis_types`` entries are :data:`AXIS_AUTO` / :data:`AXIS_EXPLICIT` /
+    :data:`AXIS_MANUAL` strings. On JAX without ``jax.sharding.AxisType``
+    (<= 0.4.x) the argument is dropped: those versions have no explicit
+    sharding mode, so every axis already behaves like ``Auto``.
+    """
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if axis_types is not None:
+        sig = inspect.signature(jax.make_mesh)
+        if "axis_types" in sig.parameters and _axis_type(axis_types[0]) is not None:
+            kwargs["axis_types"] = tuple(_axis_type(t) for t in axis_types)
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def default_backend() -> str:
+    """The platform jit lowers to by default: 'tpu' | 'gpu' | 'cpu'."""
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    return default_backend() == "tpu"
+
+
+def use_interpret(backend: Optional[str] = None) -> bool:
+    """True when Pallas TPU kernels must run in interpret mode.
+
+    Mosaic lowering exists only on TPU; every other backend (CPU hosts,
+    dry-runs, CI) gets the Python interpreter so the same kernel code is
+    runnable everywhere.
+    """
+    return (backend or default_backend()) != "tpu"

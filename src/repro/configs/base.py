@@ -78,7 +78,9 @@ class ModelConfig:
     max_seq_len: int = 131072
     compute_dtype: str = "bfloat16"
     attn_impl: str = "auto"      # kernels/ops.py dispatch
-    mapping_name: str = "swizzled_head_first"  # paper mapping for kernels
+    mapping_name: str = "auto"   # "auto": kernels/ops.py resolve_mapping
+                                 # picks per shape; or a PAPER_MAPPINGS name
+                                 # for the fixed A/B configurations
     scan_unroll: int = 1         # lax.scan unroll for the layer stack
     attn_chunk_unroll: bool = False  # unroll the xla_flash KV-chunk scan
                                   # (cost probes: inner scans also count once)

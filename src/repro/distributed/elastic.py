@@ -24,6 +24,7 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh
 
+from repro import compat
 from repro.configs.base import ModelConfig
 
 
@@ -100,4 +101,4 @@ def rescale_plan(
 
 def make_mesh_for(num_devices: int, cfg: ModelConfig) -> Mesh:
     shape, axes = choose_mesh_shape(num_devices, cfg)
-    return jax.make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes)

@@ -9,6 +9,7 @@ ref              pure-jnp oracles for all of the above
 """
 
 from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.ops import resolve_mapping  # noqa: F401
 from repro.kernels.flash_attention import (  # noqa: F401
     BLOCK_FIRST,
     HEAD_FIRST,

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -129,11 +131,11 @@ def flash_decode(
             pltpu.VMEM((gp, 128), jnp.float32),
             pltpu.VMEM((gp, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
+                compat.PARALLEL,
+                compat.PARALLEL,
+                compat.ARBITRARY,
             ),
         ),
         cost_estimate=pl.CostEstimate(

@@ -48,6 +48,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 HEAD_FIRST = "head_first"
@@ -93,8 +95,8 @@ PAPER_MAPPINGS = {
 
 def _dim_semantics(order: str, acc_parallel: bool, ndims: int):
     """PARALLEL on the leading (batch, head) dims when ACC-aligned."""
-    par = pltpu.GridDimensionSemantics.PARALLEL
-    arb = pltpu.GridDimensionSemantics.ARBITRARY
+    par = compat.PARALLEL
+    arb = compat.ARBITRARY
     if not acc_parallel:
         return (arb,) * ndims
     if order == HEAD_FIRST:
@@ -357,7 +359,7 @@ def flash_attention_fwd(
                 pl.BlockSpec((1, 1, bm), lambda *g: gidx(*g)),
             ],
             out_shape=out_shape,
-            compiler_params=pltpu.CompilerParams(
+            compiler_params=compat.tpu_compiler_params(
                 dimension_semantics=_dim_semantics(
                     mapping.order, mapping.acc_parallel, len(grid)
                 ),
@@ -406,7 +408,7 @@ def flash_attention_fwd(
             pltpu.VMEM((bm, 128), jnp.float32),
             pltpu.VMEM((bm, 128), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=_dim_semantics(
                 mapping.order, mapping.acc_parallel, len(grid)
             ),
@@ -444,35 +446,44 @@ def hbm_block_fetches(
     bm, bn = mapping.block_m, mapping.block_n
     num_m = -(-seq_q // bm)
     num_n = -(-seq_kv // bn)
-    group = num_q_heads // num_kv_heads
     q_bytes = seq_q * head_dim * dtype_bytes
-    kv_bytes = 2 * seq_kv * head_dim * dtype_bytes  # K and V
+    kv_bytes = 2 * seq_kv * head_dim * dtype_bytes  # K and V, whole sequence
+    kv_tile_bytes = 2 * bn * head_dim * dtype_bytes  # K and V, one (bn, D) tile
 
     resident = mapping.resolve_resident(seq_kv, head_dim, dtype_bytes)
     if resident:
+        # The resident block is the whole (Skv, D) K/V of one kv head, copied
+        # as a unit whenever its grid index changes between consecutive steps.
         if mapping.order == HEAD_FIRST:
             # KV block revisited across all m of a head AND across the g
             # q-heads of its group: fetched once per (batch, kv head).
             kv_fetches = batch * num_kv_heads
         else:
-            # (b, m, h): h changes fastest => resident block swaps at every
-            # step; revisit only survives across m for g=... never.
-            kv_fetches = batch * num_m * num_q_heads
-        q_fetches = batch * num_q_heads * num_m
+            # (b, m, h): the resident block swaps inside every m sweep, so
+            # each (batch, q-block) re-fetches every kv head — the thrashing
+            # baseline of paper Fig. 8. Consecutive q-heads of one GQA group
+            # share the block index, so the pipeline still skips those
+            # copies (num_kv_heads fetches per sweep, not num_q_heads); with
+            # a single kv head the index never changes at all.
+            if num_kv_heads == 1:
+                kv_fetches = batch
+            else:
+                kv_fetches = batch * num_m * num_kv_heads
         kv_traffic = kv_fetches * kv_bytes
     else:
-        # Streaming: KV tile sequence refetched for every (h, m) pair under
-        # either order (no cache between HBM and VMEM on TPU).
-        kv_traffic = batch * num_q_heads * num_m * kv_bytes
-        q_fetches = batch * num_q_heads * num_m  # Q revisited across n
-        if mapping.order == BLOCK_FIRST:
-            pass  # same traffic; order only changes which ACC is live
-    q_traffic = q_fetches * q_bytes / num_m * num_m  # = q read once per (h,m)
+        # Streaming: the full num_n-tile K/V sweep is refetched for every
+        # (q-head, q-block) pair under either order (no cache between HBM and
+        # VMEM on TPU; order only changes which ACC is live, not the traffic).
+        kv_traffic = batch * num_q_heads * num_m * num_n * kv_tile_bytes
+    # Q: each (bm, D) block is copied once per (batch, q-head, q-block) —
+    # under head_first the block is revisited across the whole KV sweep, and
+    # under block_first it still changes only when m does.
+    q_traffic = batch * num_q_heads * num_m * (bm * head_dim * dtype_bytes)
     ideal = batch * (num_kv_heads * kv_bytes + num_q_heads * q_bytes)
-    total = kv_traffic + batch * num_q_heads * q_bytes
+    total = kv_traffic + q_traffic
     return {
         "kv_bytes": kv_traffic,
-        "q_bytes": batch * num_q_heads * q_bytes,
+        "q_bytes": q_traffic,
         "total_bytes": total,
         "ideal_bytes": ideal,
         "reuse_efficiency": ideal / total,

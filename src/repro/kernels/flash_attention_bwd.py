@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 from repro.kernels.flash_attention import (
     BLOCK_FIRST,
     HEAD_FIRST,
@@ -241,7 +243,7 @@ def flash_attention_bwd(
         out_specs=pl.BlockSpec((1, 1, bm, d), q_idx),
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
         scratch_shapes=[pltpu.VMEM((bm, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=_dim_semantics(
                 mapping.order, mapping.acc_parallel, len(dq_grid)
             ),
@@ -302,7 +304,7 @@ def flash_attention_bwd(
             pltpu.VMEM((bn, d), jnp.float32),
             pltpu.VMEM((bn, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=_dim_semantics(
                 mapping.order, mapping.acc_parallel, len(dkv_grid)
             ),

@@ -15,27 +15,186 @@ Three implementations behind one API:
                     EXPERIMENTS.md §Perf).
   * ``ref``       — exact attention (tests only).
 
-``impl='auto'`` picks pallas on TPU and xla_flash elsewhere.
+``impl='auto'`` picks pallas on TPU and xla_flash elsewhere (backend
+detection via ``repro.compat``).
+
+``resolve_mapping(shape, backend)`` is the scheduling entry point: given an
+attention shape it scores every (grid order x KV residency x block size)
+candidate with the analytic NUMA model (``core.perf_model``, cross-validated
+against ``core.cache_sim``) plus the static HBM-traffic model
+(``hbm_block_fetches``) and returns the best ``MappingConfig``. Results are
+LRU-cached per shape/backend, so jit traces pay the cost once. Passing
+``mapping=None`` (the default) to ``flash_attention`` routes through it —
+there is deliberately no module-level default mapping anymore.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.kernels import ref as ref_mod
 from repro.kernels.decode_attention import flash_decode
-from repro.kernels.flash_attention import MappingConfig, flash_attention_fwd
+from repro.kernels.flash_attention import (
+    BLOCK_FIRST,
+    HEAD_FIRST,
+    MappingConfig,
+    flash_attention_fwd,
+    hbm_block_fetches,
+)
 from repro.kernels.flash_attention_bwd import flash_attention_bwd
-
-DEFAULT_MAPPING = MappingConfig()
 
 
 def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+    return compat.on_tpu()
+
+
+# -----------------------------------------------------------------------------
+# Mapping resolution: shape -> best NUMA-aware schedule
+# -----------------------------------------------------------------------------
+
+#: Candidate (block_m, block_n) tilings, preference-ordered. The MXU-native
+#: 128x128 default first; larger variants only win when the model says so
+#: (e.g. less padding waste). Sub-128 blocks are excluded — the analytic
+#: model would pick them for their smaller causal-diagonal waste, but they
+#: under-fill the 128x128 MXU; short sequences still clamp via min(bm, sq).
+_CANDIDATE_BLOCKS = ((128, 128), (256, 128), (128, 256))
+
+#: Grid order -> paper mapping name for the analytic model. Every emitted
+#: candidate has acc_parallel=True, so both orders score as their swizzled
+#: variant (the naive_* names carry perf_model's ACC-replication penalty for
+#: schedules we never emit); residency is decided by the candidate filter
+#: plus the exact HBM-traffic tie-break, not by the analytic proxy.
+_PAPER_NAME = {
+    HEAD_FIRST: "swizzled_head_first",
+    BLOCK_FIRST: "swizzled_block_first",
+}
+
+
+def _topology_for(backend: str):
+    from repro.core import numa
+
+    if backend == "gpu":
+        return numa.MI300X
+    # TPU and CPU alike schedule for the megacore TPU target: CPU hosts run
+    # the kernels in interpret mode, and using the same topology guarantees
+    # dry-runs pick the same mapping the real hardware would.
+    return numa.TPU_V5P_MEGACORE
+
+
+@functools.lru_cache(maxsize=1024)
+def _resolve_mapping_cached(
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    seq_q: int,
+    seq_kv: int,
+    head_dim: int,
+    dtype_bytes: int,
+    backend: str,
+    vmem_budget_bytes: int,
+) -> MappingConfig:
+    from repro.core import perf_model
+    from repro.core.cache_sim import AttentionWorkload
+    from repro.core.swizzle import AttentionGrid
+
+    topo = _topology_for(backend)
+    group = max(1, num_q_heads // max(num_kv_heads, 1))
+
+    def _clamp(block, seq):
+        # Never emit a block shorter than the sequence rounded up to the
+        # sublane quantum (16 covers bf16's 16 and f32's 8): ops pads the
+        # sequence to the block size, and a non-multiple-of-sublane block
+        # only works in interpret mode — Mosaic rejects the layout.
+        return min(block, max(16, -(-seq // 16) * 16))
+
+    best = None  # (time, traffic, candidate_rank, config)
+    rank = 0
+    for bm, bn in _CANDIDATE_BLOCKS:
+        bm_eff = _clamp(bm, seq_q)
+        bn_eff = _clamp(bn, seq_kv)
+        for order in (HEAD_FIRST, BLOCK_FIRST):
+            for kv_resident in (True, False):
+                cand = MappingConfig(
+                    order=order,
+                    kv_resident=kv_resident,
+                    acc_parallel=True,
+                    block_m=bm_eff,
+                    block_n=bn_eff,
+                    vmem_budget_bytes=vmem_budget_bytes,
+                )
+                if kv_resident and not cand.resolve_resident(
+                    seq_kv, head_dim, dtype_bytes
+                ):
+                    # Over-budget residency degenerates to streaming; keep
+                    # only the honest streaming candidate.
+                    continue
+                # perf_model.estimate models a square (seq_kv x seq_kv)
+                # launch: it recomputes blocks_per_head from wl.seq_len, so
+                # feed it the same convention. For rectangular shapes
+                # (bucketed prefill vs long cache) the analytic time is a
+                # square proxy; the exact rectangular traffic enters via the
+                # tie-break below.
+                grid = AttentionGrid(
+                    batch=batch,
+                    num_q_heads=num_q_heads,
+                    blocks_per_head=-(-seq_kv // bm_eff),
+                    group_size=group,
+                )
+                wl = AttentionWorkload(
+                    grid=grid,
+                    seq_len=seq_kv,
+                    head_dim=head_dim,
+                    block_m=bm_eff,
+                    block_n=bn_eff,
+                    causal=True,
+                    dtype_bytes=dtype_bytes,
+                )
+                est = perf_model.estimate(_PAPER_NAME[order], wl, topo)
+                traffic = hbm_block_fetches(
+                    batch=batch,
+                    num_q_heads=num_q_heads,
+                    num_kv_heads=num_kv_heads,
+                    seq_q=seq_q,
+                    seq_kv=seq_kv,
+                    head_dim=head_dim,
+                    dtype_bytes=dtype_bytes,
+                    mapping=cand,
+                )["total_bytes"]
+                key = (est.time, traffic, rank)
+                rank += 1
+                if best is None or key < best[0]:
+                    best = (key, cand)
+    return best[1]
+
+
+def resolve_mapping(
+    shape: Tuple[int, int, int, int, int, int],
+    backend: Optional[str] = None,
+    *,
+    dtype_bytes: int = 2,
+    vmem_budget_bytes: int = MappingConfig.vmem_budget_bytes,
+) -> MappingConfig:
+    """Pick the best ``MappingConfig`` for an attention shape.
+
+    ``shape`` is ``(batch, num_q_heads, num_kv_heads, seq_q, seq_kv,
+    head_dim)``; ``backend`` defaults to the host's jit target. The resolver
+    prefers the paper's swizzled head-first residency exactly when the K/V of
+    one head fits the VMEM budget (``MappingConfig.resolve_resident``), and
+    falls back to a streamed head-first sweep otherwise; block sizes are
+    chosen by the HBM-traffic model. Results are LRU-cached.
+    """
+    b, hq, hkv, sq, skv, d = (int(x) for x in shape)
+    return _resolve_mapping_cached(
+        b, hq, hkv, sq, skv, d,
+        int(dtype_bytes),
+        backend or compat.default_backend(),
+        int(vmem_budget_bytes),
+    )
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -225,11 +384,15 @@ def flash_attention(
     window: Optional[int] = None,
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
-    mapping: MappingConfig = DEFAULT_MAPPING,
+    mapping: Optional[MappingConfig] = None,
     impl: str = "auto",
     chunk_unroll: bool = False,
 ) -> jnp.ndarray:
-    """Multi-head / grouped-query attention. q: (B,Hq,Sq,D); k,v: (B,Hkv,Skv,D)."""
+    """Multi-head / grouped-query attention. q: (B,Hq,Sq,D); k,v: (B,Hkv,Skv,D).
+
+    ``mapping=None`` auto-selects the NUMA-aware schedule for this shape via
+    :func:`resolve_mapping`.
+    """
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "xla_flash"
     b, hq, sq, d = q.shape
@@ -251,11 +414,16 @@ def flash_attention(
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
 
+    if mapping is None:
+        mapping = resolve_mapping(
+            (b, hq, k.shape[1], sq, skv, d),
+            dtype_bytes=q.dtype.itemsize,
+        )
     bm, bn = mapping.block_m, mapping.block_n
     qp = _pad_to(q, 2, bm)
     kp = _pad_to(k, 2, bn)
     vp = _pad_to(v, 2, bn)
-    interpret = not _on_tpu()
+    interpret = compat.use_interpret()
     o = _pallas_attention(
         qp, kp, vp, causal, window, softcap, scale, mapping, interpret
     )
@@ -287,5 +455,5 @@ def decode_attention(
     return flash_decode(
         q, k_cache, v_cache, lengths,
         softcap=softcap, scale=scale, window=window, chunk=chunk,
-        interpret=not _on_tpu(),
+        interpret=compat.use_interpret(),
     )

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
 NEG_INF = -1e30
 
 
@@ -95,11 +97,11 @@ def ssd_intra_chunk(
             jax.ShapeDtypeStruct((b, nc, h, q, p), jnp.float32),
             jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=(
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.PARALLEL,
-                pltpu.GridDimensionSemantics.ARBITRARY,
+                compat.PARALLEL,
+                compat.PARALLEL,
+                compat.ARBITRARY,
             ),
         ),
         cost_estimate=pl.CostEstimate(

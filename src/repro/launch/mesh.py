@@ -12,20 +12,23 @@ alternative shapes for other chip counts.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    return compat.make_mesh(
+        shape, axes, axis_types=(compat.AXIS_AUTO,) * len(axes)
     )
 
 
 def make_host_mesh() -> Mesh:
     """Whatever this host offers (tests / examples): (data=N, model=1)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"), axis_types=(AxisType.Auto, AxisType.Auto)
+    return compat.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(compat.AXIS_AUTO, compat.AXIS_AUTO),
     )

@@ -40,7 +40,12 @@ def init_attention(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def _mapping(cfg: ModelConfig) -> MappingConfig:
+def _mapping(cfg: ModelConfig) -> Optional[MappingConfig]:
+    """Mapping for the kernels: an explicit paper mapping by name, or None
+    for ``"auto"`` — ops then resolves the best schedule per call shape via
+    ``kernels.ops.resolve_mapping`` (perf-model + HBM-traffic scored)."""
+    if cfg.mapping_name == "auto":
+        return None
     return PAPER_MAPPINGS[cfg.mapping_name]
 
 

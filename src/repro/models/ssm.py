@@ -27,6 +27,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig, SSMConfig
 from repro.models import layers
 
@@ -179,14 +180,14 @@ def _ssd(cfg: SSMConfig):
     """Dispatch the chunked SSD implementation per config."""
     impl = cfg.impl
     if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "xla"
+        impl = "pallas" if compat.on_tpu() else "xla"
     if impl == "pallas":
         from repro.kernels import ssd as ssd_kernel
 
         def f(x, dt, a, b_mat, c_mat, chunk, h0=None):
             return ssd_kernel.ssd_chunked_pallas(
                 x, dt, a, b_mat, c_mat, chunk, h0=h0,
-                interpret=jax.default_backend() != "tpu",
+                interpret=compat.use_interpret(),
             )
 
         return f

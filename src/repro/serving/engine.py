@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as kernel_ops
 from repro.models import transformer
 
 
@@ -53,9 +54,19 @@ class ServingEngine:
         cache_len: int = 2048,
         prompt_buckets=(128, 512, 2048),
         rng_seed: int = 0,
+        mapping: Optional[str] = None,
     ):
+        # ``mapping`` overrides the config's kernel-schedule policy for this
+        # engine: "auto" (resolve_mapping per shape) or a PAPER_MAPPINGS name.
+        if mapping is not None and mapping != cfg.mapping_name:
+            cfg = dataclasses.replace(cfg, mapping_name=mapping)
         self.cfg = cfg
         self.params = params
+        if cfg.mapping_name != "auto":
+            # Fail fast on a bad pinned name (otherwise surfaces mid-trace).
+            from repro.kernels.flash_attention import PAPER_MAPPINGS
+
+            PAPER_MAPPINGS[cfg.mapping_name]
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.prompt_buckets = tuple(b for b in prompt_buckets if b <= cache_len)
@@ -78,6 +89,23 @@ class ServingEngine:
         self._prefill = {}
 
     # ------------------------------------------------------------------
+
+    @property
+    def mapping(self):
+        """The engine's advertised kernel schedule (stats, capacity
+        planning): the pinned paper mapping, or — under "auto" — what
+        resolve_mapping picks for the steady-state prefill shape (all
+        ``num_slots`` stripes attending ``cache_len`` keys). Resolved
+        lazily; the attention layers still re-resolve per traced shape."""
+        if self.cfg.mapping_name != "auto":
+            from repro.kernels.flash_attention import PAPER_MAPPINGS
+
+            return PAPER_MAPPINGS[self.cfg.mapping_name]
+        return kernel_ops.resolve_mapping(
+            (self.num_slots, self.cfg.n_heads, self.cfg.n_kv_heads,
+             self.cache_len, self.cache_len, self.cfg.head_dim),
+            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
+        )
 
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill:

@@ -34,6 +34,11 @@ class TrainConfig:
     moe_z_coef: float = 1e-3
     remat: bool = True
     grad_compression: str = "none"   # "none" | "int8_ef"
+    # Kernel-schedule policy for the attention layers: None keeps the model
+    # config's own ``mapping_name``; "auto" resolves the NUMA-aware mapping
+    # per shape (kernels/ops.py resolve_mapping); a PAPER_MAPPINGS name pins
+    # a fixed A/B configuration for ablations.
+    attn_mapping: Optional[str] = None
 
 
 def loss_fn(
@@ -124,6 +129,8 @@ def make_train_step(
 
     state = {"params": ..., "opt": OptState, "ef": ErrorFeedback|None}
     """
+    if tcfg.attn_mapping is not None and tcfg.attn_mapping != cfg.mapping_name:
+        cfg = dataclasses.replace(cfg, mapping_name=tcfg.attn_mapping)
 
     def train_step(state, batch):
         params, opt = state["params"], state["opt"]

@@ -20,16 +20,17 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import dataclasses
 import jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, AxisType
+from jax.sharding import NamedSharding
 
+from repro import compat
 from repro.configs import registry
 from repro.distributed import sharding as shlib
 from repro.launch import hlo_analysis
 from repro.optim.adamw import AdamWConfig
 from repro.training.train_step import TrainConfig, init_train_state, make_train_step
 
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto, AxisType.Auto))
+mesh = compat.make_mesh((2, 4), ("data", "model"),
+                        axis_types=(compat.AXIS_AUTO, compat.AXIS_AUTO))
 base = registry.get_smoke_config("llama3-8b")
 # 8 q heads / 4 kv heads so the 4-way model axis has real head structure.
 cfg0 = dataclasses.replace(base, n_heads=8, n_kv_heads=4, head_dim=16,

@@ -3,6 +3,7 @@
 import jax
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep: requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
