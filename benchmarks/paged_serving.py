@@ -1,0 +1,170 @@
+"""Paged serving benchmark: prefix sharing + NUMA page placement A/B.
+
+Drives ``PagedServingEngine`` (smoke model, CPU-runnable) over a mixed-
+length request trace with a shared system prompt, then scores the *final*
+page tables under both placement policies with the three model layers:
+
+  * ``cache.layout.decode_page_traffic``  — exact enumerated traffic,
+  * ``core.cache_sim.simulate_paged_decode`` — event-driven LRU replay,
+  * ``core.perf_model.estimate_paged_decode`` / ``estimate_dense_decode``
+    — the O(1) analytic forms ``kernels.ops.resolve_kv_layout`` ranks with.
+
+Reports prefix-cache hit rate (acceptance: > 0 on this trace) and modeled
+HBM/fabric traffic for head-aligned vs interleaved placement, plus the
+dense-stripe baseline the paged pool replaces.
+
+Run: PYTHONPATH=src python -m benchmarks.paged_serving
+Artifacts: artifacts/benchmarks/paged_serving.json
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.cache import layout
+from repro.configs import registry
+from repro.core import cache_sim, numa, perf_model
+from repro.kernels import ops as kernel_ops
+from repro.models import transformer
+from repro.serving.engine import PagedServingEngine, Request
+
+PAGE_SIZE = 16
+NUM_PAGES = 160
+TOPOS = {"mi300x": numa.MI300X, "tpu_v5p_megacore": numa.TPU_V5P_MEGACORE}
+
+
+def build_trace(cfg, rng, n_requests=12, system_len=48):
+    """Mixed-length trace: most requests share a system prompt."""
+    system = rng.integers(1, cfg.vocab, size=(system_len,))
+    reqs = []
+    for i in range(n_requests):
+        tail_len = int(rng.integers(2, 40))
+        tail = rng.integers(1, cfg.vocab, size=(tail_len,))
+        prompt = np.concatenate([system, tail]) if i % 4 else tail
+        reqs.append(Request(uid=i, prompt=prompt,
+                            max_new_tokens=int(rng.integers(3, 10))))
+    return reqs
+
+
+def capture_peak_tables(engine):
+    """Snapshot live page tables at the engine's fullest decode tick."""
+    peak = {"pages": -1, "tables": [], "lengths": []}
+    orig_step = engine.step
+
+    def step():
+        live = [
+            (list(engine.seqs[r].pages.pages), int(engine.lengths[r]) + 1)
+            for r in range(engine.max_batch)
+            if engine.active[r] and engine.seqs[r] is not None
+        ]
+        total = sum(-(-ln // engine.page_size) for _, ln in live)
+        if total > peak["pages"]:
+            peak.update(pages=total, tables=[t for t, _ in live],
+                        lengths=[ln for _, ln in live])
+        orig_step()
+
+    engine.step = step
+    return peak
+
+
+def main():
+    cfg = registry.get_smoke_config("llama3-8b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    engine = PagedServingEngine(
+        cfg, params, num_pages=NUM_PAGES, page_size=PAGE_SIZE,
+        max_batch=6, max_pages_per_seq=8, prompt_buckets=(16, 32, 64, 96),
+    )
+    reqs = build_trace(cfg, rng)
+    peak = capture_peak_tables(engine)
+    results = engine.run(reqs)
+    stats = engine.prefix_stats()
+    assert len(results) == len(reqs)
+    assert stats["prefix_hit_rate"] > 0, "trace must exercise prefix sharing"
+
+    # The paper-scale attention geometry for the traffic models (the smoke
+    # model's tiny heads would make domain counts degenerate).
+    hkv, hd = 8, 128
+    rows = []
+    payload = {
+        "page_size": PAGE_SIZE,
+        "num_pages": NUM_PAGES,
+        "requests": len(reqs),
+        "new_tokens": sum(len(r.tokens) for r in results),
+        "prefix": stats,
+        "peak_tick": {"tables": peak["tables"], "lengths": peak["lengths"]},
+        "model_geometry": {"num_kv_heads": hkv, "head_dim": hd},
+        "placement": {},
+    }
+    for tname, topo in TOPOS.items():
+        entry = {}
+        for policy in layout.PAGE_POLICIES:
+            traffic = layout.decode_page_traffic(
+                peak["tables"], peak["lengths"], num_kv_heads=hkv,
+                page_size=PAGE_SIZE, head_dim=hd, topo=topo, policy=policy)
+            sim = cache_sim.simulate_paged_decode(
+                peak["tables"], peak["lengths"], num_kv_heads=hkv,
+                page_size=PAGE_SIZE, head_dim=hd, topo=topo, policy=policy)
+            entry[policy] = {
+                "total_bytes": traffic.total_bytes,
+                "unique_bytes": traffic.unique_bytes,
+                "local_fraction": traffic.local_fraction,
+                "reuse_rate": traffic.reuse_rate,
+                "sim_hit_rate": sim.hit_rate,
+                "sim_hbm_bytes": sim.hbm_bytes,
+                "sim_remote_bytes": sim.remote_bytes,
+                "time_model_s": traffic.time(topo),
+                "sim_elapsed_s": sim.elapsed,
+            }
+            rows.append({
+                "topo": tname, "policy": policy,
+                "local%": f"{100*traffic.local_fraction:.0f}",
+                "reuse%": f"{100*traffic.reuse_rate:.0f}",
+                "HBM MiB": f"{traffic.unique_bytes/2**20:.2f}",
+                "remote MiB": f"{sim.remote_bytes/2**20:.2f}",
+                "t_model us": f"{1e6*traffic.time(topo):.2f}",
+            })
+        # dense-stripe baseline + analytic layout ranking
+        batch = len(peak["tables"])
+        mean_len = int(np.mean(peak["lengths"])) if peak["lengths"] else 1
+        capacity = engine.cache_len
+        dense = perf_model.estimate_dense_decode(
+            batch=batch, num_q_heads=4 * hkv, num_kv_heads=hkv,
+            capacity=capacity, head_dim=hd, dtype_bytes=2, topo=topo)
+        entry["dense_baseline"] = {
+            "capacity": capacity,
+            "hbm_bytes": dense.hbm_bytes,
+            "time_s": dense.time,
+        }
+        entry["resolved_layout"] = kernel_ops.resolve_kv_layout(
+            (batch, 4 * hkv, hkv, mean_len, hd), capacity=capacity,
+            page_size=PAGE_SIZE, backend="tpu" if "tpu" in tname else "gpu")
+        payload["placement"][tname] = entry
+
+    aligned = payload["placement"]["mi300x"][layout.HEAD_ALIGNED]
+    naive = payload["placement"]["mi300x"][layout.INTERLEAVED]
+    payload["headline"] = {
+        "prefix_hit_rate": stats["prefix_hit_rate"],
+        "aligned_vs_naive_time_ratio":
+            naive["time_model_s"] / aligned["time_model_s"],
+    }
+
+    print(common.render_table(
+        "Paged decode tick: NUMA-aligned vs naive page placement",
+        rows, ("topo", "policy", "local%", "reuse%", "HBM MiB",
+               "remote MiB", "t_model us")))
+    print(f"\nprefix-cache hit rate: {stats['prefix_hit_rate']:.2f} "
+          f"({int(stats['pages_reused'])}/{int(stats['prompt_pages'])} prompt pages)")
+    print(f"aligned vs naive modeled speedup (mi300x): "
+          f"{payload['headline']['aligned_vs_naive_time_ratio']:.2f}x")
+    for tname in TOPOS:
+        print(f"resolve_kv_layout[{tname}]: "
+              f"{payload['placement'][tname]['resolved_layout']}")
+    path = common.save_result("paged_serving", payload)
+    print(f"\nsaved {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,17 @@
 """Batched serving example: continuous batching over a mixed request stream.
 
-Demonstrates the serving half of the framework: bucketed prefill, slot-based
-continuous batching, EOS/max-token termination, and the decode kernel path
-(one KV fetch per (batch, kv-head) grid cell — the paper's ACC insight
-applied to decode).
+Demonstrates the serving half of the framework, both control planes:
+
+  * dense slots (``ServingEngine``): bucketed prefill, slot-based
+    continuous batching, EOS/max-token termination;
+  * paged KV (``PagedServingEngine``): page-pool admission, per-token page
+    append, and prefix sharing — the requests below share a system prompt,
+    so every request after the first reuses its pages and prefills only
+    the tail.
+
+Both ride the decode kernel path (one KV fetch per (batch, kv-head) grid
+cell — the paper's ACC insight applied to decode); the paged engine's page
+pool is head-major, i.e. NUMA head-aligned placement by construction.
 
 Run: PYTHONPATH=src python examples/serve_batched.py
 """
@@ -15,36 +23,61 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import transformer
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import PagedServingEngine, Request, ServingEngine
+
+
+def make_requests(cfg, rng, n=10, shared_prefix_len=32):
+    system = rng.integers(1, cfg.vocab, size=(shared_prefix_len,))
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(1, cfg.vocab, size=(int(rng.integers(4, 28)),))
+        prompt = np.concatenate([system, tail]) if i % 5 else tail
+        reqs.append(
+            Request(
+                uid=i,
+                prompt=prompt,
+                max_new_tokens=int(rng.integers(4, 12)),
+                temperature=0.0 if i % 2 == 0 else 0.8,
+            )
+        )
+    return reqs
+
+
+def drive(name, engine, requests):
+    print(f"[{name}] serving {len(requests)} requests")
+    t0 = time.time()
+    results = engine.run(requests)
+    dt = time.time() - t0
+    new_tokens = sum(len(r.tokens) for r in results)
+    print(f"[{name}] completed in {dt:.1f}s — {new_tokens} new tokens "
+          f"({new_tokens/dt:.1f} tok/s incl. compile)")
+    for r in sorted(results, key=lambda r: r.uid):
+        toks = [int(np.asarray(t).reshape(-1)[0]) for t in r.tokens]
+        print(f"  req {r.uid:2d} (prompt {r.prompt_len:2d} tok) -> {toks}")
+    return results
 
 
 def main():
     cfg = registry.get_smoke_config("llama3-8b")
     params = transformer.init_model(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(
+    rng = np.random.default_rng(0)
+    requests = make_requests(cfg, rng)
+
+    dense = ServingEngine(
         cfg, params, num_slots=4, cache_len=256, prompt_buckets=(32, 64),
     )
-    rng = np.random.default_rng(0)
-    requests = [
-        Request(
-            uid=i,
-            prompt=rng.integers(1, cfg.vocab, size=(int(rng.integers(8, 60)),)),
-            max_new_tokens=int(rng.integers(4, 12)),
-            temperature=0.0 if i % 2 == 0 else 0.8,
-        )
-        for i in range(10)
-    ]
-    print(f"serving {len(requests)} requests on {engine.num_slots} slots "
-          f"(continuous batching)")
-    t0 = time.time()
-    results = engine.run(requests)
-    dt = time.time() - t0
-    new_tokens = sum(len(r.tokens) for r in results)
-    print(f"completed in {dt:.1f}s — {new_tokens} new tokens "
-          f"({new_tokens/dt:.1f} tok/s incl. compile)")
-    for r in sorted(results, key=lambda r: r.uid):
-        toks = [int(np.asarray(t).reshape(-1)[0]) for t in r.tokens]
-        print(f"  req {r.uid:2d} (prompt {r.prompt_len:2d} tok) -> {toks}")
+    drive("dense", dense, [Request(**vars(r)) for r in requests])
+
+    paged = PagedServingEngine(
+        cfg, params, num_pages=96, page_size=16, max_batch=4,
+        max_pages_per_seq=8, prompt_buckets=(16, 32, 64),
+    )
+    drive("paged", paged, requests)
+    stats = paged.prefix_stats()
+    print(f"[paged] prefix hit rate {stats['prefix_hit_rate']:.2f} "
+          f"({int(stats['pages_reused'])}/{int(stats['prompt_pages'])} prompt "
+          f"pages reused), {int(stats['preemptions'])} preemptions, "
+          f"layout pick: {paged.kv_layout}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,21 @@
+"""Paged KV-cache subsystem: allocator, prefix sharing, NUMA placement.
+
+Modules:
+  pool    fixed-size page allocator (free list, refcounts, COW, page tables)
+  prefix  hash-chain longest-shared-prefix page reuse across requests
+  layout  head-aligned vs interleaved page placement + modeled traffic
+"""
+
+from repro.cache import layout, pool, prefix  # noqa: F401
+from repro.cache.layout import (  # noqa: F401
+    HEAD_ALIGNED,
+    INTERLEAVED,
+    PAGE_POLICIES,
+    PagedTraffic,
+    compare_policies,
+    decode_page_traffic,
+    domain_of_head,
+    domain_of_page,
+)
+from repro.cache.pool import NULL_PAGE, OutOfPages, PagePool, SequencePages  # noqa: F401
+from repro.cache.prefix import PrefixCache, page_hashes  # noqa: F401

@@ -1,0 +1,162 @@
+"""NUMA-aware page placement: which domain's memory stripe holds a page.
+
+The paper's WG->XCD mapping decides which *compute* domain runs each
+(batch, kv-head) attention cell; at serving scale the dual question is
+which *memory* domain holds the KV pages that cell reads. Two policies:
+
+  * ``head_aligned`` — the physical page arrays are head-major
+    ``(Hkv, num_pages, page_size, D)`` and the head axis is striped across
+    domains exactly like the compute grid (contiguous head blocks, the same
+    function ``core.placement`` uses for pod sharding). Every page a cell
+    (b, h) reads lives in the domain that executes the cell: all fetches
+    are domain-local, and pages shared between sequences (prefix sharing)
+    are cached once per owning domain.
+  * ``interleaved`` — the naive baseline: pages are handed out round-robin
+    across domain stripes irrespective of head (physical layout
+    ``(num_pages, Hkv, page_size, D)``, page -> domain = pid % domains).
+    A cell's page walk scatters over every domain: ``(d-1)/d`` of the bytes
+    cross the inter-domain fabric, and a shared page occupies *every*
+    domain's cache instead of one.
+
+``decode_page_traffic`` charges a mixed decode batch (real page tables from
+the serving engine, or synthetic ones) under either policy, counting
+local/remote bytes with once-per-(domain, page) reuse for pages shared
+across sequences — the paged analogue of ``kernels.hbm_block_fetches``.
+``core.perf_model.estimate_paged_decode`` is the O(1) analytic form and
+``core.cache_sim.simulate_paged_decode`` the event-driven cross-check; both
+consume the ``domain_of_head`` / ``domain_of_page`` functions defined here
+so the three layers can never disagree on the placement arithmetic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence
+
+from repro.core.numa import Topology
+
+HEAD_ALIGNED = "head_aligned"
+INTERLEAVED = "interleaved"
+
+PAGE_POLICIES = (HEAD_ALIGNED, INTERLEAVED)
+
+
+def domain_of_head(head: int, num_kv_heads: int, num_domains: int) -> int:
+    """Compute/memory domain owning a KV head: contiguous head blocks (the
+    head-first grid's PARALLEL split, and ``core.placement``'s shard map)."""
+    if num_kv_heads >= num_domains:
+        return head * num_domains // num_kv_heads
+    return head % num_domains
+
+
+def domain_of_page(
+    pid: int, head: int, policy: str, num_kv_heads: int, num_domains: int
+) -> int:
+    """Memory domain holding physical page ``pid`` of head ``head``."""
+    if policy == HEAD_ALIGNED:
+        return domain_of_head(head, num_kv_heads, num_domains)
+    if policy == INTERLEAVED:
+        return pid % num_domains
+    raise ValueError(f"unknown page placement policy {policy!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedTraffic:
+    """Modeled bytes for one decode tick over paged KV."""
+
+    policy: str
+    total_bytes: int     # all K/V bytes the grid cells request
+    local_bytes: int     # served from the cell's own domain stripe
+    remote_bytes: int    # crossed the inter-domain fabric
+    unique_bytes: int    # after once-per-(domain, head, page) coalescing
+    reuse_hits: int      # page fetches saved by sharing within the tick
+    page_fetches: int    # unique (domain, head, page) fills
+
+    @property
+    def local_fraction(self) -> float:
+        return self.local_bytes / self.total_bytes if self.total_bytes else 1.0
+
+    @property
+    def reuse_rate(self) -> float:
+        total = self.reuse_hits + self.page_fetches
+        return self.reuse_hits / total if total else 0.0
+
+    def time(self, topo: Topology) -> float:
+        """Memory-side seconds for the tick: local bytes ride HBM, remote
+        bytes additionally squeeze through the per-domain fabric link."""
+        t_hbm = self.unique_bytes / topo.hbm_bw
+        remote_unique = self.unique_bytes * (
+            self.remote_bytes / self.total_bytes if self.total_bytes else 0.0
+        )
+        t_link = remote_unique / max(topo.link_bw * topo.num_domains, 1.0)
+        return t_hbm + t_link
+
+
+def decode_page_traffic(
+    page_tables: Sequence[Sequence[int]],
+    lengths: Sequence[int],
+    *,
+    num_kv_heads: int,
+    page_size: int,
+    head_dim: int,
+    topo: Topology,
+    policy: str = HEAD_ALIGNED,
+    dtype_bytes: int = 2,
+) -> PagedTraffic:
+    """Charge one decode tick: every (sequence, kv head) cell walks its live
+    pages. A (domain, head, page) triple is fetched from memory once per
+    tick (later readers hit the domain cache) — that is where prefix-shared
+    pages pay off, and only ``head_aligned`` keeps them in a single domain.
+    """
+    page_bytes = 2 * page_size * head_dim * dtype_bytes  # K and V
+    seen = set()
+    total = local = unique = 0
+    reuse_hits = 0
+    for pages, length in zip(page_tables, lengths):
+        live = -(-int(length) // page_size)
+        for h in range(num_kv_heads):
+            cell_dom = domain_of_head(h, num_kv_heads, topo.num_domains)
+            for pid in list(pages)[:live]:
+                page_dom = domain_of_page(
+                    int(pid), h, policy, num_kv_heads, topo.num_domains
+                )
+                total += page_bytes
+                if page_dom == cell_dom:
+                    local += page_bytes
+                key = (cell_dom, h, int(pid))
+                if key in seen:
+                    reuse_hits += 1
+                else:
+                    seen.add(key)
+                    unique += page_bytes
+    return PagedTraffic(
+        policy=policy,
+        total_bytes=total,
+        local_bytes=local,
+        remote_bytes=total - local,
+        unique_bytes=unique,
+        reuse_hits=reuse_hits,
+        page_fetches=len(seen),
+    )
+
+
+def compare_policies(
+    page_tables: Sequence[Sequence[int]],
+    lengths: Sequence[int],
+    *,
+    num_kv_heads: int,
+    page_size: int,
+    head_dim: int,
+    topo: Topology,
+    dtype_bytes: int = 2,
+) -> Dict[str, PagedTraffic]:
+    """Both placement policies over the same tick (benchmark A/B)."""
+    return {
+        policy: decode_page_traffic(
+            page_tables, lengths,
+            num_kv_heads=num_kv_heads, page_size=page_size,
+            head_dim=head_dim, topo=topo, policy=policy,
+            dtype_bytes=dtype_bytes,
+        )
+        for policy in PAGE_POLICIES
+    }

@@ -1,0 +1,187 @@
+"""Fixed-size KV page allocator: free list, ref counts, copy-on-write.
+
+The control plane of the paged KV cache (host-side, pure Python/numpy — the
+actual K/V data lives in jnp arrays owned by the engine and indexed by the
+page ids handed out here). Design mirrors vLLM's block manager, shrunk to
+what the NUMA story needs:
+
+  * a pool of ``num_pages`` physical pages of ``page_size`` tokens each,
+    LIFO free list (hot pages are reused first — they are the ones most
+    likely still resident in a domain's cache),
+  * physical page 0 is the reserved **null page**: never allocated, it is
+    the write/read sink for inactive decode rows so the jitted decode step
+    can scatter unconditionally without corrupting live data,
+  * per-page reference counts. A page with ``refcount > 1`` is shared
+    (prefix cache and/or forked sequences) and therefore read-only; the
+    pool's :meth:`ensure_writable` implements copy-on-write by allocating a
+    fresh page and telling the caller which physical copy to perform,
+  * per-sequence page tables (:class:`SequencePages`): the ordered list of
+    physical pages backing one growing sequence, plus its token length.
+
+The pool never touches array data; COW and page writes surface as
+``(src_page, dst_page)`` copy instructions the engine applies to its jnp
+page arrays. That split keeps the allocator exactly testable and the jitted
+compute free of host round-trips beyond the page-table ints it already
+needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+NULL_PAGE = 0
+
+
+class OutOfPages(RuntimeError):
+    """Raised when an allocation cannot be satisfied; the serving engine
+    reacts by evicting prefix-cache pages and/or preempting sequences."""
+
+
+@dataclasses.dataclass
+class SequencePages:
+    """Page table of one sequence: physical pages, in logical order."""
+
+    pages: List[int]
+    length: int = 0  # tokens currently stored
+
+    def num_pages(self) -> int:
+        return len(self.pages)
+
+    def tail_page(self) -> int:
+        if not self.pages:
+            raise ValueError("empty sequence has no tail page")
+        return self.pages[-1]
+
+
+class PagePool:
+    """Allocator for ``num_pages`` physical pages of ``page_size`` tokens."""
+
+    def __init__(self, num_pages: int, page_size: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        if page_size < 1:
+            raise ValueError("page_size must be positive")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        # LIFO free list; page 0 reserved as the null page.
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._refcount = [0] * num_pages
+        self._refcount[NULL_PAGE] = 1  # permanently pinned
+
+    # -- raw page ops -------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def refcount(self, pid: int) -> int:
+        return self._refcount[pid]
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise OutOfPages(
+                f"no free pages ({self.num_pages - 1} total in pool)"
+            )
+        pid = self._free.pop()
+        assert self._refcount[pid] == 0
+        self._refcount[pid] = 1
+        return pid
+
+    def incref(self, pid: int) -> None:
+        if pid == NULL_PAGE:
+            return
+        if self._refcount[pid] <= 0:
+            raise ValueError(f"incref on free page {pid}")
+        self._refcount[pid] += 1
+
+    def decref(self, pid: int) -> bool:
+        """Drop one reference; returns True when the page was freed."""
+        if pid == NULL_PAGE:
+            return False
+        rc = self._refcount[pid]
+        if rc <= 0:
+            raise ValueError(f"decref on free page {pid}")
+        self._refcount[pid] = rc - 1
+        if rc == 1:
+            self._free.append(pid)
+            return True
+        return False
+
+    # -- sequence ops -------------------------------------------------------
+
+    def pages_needed(self, num_tokens: int) -> int:
+        return -(-num_tokens // self.page_size)
+
+    def can_allocate(self, num_tokens: int, reserve: int = 0) -> bool:
+        return self.free_pages >= self.pages_needed(num_tokens) + reserve
+
+    def allocate_sequence(
+        self, num_tokens: int, shared_prefix: Optional[List[int]] = None
+    ) -> SequencePages:
+        """Page table for a ``num_tokens``-token sequence.
+
+        ``shared_prefix``: already-allocated pages (from the prefix cache)
+        covering the first ``len(shared_prefix) * page_size`` tokens; the
+        pool takes one reference on each. Remaining pages come off the free
+        list; on exhaustion everything is rolled back and OutOfPages raised.
+        """
+        shared = list(shared_prefix or [])
+        need = self.pages_needed(num_tokens)
+        if len(shared) > need:
+            raise ValueError("shared prefix longer than the sequence")
+        fresh: List[int] = []
+        try:
+            for _ in range(need - len(shared)):
+                fresh.append(self.alloc())
+        except OutOfPages:
+            for pid in fresh:
+                self.decref(pid)
+            raise
+        for pid in shared:
+            self.incref(pid)
+        return SequencePages(pages=shared + fresh, length=num_tokens)
+
+    def append_token(self, seq: SequencePages) -> Tuple[int, int, Optional[Tuple[int, int]]]:
+        """Grow ``seq`` by one token; returns ``(page, offset, cow)``.
+
+        ``page``/``offset`` locate the new token's slot. ``cow`` is None or a
+        ``(src, dst)`` physical copy the engine must apply *before* writing —
+        emitted when the token lands in a shared page (copy-on-write). A new
+        page is allocated when the token starts a fresh page boundary.
+        """
+        pos = seq.length
+        cow = None
+        if pos % self.page_size == 0:
+            seq.pages.append(self.alloc())
+        else:
+            tail = seq.tail_page()
+            if self._refcount[tail] > 1:
+                dst = self.alloc()
+                self.decref(tail)
+                seq.pages[-1] = dst
+                cow = (tail, dst)
+        seq.length = pos + 1
+        return seq.tail_page(), pos % self.page_size, cow
+
+    def fork(self, seq: SequencePages) -> SequencePages:
+        """A new sequence sharing every page of ``seq`` (beam/parallel
+        sampling). All pages — including the partial tail — are shared;
+        the first divergent append triggers COW on the tail."""
+        for pid in seq.pages:
+            self.incref(pid)
+        return SequencePages(pages=list(seq.pages), length=seq.length)
+
+    def release(self, seq: SequencePages) -> int:
+        """Drop the sequence's references; returns #pages actually freed
+        (shared pages survive under their remaining references)."""
+        freed = 0
+        for pid in seq.pages:
+            freed += bool(self.decref(pid))
+        seq.pages = []
+        seq.length = 0
+        return freed

@@ -322,6 +322,99 @@ def default_max_wgs(workload: AttentionWorkload, budget_accesses: int = 3_000_00
     return max(int(budget_accesses / max(mean, 1)), min(min_wgs, 4096))
 
 
+# -----------------------------------------------------------------------------
+# Paged decode: page-granular LRU replay of a serving tick
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PagedSimResult:
+    """One simulated decode tick over paged KV under a placement policy."""
+
+    policy: str
+    hits: int            # page reads served by a domain's cache
+    misses: int          # page fills from memory
+    hbm_bytes: int
+    local_bytes: int     # fills served from the reading domain's own stripe
+    remote_bytes: int    # fills crossing the inter-domain fabric
+    elapsed: float       # seconds (memory-side roofline w/ link term)
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    @property
+    def local_fraction(self) -> float:
+        tot = self.local_bytes + self.remote_bytes
+        return self.local_bytes / tot if tot else 1.0
+
+
+def simulate_paged_decode(
+    page_tables,
+    lengths,
+    *,
+    num_kv_heads: int,
+    page_size: int,
+    head_dim: int,
+    topo: Topology,
+    policy: str = "head_aligned",
+    dtype_bytes: int = 2,
+    group_size: int = 1,
+) -> PagedSimResult:
+    """Replay one decode tick: every (sequence, kv head) cell streams its
+    live pages through its domain's LRU. The event-level cross-check of
+    ``perf_model.estimate_paged_decode`` — it sees what the analytic form
+    assumes away: capacity evictions when the shared working set outgrows
+    a domain's cache, and the cache-footprint asymmetry of the two
+    placement policies (an interleaved shared page lands in every reader
+    domain's cache; a head-aligned one in exactly one).
+    """
+    from repro.cache import layout as layout_lib
+
+    d = max(topo.num_domains, 1)
+    page_bytes = 2 * page_size * head_dim * dtype_bytes
+    lrus = [_LRU(topo.cache_bytes) for _ in range(d)]
+    hits = misses = 0
+    local_bytes = remote_bytes = 0
+    flops = 0.0
+    # Head-first dispatch: cell (b, h) runs in head h's domain. Walk cells
+    # batch-innermost (all sequences of one head back to back) — the order
+    # the PARALLEL (b, h) grid dims produce within one domain.
+    for h in range(num_kv_heads):
+        cell_dom = layout_lib.domain_of_head(h, num_kv_heads, d)
+        lru = lrus[cell_dom]
+        for pages, length in zip(page_tables, lengths):
+            live = -(-int(length) // page_size)
+            flops += 4.0 * group_size * int(length) * head_dim
+            for pid in list(pages)[:live]:
+                key = (h, int(pid))
+                if lru.touch(key):
+                    hits += 1
+                    continue
+                misses += 1
+                lru.insert(key, page_bytes)
+                page_dom = layout_lib.domain_of_page(
+                    int(pid), h, policy, num_kv_heads, d
+                )
+                if page_dom == cell_dom:
+                    local_bytes += page_bytes
+                else:
+                    remote_bytes += page_bytes
+    hbm_bytes = local_bytes + remote_bytes
+    t_mem = hbm_bytes / topo.hbm_bw + remote_bytes / max(topo.link_bw * d, 1.0)
+    elapsed = max(flops / topo.peak_flops, t_mem)
+    return PagedSimResult(
+        policy=policy,
+        hits=hits,
+        misses=misses,
+        hbm_bytes=hbm_bytes,
+        local_bytes=local_bytes,
+        remote_bytes=remote_bytes,
+        elapsed=elapsed,
+    )
+
+
 def compare_mappings(
     workload: AttentionWorkload,
     topo: Topology,

@@ -103,6 +103,104 @@ def estimate(
     )
 
 
+# -----------------------------------------------------------------------------
+# Decode-over-KV-cache estimates: dense stripes vs paged pools
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeEstimate:
+    """Analytic model of one decode tick (one new token per sequence)."""
+
+    layout: str          # "dense" | "paged:head_aligned" | "paged:interleaved"
+    time: float          # seconds per tick
+    hbm_bytes: float     # bytes filled from memory (after domain-level reuse)
+    link_bytes: float    # bytes crossing the inter-domain fabric
+    flops: float
+    reuse_rate: float    # fraction of page reads served by domain reuse
+
+    @property
+    def tokens_per_second(self) -> float:
+        return 1.0 / self.time if self.time else 0.0
+
+
+def estimate_dense_decode(
+    *,
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    capacity: int,
+    head_dim: int,
+    dtype_bytes: int,
+    topo: Topology,
+) -> DecodeEstimate:
+    """Dense per-slot stripes: every (batch, kv-head) cell streams its whole
+    ``capacity``-token stripe — the pipeline copies every chunk regardless
+    of the live length (masking skips compute, not traffic). This is the
+    cost the paged layout exists to avoid."""
+    kv_bytes = 2.0 * batch * num_kv_heads * capacity * head_dim * dtype_bytes
+    flops = 4.0 * batch * num_q_heads * capacity * head_dim
+    t = max(flops / topo.peak_flops, kv_bytes / topo.hbm_bw)
+    return DecodeEstimate(
+        layout="dense", time=t, hbm_bytes=kv_bytes, link_bytes=0.0,
+        flops=flops, reuse_rate=0.0,
+    )
+
+
+def estimate_paged_decode(
+    *,
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    mean_len: int,
+    page_size: int,
+    head_dim: int,
+    dtype_bytes: int,
+    topo: Topology,
+    policy: str = "head_aligned",
+    shared_prefix_len: int = 0,
+) -> DecodeEstimate:
+    """Paged pool: each cell walks only its live pages; the first
+    ``shared_prefix_len`` tokens are one set of physical pages shared by all
+    ``batch`` sequences, fetched once per owning domain and then reused.
+
+    ``head_aligned`` placement keeps every page in its cell's domain (all
+    local; a shared page occupies exactly one domain's cache).
+    ``interleaved`` stripes pages round-robin, so ``(d-1)/d`` of the bytes
+    cross the fabric — the modeled cost ``cache.layout`` assigns the naive
+    allocator. Matches ``cache.layout.decode_page_traffic`` on the uniform
+    trace by construction (cross-checked in tests)."""
+    from repro.cache import layout as layout_lib
+
+    d = max(topo.num_domains, 1)
+    page_bytes = 2.0 * page_size * head_dim * dtype_bytes
+    live_pages = -(-mean_len // page_size)
+    shared_pages = min(shared_prefix_len // page_size, live_pages)
+    private_pages = live_pages - shared_pages
+
+    # Per kv head: private pages fetched once per sequence; shared pages
+    # fetched once per tick (every head lives in exactly one domain under
+    # the head-first grid, so domain-level reuse collapses the batch).
+    fetches = num_kv_heads * (batch * private_pages + shared_pages)
+    reads = num_kv_heads * batch * live_pages
+    hbm_bytes = fetches * page_bytes
+    if policy == layout_lib.HEAD_ALIGNED:
+        link_bytes = 0.0
+    elif policy == layout_lib.INTERLEAVED:
+        link_bytes = hbm_bytes * (d - 1) / d
+    else:
+        raise ValueError(f"unknown page placement policy {policy!r}")
+
+    flops = 4.0 * batch * num_q_heads * mean_len * head_dim
+    t_mem = hbm_bytes / topo.hbm_bw + link_bytes / max(topo.link_bw * d, 1.0)
+    t = max(flops / topo.peak_flops, t_mem)
+    return DecodeEstimate(
+        layout=f"paged:{policy}", time=t, hbm_bytes=hbm_bytes,
+        link_bytes=link_bytes, flops=flops,
+        reuse_rate=1.0 - fetches / reads if reads else 0.0,
+    )
+
+
 def relative_performance(
     wl: AttentionWorkload,
     topo: Topology,

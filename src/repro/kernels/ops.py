@@ -23,9 +23,15 @@ attention shape it scores every (grid order x KV residency x block size)
 candidate with the analytic NUMA model (``core.perf_model``, cross-validated
 against ``core.cache_sim``) plus the static HBM-traffic model
 (``hbm_block_fetches``) and returns the best ``MappingConfig``. Results are
-LRU-cached per shape/backend, so jit traces pay the cost once. Passing
+LRU-cached per shape/backend — decode-ness and sliding window are part of
+the key, so decode shapes resolve distinctly from prefill. Passing
 ``mapping=None`` (the default) to ``flash_attention`` routes through it —
 there is deliberately no module-level default mapping anymore.
+
+Serving adds the paged pair: ``paged_decode_attention`` dispatches the
+page-table kernel (``paged_decode_attention.py``) the same way, and
+``resolve_kv_layout`` ranks paged (head-aligned / interleaved placement)
+against dense stripes with ``core.perf_model``'s paged decode estimates.
 """
 
 from __future__ import annotations
@@ -39,6 +45,7 @@ import jax.numpy as jnp
 from repro import compat
 from repro.kernels import ref as ref_mod
 from repro.kernels.decode_attention import flash_decode
+from repro.kernels.paged_decode_attention import paged_flash_decode
 from repro.kernels.flash_attention import (
     BLOCK_FIRST,
     HEAD_FIRST,
@@ -97,6 +104,8 @@ def _resolve_mapping_cached(
     dtype_bytes: int,
     backend: str,
     vmem_budget_bytes: int,
+    decode: bool,
+    window: Optional[int],
 ) -> MappingConfig:
     from repro.core import perf_model
     from repro.core.cache_sim import AttentionWorkload
@@ -104,6 +113,14 @@ def _resolve_mapping_cached(
 
     topo = _topology_for(backend)
     group = max(1, num_q_heads // max(num_kv_heads, 1))
+    # A sliding window bounds the KV each row actually touches: score (and
+    # choose blocks for) the live span, rounded up to a whole tile, not the
+    # full cache. Decode shapes attend every prior position, so they score
+    # non-causal — a causal model would halve their tile count and pick
+    # systematically undersized blocks.
+    causal = not decode
+    if window is not None and window > 0:
+        seq_kv = min(seq_kv, -(-(window + (0 if decode else seq_q)) // 128) * 128)
 
     def _clamp(block, seq):
         # Never emit a block shorter than the sequence rounded up to the
@@ -151,7 +168,7 @@ def _resolve_mapping_cached(
                     head_dim=head_dim,
                     block_m=bm_eff,
                     block_n=bn_eff,
-                    causal=True,
+                    causal=causal,
                     dtype_bytes=dtype_bytes,
                 )
                 est = perf_model.estimate(_PAPER_NAME[order], wl, topo)
@@ -178,6 +195,8 @@ def resolve_mapping(
     *,
     dtype_bytes: int = 2,
     vmem_budget_bytes: int = MappingConfig.vmem_budget_bytes,
+    decode: bool = False,
+    window: Optional[int] = None,
 ) -> MappingConfig:
     """Pick the best ``MappingConfig`` for an attention shape.
 
@@ -187,6 +206,12 @@ def resolve_mapping(
     one head fits the VMEM budget (``MappingConfig.resolve_resident``), and
     falls back to a streamed head-first sweep otherwise; block sizes are
     chosen by the HBM-traffic model. Results are LRU-cached.
+
+    ``decode`` / ``window`` are part of the cache key and the scoring:
+    decode shapes score non-causal (every prior position is live) and a
+    sliding window truncates the scored KV span — so a decode-over-long-
+    cache shape resolves to a different schedule than a prefill of the same
+    nominal (seq_q, seq_kv).
     """
     b, hq, hkv, sq, skv, d = (int(x) for x in shape)
     return _resolve_mapping_cached(
@@ -194,6 +219,8 @@ def resolve_mapping(
         int(dtype_bytes),
         backend or compat.default_backend(),
         int(vmem_budget_bytes),
+        bool(decode),
+        int(window) if window else None,
     )
 
 
@@ -247,7 +274,7 @@ _pallas_attention.defvjp(_pallas_attention_fwd, _pallas_attention_bwd)
 
 
 def _xla_flash(q, k, v, *, causal, window, softcap, scale, kv_len, chunk=1024,
-               unroll=False):
+               unroll=False, q_offset=0):
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     g = hq // hkv
@@ -258,7 +285,9 @@ def _xla_flash(q, k, v, *, causal, window, softcap, scale, kv_len, chunk=1024,
     qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
     if scale is None:
         scale = 1.0 / d**0.5
-    rows = jnp.arange(sq)[:, None]
+    # Rows sit at absolute positions q_offset + i (prefix-extension prefill:
+    # the query block starts after an already-cached prefix).
+    rows = q_offset + jnp.arange(sq)[:, None]
 
     def step(carry, xs):
         m_prev, l_prev, acc = carry
@@ -303,21 +332,23 @@ def _xla_flash(q, k, v, *, causal, window, softcap, scale, kv_len, chunk=1024,
     return o.astype(q.dtype)
 
 
-def _xla_flash_tri(q, k, v, *, causal, window, softcap, scale, kv_len, chunk=1024):
+def _xla_flash_tri(q, k, v, *, causal, window, softcap, scale, kv_len, chunk=1024,
+                   q_offset=0):
     """Causal-triangular variant: q chunk i only attends kv[: (i+1)*chunk].
 
     Unrolled over q chunks with per-iteration static shapes, so the
     above-diagonal half of the score matrix is never built — the compiled
     HLO carries ~half the attention FLOPs of the scan variant on causal
-    training shapes. Falls back to the scan variant when not causal or when
-    q/kv lengths differ (prefix-cache prefill).
+    training shapes. Falls back to the scan variant when not causal, when
+    q/kv lengths differ, or when the query block is offset (prefix-cache
+    extension prefill).
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
-    if not causal or sq != skv or sq % chunk:
+    if not causal or sq != skv or sq % chunk or q_offset:
         return _xla_flash(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, kv_len=kv_len, chunk=chunk,
+            scale=scale, kv_len=kv_len, chunk=chunk, q_offset=q_offset,
         )
     nq = sq // chunk
     outs = []
@@ -387,29 +418,39 @@ def flash_attention(
     mapping: Optional[MappingConfig] = None,
     impl: str = "auto",
     chunk_unroll: bool = False,
+    q_offset: int = 0,
 ) -> jnp.ndarray:
     """Multi-head / grouped-query attention. q: (B,Hq,Sq,D); k,v: (B,Hkv,Skv,D).
 
     ``mapping=None`` auto-selects the NUMA-aware schedule for this shape via
     :func:`resolve_mapping`.
+
+    ``q_offset`` places the query block at absolute positions
+    ``[q_offset, q_offset + Sq)`` against a longer KV (prefix-extension
+    prefill over a shared-prefix cache). Supported on the xla/ref paths; the
+    Pallas forward does not carry the offset yet, so a nonzero offset routes
+    to the XLA flash path (ROADMAP: paged prefill kernel).
     """
     if impl == "auto":
         impl = "pallas" if _on_tpu() else "xla_flash"
+    if q_offset and impl == "pallas":
+        impl = "xla_flash"
     b, hq, sq, d = q.shape
     skv = k.shape[2]
     if impl == "ref":
         return ref_mod.attention(
-            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale
+            q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
+            q_offset=q_offset,
         )
     if impl == "xla_flash":
         return _xla_flash(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, kv_len=skv, unroll=chunk_unroll,
+            scale=scale, kv_len=skv, unroll=chunk_unroll, q_offset=q_offset,
         )
     if impl == "xla_flash_tri":
         return _xla_flash_tri(
             q, k, v, causal=causal, window=window, softcap=softcap,
-            scale=scale, kv_len=skv,
+            scale=scale, kv_len=skv, q_offset=q_offset,
         )
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
@@ -450,10 +491,132 @@ def decode_attention(
         )
     if impl != "pallas":
         raise ValueError(f"unknown impl {impl!r}")
-    smax = k_cache.shape[2]
-    chunk = 512 if smax % 512 == 0 else smax
+    b, hq, d = q.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    # The KV chunk is the resolver's block_n for this decode shape (decode
+    # and window are part of the resolution key, so a windowed decode picks
+    # its schedule independently of the prefill of the same cache).
+    mapping = resolve_mapping(
+        (b, hq, hkv, 1, smax, d),
+        dtype_bytes=q.dtype.itemsize, decode=True, window=window,
+    )
+    chunk = min(mapping.block_n, smax)
+    if smax % chunk:
+        # Decode is the serving hot loop: prefer a chunk that divides the
+        # cache (largest sublane-multiple divisor <= block_n) so no copy
+        # happens per tick. Only truly odd capacities pay the pad-to-chunk
+        # copy; the padded tail sits beyond every ``lengths`` entry, so
+        # masking never admits it.
+        divisor = next(
+            (c for c in range(chunk, 7, -1) if smax % c == 0 and c % 8 == 0),
+            None,
+        )
+        if divisor is not None:
+            chunk = divisor
+        else:
+            k_cache = _pad_to(k_cache, 2, chunk)
+            v_cache = _pad_to(v_cache, 2, chunk)
     return flash_decode(
         q, k_cache, v_cache, lengths,
         softcap=softcap, scale=scale, window=window, chunk=chunk,
         interpret=compat.use_interpret(),
     )
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Paged single-token decode. q: (B,Hq,D); k/v_pages: (Hkv,P,ps,D)
+    head-major; page_table: (B,max_pages) physical ids (null-page padded);
+    lengths: (B,). The pallas path consumes the page table natively via
+    scalar prefetch; xla/ref gathers a dense view first (oracle/dry-run)."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "xla"
+    if impl == "xla" or impl == "ref":
+        return ref_mod.paged_decode_attention(
+            q, k_pages, v_pages, page_table, lengths,
+            softcap=softcap, scale=scale, window=window,
+        )
+    if impl != "pallas":
+        raise ValueError(f"unknown impl {impl!r}")
+    return paged_flash_decode(
+        q, k_pages, v_pages, page_table, lengths,
+        softcap=softcap, scale=scale, window=window,
+        interpret=compat.use_interpret(),
+    )
+
+
+# -----------------------------------------------------------------------------
+# KV-layout resolution: paged vs dense, placement policy
+# -----------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=256)
+def _resolve_kv_layout_cached(
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    mean_len: int,
+    capacity: int,
+    page_size: int,
+    head_dim: int,
+    dtype_bytes: int,
+    backend: str,
+    shared_prefix_len: int,
+) -> Tuple[str, float, float]:
+    from repro.core import perf_model
+
+    topo = _topology_for(backend)
+    dense = perf_model.estimate_dense_decode(
+        batch=batch, num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
+        capacity=capacity, head_dim=head_dim, dtype_bytes=dtype_bytes,
+        topo=topo,
+    )
+    candidates = {"dense": dense.time}
+    for policy in ("head_aligned", "interleaved"):
+        est = perf_model.estimate_paged_decode(
+            batch=batch, num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
+            mean_len=mean_len, page_size=page_size, head_dim=head_dim,
+            dtype_bytes=dtype_bytes, topo=topo, policy=policy,
+            shared_prefix_len=shared_prefix_len,
+        )
+        candidates[f"paged:{policy}"] = est.time
+    best = min(candidates, key=candidates.get)
+    return best, candidates[best], candidates["dense"]
+
+
+def resolve_kv_layout(
+    shape: Tuple[int, int, int, int, int],
+    *,
+    capacity: int,
+    page_size: int = 64,
+    dtype_bytes: int = 2,
+    backend: Optional[str] = None,
+    shared_prefix_len: int = 0,
+) -> str:
+    """Rank KV layouts for a decode mix; returns ``"dense"``,
+    ``"paged:head_aligned"`` or ``"paged:interleaved"``.
+
+    ``shape`` is ``(batch, num_q_heads, num_kv_heads, mean_len, head_dim)``
+    — the decode batch and its mean live sequence length; ``capacity`` is
+    the dense per-slot stripe the paged layout would replace. Scored with
+    ``core.perf_model``'s paged/dense decode estimates (page-granular
+    traffic, once-per-domain shared-prefix reuse, link-cost for remote
+    pages), the decode analogue of :func:`resolve_mapping`'s ranking."""
+    b, hq, hkv, mean_len, head_dim = (int(x) for x in shape)
+    best, _, _ = _resolve_kv_layout_cached(
+        b, hq, hkv, mean_len, int(capacity), int(page_size),
+        head_dim, int(dtype_bytes),
+        backend or compat.default_backend(),
+        int(shared_prefix_len),
+    )
+    return best

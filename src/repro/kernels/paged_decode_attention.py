@@ -1,0 +1,183 @@
+"""Paged flash-decode Pallas kernel: decode over a page-table-indirected KV.
+
+The serving-native sibling of ``decode_attention.py``. There the KV cache is
+a dense per-slot stripe ``(B, Hkv, Smax, D)``; here it is a pool of
+fixed-size pages ``(Hkv, num_pages, page_size, D)`` plus a per-sequence page
+table, so sequences grow page-at-a-time, share prefix pages, and never
+reserve capacity they don't use. The kernel consumes that layout *natively*:
+the page table rides in SMEM via scalar prefetch and the K/V BlockSpec index
+maps read it directly —
+
+    index_map = lambda b, h, p, pt, lens: (h, pt[b, p], 0, 0)
+
+so the Pallas pipeline DMAs exactly the pages the sequence owns, in logical
+order, with no gather/copy materializing a dense view first.
+
+The NUMA structure of the dense kernel is preserved:
+  * grid (B, Hkv, max_pages) is head-first — one ACC still owns each
+    (batch, kv-head) cell, and the leading two dims stay PARALLEL so a
+    megacore splits at ACC boundaries;
+  * the physical page array is **head-major**: all pages of one KV head are
+    contiguous, i.e. they live in that head's domain stripe
+    (``cache.layout.HEAD_ALIGNED``). The cell and its pages share a domain
+    by construction — the serving-scale form of the paper's WG->XCD
+    co-location;
+  * the GQA group is the q block, so each page is fetched once per
+    (batch, kv-head), never per q-head.
+
+Out-of-range page-table entries must hold a valid physical id (the engine
+pads with the reserved null page 0): the index map still issues the copy,
+and the in-kernel relevance test skips the compute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    pt_ref, len_ref,            # scalar-prefetch: (B, max_pages), (B,)
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale, softcap, window, page_size, max_pages,
+):
+    b_idx = pl.program_id(0)
+    p_idx = pl.program_id(2)
+    length = len_ref[b_idx]
+
+    @pl.when(p_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    page_start = p_idx * page_size
+    relevant = page_start < length
+    if window is not None and window > 0:
+        relevant &= page_start + page_size - 1 >= length - window
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)      # (Gp, D)
+        k = k_ref[0, 0].astype(jnp.float32)      # (page_size, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap is not None and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+        valid = pos < length
+        if window is not None and window > 0:
+            valid &= pos > length - 1 - window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[:, 0:1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = jnp.broadcast_to(
+            l_ref[:, 0:1] * alpha + jnp.sum(p, axis=1, keepdims=True), l_ref.shape
+        )
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(p_idx == max_pages - 1)
+    def _emit():
+        l = l_ref[:, 0:1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def paged_flash_decode(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (B, Hq, D); k/v_pages: (Hkv, P, page_size, D) head-major;
+    page_table: (B, max_pages) int32 physical page ids (entries past a
+    sequence's live pages must point at a valid page — the null page);
+    lengths: (B,) int32. Returns (B, Hq, D).
+    """
+    b, hq, d = q.shape
+    hkv, num_pages, page_size, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / d**0.5
+    if page_size % 8:
+        raise ValueError(f"page_size {page_size} must be a sublane multiple (8)")
+
+    gp = max(8, -(-group // 8) * 8)  # pad GQA group to the sublane quantum
+    qg = q.reshape(b, hkv, group, d)
+    if gp != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - group), (0, 0)))
+
+    fn = pl.pallas_call(
+        functools.partial(
+            _paged_decode_kernel,
+            scale=scale, softcap=softcap, window=window,
+            page_size=page_size, max_pages=max_pages,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, hkv, max_pages),
+            in_specs=[
+                pl.BlockSpec((1, 1, gp, d), lambda b_, h_, p_, pt, ln: (b_, h_, 0, 0)),
+                pl.BlockSpec(
+                    (1, 1, page_size, d),
+                    lambda b_, h_, p_, pt, ln: (h_, pt[b_, p_], 0, 0),
+                ),
+                pl.BlockSpec(
+                    (1, 1, page_size, d),
+                    lambda b_, h_, p_, pt, ln: (h_, pt[b_, p_], 0, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, gp, d), lambda b_, h_, p_, pt, ln: (b_, h_, 0, 0)
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((gp, d), jnp.float32),
+                pltpu.VMEM((gp, 128), jnp.float32),
+                pltpu.VMEM((gp, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gp, d), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=(
+                compat.PARALLEL,
+                compat.PARALLEL,
+                compat.ARBITRARY,
+            ),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=int(4.0 * b * hq * max_pages * page_size * d),
+            bytes_accessed=int(
+                q.dtype.itemsize
+                * b * (2 * hkv * max_pages * page_size * d + 2 * hq * d)
+            ),
+            transcendentals=int(b * hq * max_pages * page_size),
+        ),
+        interpret=interpret,
+        name="paged_flash_decode",
+    )
+    out = fn(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+             qg, k_pages, v_pages)
+    return out[:, :, :group, :].reshape(b, hq, d)

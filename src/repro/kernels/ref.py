@@ -140,7 +140,43 @@ def decode_attention(
         valid &= pos > (lengths[:, None, None] - 1 - window)
     s = jnp.where(valid, s, NEG_INF)
     m = jnp.max(s, axis=-1, keepdims=True)
-    p = jnp.exp(s - m)
-    o = jnp.einsum("bhk,bhkd->bhd", p / jnp.sum(p, axis=-1, keepdims=True),
+    # Zero masked probabilities and guard the normalizer so a fully-masked
+    # row (length == 0 slot) yields exactly 0, matching the flash kernels'
+    # l == 0 emit path, instead of a mean over garbage cache rows.
+    p = jnp.where(valid, jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhk,bhkd->bhd", p / jnp.where(l == 0.0, 1.0, l),
                    v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def gather_pages(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """Materialize a dense cache view from head-major pages.
+
+    pages: (Hkv, P, page_size, D); page_table: (B, max_pages) physical ids.
+    Returns (B, Hkv, max_pages * page_size, D) — logical order per sequence.
+    """
+    hkv, _, ps, d = pages.shape
+    b, mp = page_table.shape
+    g = jnp.take(pages, page_table.reshape(-1), axis=1)  # (Hkv, B*mp, ps, D)
+    return g.reshape(hkv, b, mp * ps, d).transpose(1, 0, 2, 3)
+
+
+def paged_decode_attention(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Paged decode oracle: gather pages to a dense cache, then the dense
+    oracle. The gather is exactly what the paged Pallas kernel avoids."""
+    k = gather_pages(k_pages, page_table)
+    v = gather_pages(v_pages, page_table)
+    return decode_attention(
+        q, k, v, lengths, softcap=softcap, scale=scale, window=window
+    )

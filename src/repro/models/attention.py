@@ -117,22 +117,35 @@ def attention_block(
 
 def attention_prefill(
     params, x, cfg: ModelConfig, spec: LayerSpec, *, cache_len: int,
-    positions=None, encoder_states=None,
+    positions=None, encoder_states=None, prefix_kv=None, q_offset: int = 0,
 ) -> Tuple[jnp.ndarray, dict]:
     """Like attention_block but also returns the populated KV cache
-    (padded to ``cache_len``) for subsequent decode steps."""
+    (padded to ``cache_len``) for subsequent decode steps.
+
+    ``prefix_kv`` (+ static ``q_offset``): prefix-extension prefill — the
+    first ``q_offset`` positions were already prefilled by an earlier
+    request sharing this prefix (paged engine, ``cache.prefix``); their K/V
+    arrives dense-gathered in ``prefix_kv["k"|"v"]: (B, Hkv, q_offset, hd)``
+    and only the tail's K/V is computed and returned (the caller scatters it
+    into fresh pages). Queries sit at absolute positions ``q_offset + i``.
+    """
     b, s, d = x.shape
     if positions is None:
-        positions = jnp.arange(s)
+        positions = q_offset + jnp.arange(s)
     cross = spec.cross_attn and encoder_states is not None
     q, k, v = _project_qkv(
         params, x, cfg, positions, spec.rope_theta,
         kv_x=encoder_states if cross else None, rope=not cross,
     )
+    k_full, v_full = k, v
+    if prefix_kv is not None:
+        k_full = jnp.concatenate([prefix_kv["k"].astype(k.dtype), k], axis=2)
+        v_full = jnp.concatenate([prefix_kv["v"].astype(v.dtype), v], axis=2)
     o = ops.flash_attention(
-        q, k, v, causal=not cross, window=None if cross else spec.window,
+        q, k_full, v_full, causal=not cross,
+        window=None if cross else spec.window,
         softcap=cfg.attn_softcap, mapping=_mapping(cfg), impl=cfg.attn_impl,
-        chunk_unroll=cfg.attn_chunk_unroll,
+        chunk_unroll=cfg.attn_chunk_unroll, q_offset=q_offset,
     )
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
     pad = cache_len - k.shape[2]
@@ -184,9 +197,63 @@ def attention_decode(
     return o @ params["wo_md"].astype(x.dtype), {"k": k, "v": v}
 
 
+def attention_decode_paged(
+    params, x, cfg: ModelConfig, spec: LayerSpec, cache: dict,
+    page_table: jnp.ndarray, lengths: jnp.ndarray,
+) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode over the paged KV pool.
+
+    x: (B, 1, D); cache k/v_pages: (Hkv, P, page_size, hd) head-major;
+    page_table: (B, max_pages) physical ids (null-page padded); lengths:
+    (B,) length *including* the new token. The new K/V row is scattered
+    into the sequence's tail page, then the paged flash-decode kernel
+    consumes the page table natively. Rows whose table is all null pages
+    (inactive decode slots) harmlessly write the reserved null page.
+    """
+    b, _, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+    ps = k_pages.shape[2]
+
+    positions = (lengths - 1)[:, None]
+    q, k_new, v_new = _project_qkv(params, x, cfg, positions, spec.rope_theta)
+
+    # Clamp for inactive rows (length 0): they index the null-padded table
+    # head and write the reserved null page.
+    idx = jnp.maximum(lengths - 1, 0)
+    pids = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
+    offs = idx % ps
+    # (B, Hkv, 1, hd) -> (Hkv, B, hd); scatter one row per (head, sequence).
+    k_pages = k_pages.at[:, pids, offs].set(
+        k_new[:, :, 0].transpose(1, 0, 2).astype(k_pages.dtype)
+    )
+    v_pages = v_pages.at[:, pids, offs].set(
+        v_new[:, :, 0].transpose(1, 0, 2).astype(v_pages.dtype)
+    )
+    impl = cfg.attn_impl if cfg.attn_impl not in ("xla_flash", "xla_flash_tri") else "xla"
+    o = ops.paged_decode_attention(
+        q[:, :, 0], k_pages, v_pages, page_table, lengths,
+        softcap=cfg.attn_softcap, window=spec.window, impl=impl,
+    )
+    o = o.reshape(b, 1, h * hd)
+    return o @ params["wo_md"].astype(x.dtype), {
+        "k_pages": k_pages, "v_pages": v_pages,
+    }
+
+
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
     hkv, hd = cfg.n_kv_heads, cfg.head_dim
     return {
         "k": jnp.zeros((batch, hkv, cache_len, hd), dtype),
         "v": jnp.zeros((batch, hkv, cache_len, hd), dtype),
+    }
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int, dtype) -> dict:
+    """Head-major page pool for one layer: all pages of a KV head are
+    contiguous (``cache.layout.HEAD_ALIGNED`` placement by construction)."""
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k_pages": jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+        "v_pages": jnp.zeros((hkv, num_pages, page_size, hd), dtype),
     }

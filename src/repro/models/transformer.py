@@ -75,9 +75,17 @@ def apply_layer(
     positions: Optional[jnp.ndarray] = None,
     encoder_states: Optional[jnp.ndarray] = None,
     cache_len: int = 0,
+    page_table: Optional[jnp.ndarray] = None,
+    q_offset: int = 0,
     shard_moe=lambda t: t,
 ) -> Tuple[jnp.ndarray, Optional[Params], Dict[str, jnp.ndarray]]:
-    """Returns (x, new_cache, aux)."""
+    """Returns (x, new_cache, aux).
+
+    In decode mode a cache holding ``k_pages`` routes through the paged
+    decode path (``page_table`` required). In prefill mode a non-None
+    ``cache`` holds the dense-gathered K/V of an already-prefilled shared
+    prefix of ``q_offset`` tokens (prefix-extension prefill).
+    """
     aux = _zero_aux()
     h = layers.rmsnorm(p["ln1"], x)
     new_cache: Params = {}
@@ -90,6 +98,12 @@ def apply_layer(
         if mode == "prefill":
             return attn_lib.attention_prefill(
                 p["attn"], h, cfg, spec, cache_len=cache_len, positions=positions,
+                prefix_kv=None if cache is None else cache.get("attn"),
+                q_offset=q_offset,
+            )
+        if cache is not None and "k_pages" in cache["attn"]:
+            return attn_lib.attention_decode_paged(
+                p["attn"], h, cfg, spec, cache["attn"], page_table, lengths,
             )
         return attn_lib.attention_decode(
             p["attn"], h, cfg, spec, cache["attn"], lengths,
@@ -264,8 +278,8 @@ def _logits(params, cfg: ModelConfig, x):
 
 def _run_stack(
     params, cfg: ModelConfig, x, *, mode, caches=None, lengths=None,
-    positions=None, encoder_states=None, cache_len=0, shard_moe=lambda t: t,
-    remat: bool = False,
+    positions=None, encoder_states=None, cache_len=0, page_table=None,
+    q_offset=0, shard_moe=lambda t: t, remat: bool = False,
 ):
     pattern, rem = cfg.pattern_for_depth()
     aux_tot = _zero_aux()
@@ -280,6 +294,7 @@ def _run_stack(
                 stacked_params[j], x, cfg, spec, mode=mode, cache=c_j,
                 lengths=lengths, positions=positions,
                 encoder_states=encoder_states, cache_len=cache_len,
+                page_table=page_table, q_offset=q_offset,
                 shard_moe=shard_moe,
             )
             new_caches.append(nc)
@@ -309,7 +324,8 @@ def _run_stack(
         x, nc, a = apply_layer(
             params["layers_rem"][i], x, cfg, spec, mode=mode, cache=c_i,
             lengths=lengths, positions=positions, encoder_states=encoder_states,
-            cache_len=cache_len, shard_moe=shard_moe,
+            cache_len=cache_len, page_table=page_table, q_offset=q_offset,
+            shard_moe=shard_moe,
         )
         new_rem.append(nc)
         aux_tot = {k: aux_tot[k] + a[k] for k in aux_tot}
@@ -349,6 +365,8 @@ def prefill(
     cache_len: int,
     image_embeds: Optional[jnp.ndarray] = None,
     last_positions: Optional[jnp.ndarray] = None,
+    prefix_caches: Optional[Params] = None,
+    q_offset: int = 0,
     shard_moe=lambda t: t,
 ) -> Tuple[jnp.ndarray, Params]:
     """Prefill: returns (logits at the last real position (B,V[,K]), caches).
@@ -357,6 +375,13 @@ def prefill(
     (for right-padded prompts); defaults to S-1. Only one position's logits
     are materialized — at prefill_32k scale the full (B, S, V) tensor would
     be hundreds of GB.
+
+    ``prefix_caches`` + static ``q_offset``: prefix-extension prefill.
+    ``tokens`` holds only the tail (positions ``q_offset`` onward); each
+    attention layer additionally attends the dense-gathered K/V of the
+    shared ``q_offset``-token prefix. The returned caches cover the tail
+    only — the caller owns where prefix and tail K/V physically live
+    (``serving.engine.PagedServingEngine`` scatters them into pages).
     """
     x = _embed_tokens(params, cfg, tokens)
     enc = None
@@ -364,7 +389,8 @@ def prefill(
         enc = layers.linear(params["vision_proj"], image_embeds.astype(x.dtype))
     x, caches, _ = _run_stack(
         params, cfg, x, mode="prefill", encoder_states=enc,
-        cache_len=cache_len, shard_moe=shard_moe,
+        cache_len=cache_len, caches=prefix_caches, q_offset=q_offset,
+        shard_moe=shard_moe,
     )
     if last_positions is None:
         x = x[:, -1:]
@@ -381,14 +407,18 @@ def decode_step(
     caches: Params,
     lengths: jnp.ndarray,          # (B,) length INCLUDING the new token
     *,
+    page_table: Optional[jnp.ndarray] = None,
     shard_moe=lambda t: t,
 ) -> Tuple[jnp.ndarray, Params]:
-    """One decode step: returns (logits (B,V[,K]), updated caches)."""
+    """One decode step: returns (logits (B,V[,K]), updated caches).
+
+    ``page_table`` (B, max_pages): required when ``caches`` are paged
+    (``init_paged_caches``); ignored for dense caches."""
     tok = token[:, None] if token.ndim == 1 else token[:, None, :]
     x = _embed_tokens(params, cfg, tok)
     x, new_caches, _ = _run_stack(
         params, cfg, x, mode="decode", caches=caches, lengths=lengths,
-        shard_moe=shard_moe,
+        page_table=page_table, shard_moe=shard_moe,
     )
     x = layers.rmsnorm(params["ln_f"], x)
     return _logits(params, cfg, x)[:, 0], new_caches
@@ -409,6 +439,34 @@ def init_caches(params: Params, cfg: ModelConfig, batch: int, cache_len: int,
         if spec.cross_attn:
             c["cross"] = attn_lib.init_cache(cfg, batch, max(image_len, 1), dt)
         return c or None
+
+    scanned = tuple(
+        jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), one(spec)
+        )
+        for spec in pattern
+    )
+    return {"scanned": scanned, "rem": tuple(one(s) for s in rem)}
+
+
+def init_paged_caches(
+    params: Params, cfg: ModelConfig, num_pages: int, page_size: int
+) -> Params:
+    """Paged zero caches: one head-major page pool per attention layer, all
+    indexed by the same physical page ids (one allocator drives every
+    layer, vLLM-style). Only pure-attention stacks support paging — SSM
+    state and cross-attention K/V are not page-structured."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    pattern, rem = cfg.pattern_for_depth()
+    for spec in list(pattern) + list(rem):
+        if spec.kind != "attn" or spec.cross_attn:
+            raise ValueError(
+                "paged caches require a pure self-attention stack; "
+                f"got layer kind={spec.kind!r} cross_attn={spec.cross_attn}"
+            )
+
+    def one(_spec: LayerSpec):
+        return {"attn": attn_lib.init_paged_cache(cfg, num_pages, page_size, dt)}
 
     scanned = tuple(
         jax.tree.map(

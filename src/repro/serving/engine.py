@@ -1,6 +1,8 @@
-"""Batched serving engine: continuous batching over jitted prefill/decode.
+"""Batched serving engines: continuous batching over jitted prefill/decode.
 
-Slot-based continuous batching (vLLM-style control plane, dense KV cache):
+Two control planes over the same model stack:
+
+``ServingEngine`` — slot-based continuous batching, dense KV cache:
   * fixed ``num_slots`` concurrent sequences, each owning a cache stripe,
   * new requests prefill into free slots (prefill is jitted per bucketed
     prompt length to bound compilation),
@@ -8,21 +10,42 @@ Slot-based continuous batching (vLLM-style control plane, dense KV cache):
     sequences (EOS / max_tokens) free their slot immediately,
   * deterministic greedy or temperature sampling.
 
-The decode path is the paper-relevant one: ``kernels.decode_attention``
-fetches each KV head once per (batch, kv-head) grid cell — the ACC insight
-applied to serving. The engine is mesh-transparent: pass sharded caches and
-jitted fns and it drives the distributed case identically.
+``PagedServingEngine`` — the serving-scale control plane (PR 2): KV lives
+in a pool of fixed-size pages (``cache.pool``), so
+  * admission is by free-page count, not slot count: a request enters when
+    its prompt's pages (minus any prefix-cache reuse) fit the pool,
+  * decode appends per-token: a sequence grows one page at a time instead
+    of reserving a ``cache_len`` stripe up front,
+  * common prefixes are prefilled once: ``cache.prefix`` hash-chains full
+    pages, and later requests reuse the physical pages and prefill only
+    their tail (prefix-extension prefill, ``q_offset``),
+  * pool exhaustion first evicts idle prefix-cache pages, then preempts
+    the lowest-priority active sequence (its request is requeued and
+    re-prefills later — usually cheaply, through the prefix cache),
+  * pages are head-major (``cache.layout.HEAD_ALIGNED``): a KV head's
+    pages live in that head's domain stripe, so the paged decode kernel's
+    (batch, kv-head) grid cells only touch local pages — the paper's
+    WG->XCD co-location carried into serving.
+
+The decode path is the paper-relevant one: ``kernels.decode_attention`` /
+``kernels.paged_decode_attention`` fetch each KV head once per
+(batch, kv-head) grid cell — the ACC insight applied to serving. Engines
+are mesh-transparent: pass sharded caches and jitted fns and they drive
+the distributed case identically.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache.pool import NULL_PAGE, OutOfPages, PagePool, SequencePages
+from repro.cache.prefix import PrefixCache, page_hashes
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kernel_ops
 from repro.models import transformer
@@ -35,6 +58,7 @@ class Request:
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     temperature: float = 0.0
+    priority: int = 0             # higher survives preemption longer
 
 
 @dataclasses.dataclass
@@ -80,6 +104,7 @@ class ServingEngine:
         self.slot_out: List[List] = [[] for _ in range(num_slots)]
         self.results: List[Result] = []
         self.rng = np.random.default_rng(rng_seed)
+        self._pending_first: Dict[int, np.ndarray] = {}
 
         self._decode = jax.jit(
             lambda params, tok, caches, lengths: transformer.decode_step(
@@ -164,7 +189,6 @@ class ServingEngine:
         self.slot_req[slot] = req
         self.slot_out[slot] = []
         first = self._sample_host(np.asarray(logits)[0], req)
-        self._pending_first = getattr(self, "_pending_first", {})
         self._pending_first[slot] = first
         return True
 
@@ -181,7 +205,7 @@ class ServingEngine:
         """One decode tick for all active slots."""
         if not self.active.any():
             return
-        pend = getattr(self, "_pending_first", {})
+        pend = self._pending_first
         tok = np.zeros(
             (self.num_slots,) + (() if self.cfg.num_codebooks == 1 else (self.cfg.num_codebooks,)),
             np.int32,
@@ -198,33 +222,549 @@ class ServingEngine:
         logits, self.caches = self._decode(
             self.params, jnp.asarray(tok), self.caches, jnp.asarray(self.lengths)
         )
-        logits = np.asarray(logits)
-        for slot in range(self.num_slots):
-            if not self.active[slot]:
+        self._advance_rows(tok, np.asarray(logits))
+
+    def _row_request(self, row: int) -> Request:
+        return self.slot_req[row]
+
+    def _advance_rows(self, tok, logits):
+        """Shared post-decode bookkeeping: append the token just decoded,
+        sample the next one, terminate on EOS / max_new_tokens."""
+        for row in range(len(self.active)):
+            if not self.active[row]:
                 continue
-            req = self.slot_req[slot]
-            self.slot_out[slot].append(tok[slot].copy())
-            nxt = self._sample_host(logits[slot], req)
-            done = len(self.slot_out[slot]) >= req.max_new_tokens
+            req = self._row_request(row)
+            self.slot_out[row].append(tok[row].copy())
+            nxt = self._sample_host(logits[row], req)
+            done = len(self.slot_out[row]) >= req.max_new_tokens
             if req.eos_id is not None and np.ndim(nxt) == 0 and int(nxt) == req.eos_id:
                 done = True
-                if len(self.slot_out[slot]) < req.max_new_tokens:
-                    self.slot_out[slot].append(np.asarray(nxt))  # include EOS
+                if len(self.slot_out[row]) < req.max_new_tokens:
+                    self.slot_out[row].append(np.asarray(nxt))  # include EOS
             if done:
-                self.results.append(
-                    Result(uid=req.uid, tokens=list(self.slot_out[slot]),
-                           prompt_len=len(req.prompt))
-                )
-                self.active[slot] = False
-                self.slot_req[slot] = None
+                self._finish(row, req)
             else:
-                self._pending_first[slot] = nxt
+                self._pending_first[row] = nxt
+
+    def _finish(self, slot: int, req: Request):
+        self.results.append(
+            Result(uid=req.uid, tokens=list(self.slot_out[slot]),
+                   prompt_len=len(req.prompt))
+        )
+        self.active[slot] = False
+        self.slot_req[slot] = None
 
     def run(self, requests: List[Request]) -> List[Result]:
         """Drive until all requests complete (continuous batching)."""
-        queue = list(requests)
+        queue = deque(requests)
         while queue or self.active.any():
             while queue and self.submit(queue[0]):
-                queue.pop(0)
+                queue.popleft()
             self.step()
         return self.results
+
+
+# -----------------------------------------------------------------------------
+# Paged engine
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _SeqState:
+    """One active decode row of the paged engine."""
+
+    req: Request
+    pages: SequencePages
+    submit_order: int
+
+
+class PagedServingEngine(ServingEngine):
+    """Continuous batching over the paged KV-cache subsystem.
+
+    ``max_batch`` is only the width of the fused decode step (a jit-static
+    shape); *admission* is governed by the page pool — a request enters
+    when its non-shared prompt pages fit the free list with ``reserve``
+    pages of decode headroom. ``num_pages`` and ``page_size`` size the
+    pool; a sequence may grow to ``max_pages_per_seq`` pages
+    (the page-table width, also jit-static).
+
+    Restrictions: pure self-attention stacks only (``init_paged_caches``
+    enforces it) and single-codebook token streams.
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        num_pages: int = 128,
+        page_size: int = 16,
+        max_batch: int = 8,
+        max_pages_per_seq: int = 16,
+        prompt_buckets=(32, 64, 128),
+        rng_seed: int = 0,
+        mapping: Optional[str] = None,
+        prefix_sharing: bool = True,
+        reserve_pages: int = 1,
+    ):
+        if mapping is not None and mapping != cfg.mapping_name:
+            cfg = dataclasses.replace(cfg, mapping_name=mapping)
+        if cfg.mapping_name != "auto":
+            # Fail fast on a bad pinned name (otherwise surfaces mid-trace).
+            from repro.kernels.flash_attention import PAPER_MAPPINGS
+
+            PAPER_MAPPINGS[cfg.mapping_name]
+        if cfg.num_codebooks != 1:
+            raise ValueError("paged engine supports single-codebook models")
+        for b in prompt_buckets:
+            if b % page_size:
+                raise ValueError(
+                    f"prompt bucket {b} must be a multiple of page_size {page_size}"
+                )
+        if num_pages - 1 < max_pages_per_seq:
+            # A lone max-size sequence must always be able to grow to its
+            # cap (evicting idle prefix pages on the way); otherwise decode
+            # hits OutOfPages with nothing to preempt.
+            raise ValueError(
+                f"num_pages={num_pages} (usable {num_pages - 1}) cannot hold "
+                f"one max_pages_per_seq={max_pages_per_seq} sequence"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.max_pages_per_seq = max_pages_per_seq
+        self.cache_len = max_pages_per_seq * page_size
+        self.prompt_buckets = tuple(
+            b for b in prompt_buckets if b <= self.cache_len
+        )
+        self.reserve_pages = reserve_pages
+        self.prefix_sharing = prefix_sharing
+
+        self.pool = PagePool(num_pages, page_size)
+        self.prefix = PrefixCache(self.pool)
+        self.caches = transformer.init_paged_caches(
+            params, cfg, num_pages, page_size
+        )
+        # Per-row state. Inactive rows keep all-null page tables and
+        # length 0: the decode step writes their token into the reserved
+        # null page and the kernel emits zeros for them.
+        self.page_table = np.zeros((max_batch, max_pages_per_seq), np.int32)
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self.active = np.zeros((max_batch,), bool)
+        self.seqs: List[Optional[_SeqState]] = [None] * max_batch
+        self.slot_out: List[List] = [[] for _ in range(max_batch)]
+        self.results: List[Result] = []
+        self.rng = np.random.default_rng(rng_seed)
+        self._pending_first: Dict[int, np.ndarray] = {}
+        self._submit_counter = 0
+        self._requeue: deque = deque()
+        self.stats = {"preemptions": 0, "prefix_evictions": 0,
+                      "pages_reused": 0, "prompt_pages": 0, "cow_copies": 0}
+
+        self._decode = jax.jit(
+            lambda params, tok, caches, lengths, pt: transformer.decode_step(
+                params, cfg, tok, caches, lengths, page_table=pt
+            )
+        )
+        self._prefill_p: Dict = {}
+        self._gather_jit = jax.jit(self._gather_prefix)
+        self._scatter_jit = jax.jit(self._scatter_tail)
+        self._copy_jit = jax.jit(self._copy_page)
+
+    # -- jitted cache plumbing ---------------------------------------------
+
+    @staticmethod
+    def _gather_prefix(caches, pids):
+        """Dense view of the shared-prefix pages, in prefill-cache layout.
+
+        pids: (m,) physical ids of the prefix's pages in logical order.
+        Scanned page leaves are (n_periods, Hkv, P, ps, hd) -> dense
+        (n_periods, 1, Hkv, m*ps, hd); rem leaves lose the period axis.
+        """
+
+        def g(pages, scanned):
+            axis = 2 if scanned else 1
+            x = jnp.take(pages, pids, axis=axis)
+            if scanned:
+                npp, hkv, m, ps, hd = x.shape
+                return x.reshape(npp, hkv, m * ps, hd)[:, None]
+            hkv, m, ps, hd = x.shape
+            return x.reshape(hkv, m * ps, hd)[None]
+
+        def layer(c, scanned):
+            return {"attn": {"k": g(c["attn"]["k_pages"], scanned),
+                             "v": g(c["attn"]["v_pages"], scanned)}}
+
+        return {
+            "scanned": tuple(layer(c, True) for c in caches["scanned"]),
+            "rem": tuple(layer(c, False) for c in caches["rem"]),
+        }
+
+    @staticmethod
+    def _scatter_tail(caches, tail_caches, pids):
+        """Write a prefilled tail's dense K/V into freshly allocated pages.
+
+        pids: (bucket/ps,) destinations; entries past the tail's real pages
+        are the null page (their writes are garbage sinks by design).
+        """
+
+        def s(pages, dense, scanned):
+            if scanned:
+                npp, _, hkv, bucket, hd = dense.shape
+                ps = pages.shape[3]
+                new = dense[:, 0].reshape(npp, hkv, bucket // ps, ps, hd)
+                return pages.at[:, :, pids].set(new.astype(pages.dtype))
+            _, hkv, bucket, hd = dense.shape
+            ps = pages.shape[2]
+            new = dense[0].reshape(hkv, bucket // ps, ps, hd)
+            return pages.at[:, pids].set(new.astype(pages.dtype))
+
+        def layer(c, t, scanned):
+            return {"attn": {
+                "k_pages": s(c["attn"]["k_pages"], t["attn"]["k"], scanned),
+                "v_pages": s(c["attn"]["v_pages"], t["attn"]["v"], scanned),
+            }}
+
+        return {
+            "scanned": tuple(
+                layer(c, t, True)
+                for c, t in zip(caches["scanned"], tail_caches["scanned"])
+            ),
+            "rem": tuple(
+                layer(c, t, False)
+                for c, t in zip(caches["rem"], tail_caches["rem"])
+            ),
+        }
+
+    @staticmethod
+    def _copy_page(caches, src, dst):
+        """Physical page copy (copy-on-write), every layer at once."""
+
+        def cp(pages, scanned):
+            if scanned:
+                return pages.at[:, :, dst].set(pages[:, :, src])
+            return pages.at[:, dst].set(pages[:, src])
+
+        def layer(c, scanned):
+            return {"attn": {
+                "k_pages": cp(c["attn"]["k_pages"], scanned),
+                "v_pages": cp(c["attn"]["v_pages"], scanned),
+            }}
+
+        return {
+            "scanned": tuple(layer(c, True) for c in caches["scanned"]),
+            "rem": tuple(layer(c, False) for c in caches["rem"]),
+        }
+
+    # -- prefill -----------------------------------------------------------
+
+    def _prefill_paged_fn(self, bucket: int, prefix_pages: int):
+        """Jitted tail prefill, keyed by (tail bucket, #prefix pages)."""
+        key = (bucket, prefix_pages)
+        if key not in self._prefill_p:
+            cfg = self.cfg
+            q_offset = prefix_pages * self.page_size
+
+            if prefix_pages == 0:
+                def f(params, tokens, last_positions):
+                    return transformer.prefill(
+                        params, cfg, tokens, cache_len=bucket,
+                        last_positions=last_positions,
+                    )
+            else:
+                def f(params, tokens, last_positions, prefix_dense):
+                    return transformer.prefill(
+                        params, cfg, tokens, cache_len=bucket,
+                        last_positions=last_positions,
+                        prefix_caches=prefix_dense, q_offset=q_offset,
+                    )
+
+            self._prefill_p[key] = jax.jit(f)
+        return self._prefill_p[key]
+
+    # -- admission ---------------------------------------------------------
+
+    def _make_room(self, pages_needed: int) -> bool:
+        """Free pages until ``pages_needed`` fit: evict idle prefix-cache
+        pages first (pure capacity, nothing recomputes), then report
+        whether the caller should preempt."""
+        short = pages_needed - self.pool.free_pages
+        if short > 0 and len(self.prefix):
+            self.stats["prefix_evictions"] += self.prefix.evict(short)
+            short = pages_needed - self.pool.free_pages
+        return short <= 0
+
+    def _reserve(self, num_tokens: int, matched) -> Optional[SequencePages]:
+        """Page-table reservation for one admission attempt: pin the matched
+        prefix pages (lookup takes no references, and ``_make_room``'s
+        prefix eviction would otherwise be free to recycle exactly these
+        pages — they look idle until the sequence increfs them), make room,
+        allocate. Returns None when the pool cannot satisfy it."""
+        for p in matched:
+            self.pool.incref(p)
+        try:
+            need = self.pool.pages_needed(num_tokens) - len(matched)
+            if not self._make_room(need + self.reserve_pages):
+                return None
+            try:
+                return self.pool.allocate_sequence(
+                    num_tokens, shared_prefix=matched
+                )
+            except OutOfPages:
+                return None
+        finally:
+            for p in matched:
+                self.pool.decref(p)
+
+    def submit(self, req: Request) -> bool:
+        """Admit a request if a decode row and its pages are available.
+
+        Prefix-cache lookup happens first: shared full pages are reused
+        (prefilled once, by whoever computed them) and only the tail is
+        prefilled here.
+        """
+        free_rows = np.flatnonzero(~self.active)
+        if len(free_rows) == 0:
+            return False
+        tok = np.asarray(req.prompt)
+        if tok.ndim != 1:
+            raise ValueError("paged engine expects flat token prompts")
+        n = len(tok)
+        ps = self.page_size
+        total_pages = self.pool.pages_needed(n)
+        if total_pages > self.max_pages_per_seq:
+            raise ValueError(
+                f"prompt needs {total_pages} pages > "
+                f"max_pages_per_seq {self.max_pages_per_seq}"
+            )
+
+        if self.pool.pages_needed(n + req.max_new_tokens) > self.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt {n} + max_new_tokens "
+                f"{req.max_new_tokens} can outgrow max_pages_per_seq="
+                f"{self.max_pages_per_seq} ({self.cache_len} tokens) "
+                "mid-decode; reject at admission instead"
+            )
+
+        hashes = page_hashes(tok, ps) if self.prefix_sharing else []
+        # Reuse at most (n-1)//ps pages: at least one tail token must be
+        # prefilled here to produce the next-token logits.
+        matched = self.prefix.lookup(hashes[: (n - 1) // ps])
+
+        def fits_buckets(tail_len: int) -> bool:
+            return any(tail_len <= b for b in self.prompt_buckets)
+
+        # Validate the prefill bucket before touching the allocator (a late
+        # ValueError must not leak pages).
+        if not fits_buckets(n - len(matched) * ps):
+            raise ValueError(
+                f"prompt tail {n - len(matched) * ps} exceeds buckets "
+                f"{self.prompt_buckets}"
+            )
+        seq = self._reserve(n, matched)
+        if seq is None and matched and fits_buckets(n):
+            # Reuse blocked admission (the pinned prefix pages were the only
+            # evictable capacity): fall back to prefilling from scratch so a
+            # servable request is never starved by its own cached prefix.
+            # Prompts only servable *through* reuse stay queued instead
+            # (pages free up as sequences finish).
+            matched = []
+            seq = self._reserve(n, matched)
+        if seq is None:
+            return False
+        m = len(matched)
+        tail = tok[m * ps :]
+        bucket = self._bucket_for(len(tail))
+        self.stats["pages_reused"] += m
+        self.stats["prompt_pages"] += total_pages
+        padded = np.pad(tail, (0, bucket - len(tail)))[None]
+        last = jnp.asarray([len(tail) - 1], jnp.int32)
+        if m == 0:
+            logits, tail_caches = self._prefill_paged_fn(bucket, 0)(
+                self.params, jnp.asarray(padded), last
+            )
+        else:
+            prefix_dense = self._gather_jit(
+                self.caches, jnp.asarray(matched, jnp.int32)
+            )
+            logits, tail_caches = self._prefill_paged_fn(bucket, m)(
+                self.params, jnp.asarray(padded), last, prefix_dense
+            )
+        # Scatter the tail K/V into its fresh pages (bucket is page-aligned;
+        # destinations beyond the tail's real pages sink into the null page).
+        tail_pids = seq.pages[m:] + [NULL_PAGE] * (bucket // ps - (total_pages - m))
+        self.caches = self._scatter_jit(
+            self.caches, tail_caches, jnp.asarray(tail_pids, jnp.int32)
+        )
+        # Publish this prompt's full pages for later requests.
+        if self.prefix_sharing:
+            nfull = n // ps
+            self.prefix.insert(hashes[:nfull], seq.pages[:nfull])
+
+        row = int(free_rows[0])
+        self.seqs[row] = _SeqState(
+            req=req, pages=seq, submit_order=self._submit_counter
+        )
+        self._submit_counter += 1
+        self.page_table[row] = NULL_PAGE
+        self.page_table[row, : len(seq.pages)] = seq.pages
+        self.lengths[row] = n
+        self.active[row] = True
+        self.slot_out[row] = []
+        self._pending_first[row] = self._sample_host(np.asarray(logits)[0], req)
+        return True
+
+    # -- preemption / decode ----------------------------------------------
+
+    def _preempt_one(self, protect: int) -> bool:
+        """Evict the weakest active sequence (lowest priority, then newest)
+        and requeue its request; never the row ``protect``."""
+        victims = [
+            (s.req.priority, -s.submit_order, row)
+            for row, s in enumerate(self.seqs)
+            if s is not None and self.active[row] and row != protect
+        ]
+        if not victims:
+            return False
+        _, _, row = min(victims)
+        state = self.seqs[row]
+        self.stats["preemptions"] += 1
+        self.pool.release(state.pages)
+        self._requeue.appendleft(state.req)
+        self.active[row] = False
+        self.seqs[row] = None
+        self.page_table[row] = NULL_PAGE
+        self.lengths[row] = 0
+        self._pending_first.pop(row, None)
+        self.slot_out[row] = []
+        return True
+
+    def _append_token_slot(self, row: int) -> None:
+        """Reserve the next token's slot in row's page table, preempting
+        others if the pool is exhausted mid-decode."""
+        state = self.seqs[row]
+        while True:
+            try:
+                _, _, cow = self.pool.append_token(state.pages)
+                break
+            except OutOfPages:
+                if not (self._make_room(1) or self._preempt_one(row)):
+                    raise OutOfPages(
+                        "pool exhausted and nothing left to preempt"
+                    )
+        if cow is not None:
+            src, dst = cow
+            self.stats["cow_copies"] += 1
+            # Traced page ids: one jitted copy program serves every pair.
+            self.caches = self._copy_jit(
+                self.caches, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)
+            )
+        if state.pages.num_pages() > self.max_pages_per_seq:
+            raise ValueError(
+                f"sequence {state.req.uid} outgrew max_pages_per_seq="
+                f"{self.max_pages_per_seq}; cap prompt+max_new_tokens at "
+                f"{self.cache_len} tokens"
+            )
+        self.page_table[row] = NULL_PAGE
+        self.page_table[row, : len(state.pages.pages)] = state.pages.pages
+
+    def step(self):
+        """One decode tick for all active rows."""
+        if not self.active.any():
+            return
+        tok = np.zeros((self.max_batch,), np.int32)
+        for row in range(self.max_batch):
+            if not self.active[row]:
+                continue
+            if row in self._pending_first:
+                nxt = self._pending_first.pop(row)
+            else:
+                nxt = self.slot_out[row][-1]
+            tok[row] = nxt
+            self._append_token_slot(row)
+        self.lengths = self.lengths + self.active.astype(np.int32)
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(tok), self.caches,
+            jnp.asarray(self.lengths), jnp.asarray(self.page_table),
+        )
+        self._advance_rows(tok, np.asarray(logits))
+
+    def _row_request(self, row: int) -> Request:
+        return self.seqs[row].req
+
+    def _finish(self, row: int, req: Request):
+        state = self.seqs[row]
+        self.results.append(
+            Result(uid=req.uid, tokens=list(self.slot_out[row]),
+                   prompt_len=len(req.prompt))
+        )
+        # Pages the prefix cache references survive; the rest free now.
+        self.pool.release(state.pages)
+        self.active[row] = False
+        self.seqs[row] = None
+        self.page_table[row] = NULL_PAGE
+        self.lengths[row] = 0
+
+    def run(self, requests: List[Request]) -> List[Result]:
+        """Drive until every request (including preempted ones) completes."""
+        queue = deque(requests)
+        while queue or self._requeue or self.active.any():
+            while self._requeue and self.submit(self._requeue[0]):
+                self._requeue.popleft()
+            if not self._requeue:
+                while queue and self.submit(queue[0]):
+                    queue.popleft()
+            if not self.active.any():
+                if queue or self._requeue:
+                    raise OutOfPages(
+                        "pool too small for any queued request; grow "
+                        "num_pages or shrink prompts"
+                    )
+                break
+            self.step()
+        return self.results
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def mapping(self):
+        """Resolved decode-shape schedule (decode & window are part of the
+        resolver key, so this differs from the prefill resolution)."""
+        if self.cfg.mapping_name != "auto":
+            from repro.kernels.flash_attention import PAPER_MAPPINGS
+
+            return PAPER_MAPPINGS[self.cfg.mapping_name]
+        return kernel_ops.resolve_mapping(
+            (self.max_batch, self.cfg.n_heads, self.cfg.n_kv_heads,
+             1, self.cache_len, self.cfg.head_dim),
+            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
+            decode=True,
+        )
+
+    @property
+    def kv_layout(self) -> str:
+        """What the analytic model would pick for this engine's steady
+        state (paged head-aligned vs interleaved vs dense stripes)."""
+        live = self.lengths[self.active]
+        mean_len = int(live.mean()) if live.size else self.cache_len // 2
+        return kernel_ops.resolve_kv_layout(
+            (self.max_batch, self.cfg.n_heads, self.cfg.n_kv_heads,
+             max(mean_len, 1), self.cfg.head_dim),
+            capacity=self.cache_len,
+            page_size=self.page_size,
+            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
+        )
+
+    def prefix_stats(self) -> Dict[str, float]:
+        reused = self.stats["pages_reused"]
+        total = self.stats["prompt_pages"]
+        return {
+            "prefix_entries": float(len(self.prefix)),
+            "pages_reused": float(reused),
+            "prompt_pages": float(total),
+            "prefix_hit_rate": reused / total if total else 0.0,
+            "preemptions": float(self.stats["preemptions"]),
+            "cow_copies": float(self.stats["cow_copies"]),
+            "free_pages": float(self.pool.free_pages),
+        }

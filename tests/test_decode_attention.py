@@ -50,3 +50,57 @@ def test_ops_dispatch():
     o1 = ops.decode_attention(q, kc, vc, lengths, impl="pallas")
     o2 = ops.decode_attention(q, kc, vc, lengths, impl="xla")
     assert jnp.max(jnp.abs(o1 - o2)) < 2e-5
+
+
+# --- edge cases (PR 2 satellites) --------------------------------------------
+
+
+def test_length_zero_slot_is_zero():
+    """An admitted-but-empty slot (length 0) must emit exactly zero — the
+    l == 0 guard path — and match the (fixed) dense reference."""
+    q, kc, vc = mk(3, 8, 2, 512, 64, seed=3)
+    lengths = jnp.asarray([0, 17, 512], jnp.int32)
+    o = flash_decode(q, kc, vc, lengths, chunk=128, interpret=True)
+    o_ref = ref.decode_attention(q, kc, vc, lengths)
+    assert jnp.max(jnp.abs(o[0])) == 0.0
+    assert jnp.max(jnp.abs(o_ref[0])) == 0.0
+    assert jnp.max(jnp.abs(o - o_ref)) < 2e-5
+
+
+def test_window_smaller_than_chunk():
+    """window < chunk: the chunk-relevance test must still admit the single
+    chunk straddling the window, and in-chunk masking trims it."""
+    q, kc, vc = mk(2, 8, 2, 1024, 64, seed=4)
+    lengths = jnp.asarray([700, 1024], jnp.int32)
+    for window in (8, 100):  # both << chunk
+        o = flash_decode(q, kc, vc, lengths, window=window, chunk=256,
+                         interpret=True)
+        o_ref = ref.decode_attention(q, kc, vc, lengths, window=window)
+        assert jnp.max(jnp.abs(o - o_ref)) < 2e-5, window
+
+
+@pytest.mark.parametrize("smax", [100, 700, 1000])
+def test_cache_length_not_chunk_multiple_pads(smax):
+    """ops.decode_attention pads odd cache lengths up to a whole number of
+    chunks; masking keeps the padded tail inert."""
+    q, kc, vc = mk(2, 8, 2, smax, 64, seed=5)
+    lengths = jnp.asarray([smax // 3, smax], jnp.int32)
+    o = ops.decode_attention(q, kc, vc, lengths, impl="pallas")
+    o_ref = ref.decode_attention(q, kc, vc, lengths)
+    assert jnp.max(jnp.abs(o - o_ref)) < 2e-5
+
+
+def test_resolver_decode_and_window_are_distinct_keys():
+    """decode/window enter the resolver cache key and the scoring: decode
+    shapes clamp the q block to the sublane quantum, and a sliding window
+    shrinks the scored KV span."""
+    shape = (8, 32, 8, 1, 131072 + 128, 128)
+    prefill = ops.resolve_mapping((8, 32, 8, 4096, 4096, 128))
+    decode = ops.resolve_mapping(shape, decode=True)
+    windowed = ops.resolve_mapping(shape, decode=True, window=1024)
+    assert decode is not prefill
+    assert windowed is not decode
+    assert decode.block_m == 16  # clamped to the one-token q block
+    # 256K KV never fits residency, but a 1K window does.
+    assert not decode.kv_resident
+    assert windowed.kv_resident

@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs import registry
 from repro.models import transformer
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import PagedServingEngine, Request, ServingEngine
 
 
 @pytest.fixture(scope="module")
@@ -67,3 +67,124 @@ def test_eos_terminates(llama):
                         prompt_buckets=(16,))
     res = eng.run([Request(uid=0, prompt=prompt, max_new_tokens=8, eos_id=int(eos))])
     assert len(res[0].tokens) == 3  # stopped right after emitting EOS
+
+
+# --- paged engine (PR 2) -----------------------------------------------------
+
+
+def test_paged_matches_direct_with_prefix_sharing(llama):
+    """Requests sharing a system prompt: pages are reused (hit rate > 0),
+    only tails are prefilled, and every output still equals the dense
+    direct greedy decode."""
+    cfg, params = llama
+    rng = np.random.default_rng(3)
+    system = rng.integers(1, 400, size=(32,))
+    prompts = [np.concatenate([system, rng.integers(1, 400, size=(L,))])
+               for L in (5, 18, 2)]
+    prompts.append(rng.integers(1, 400, size=(9,)))  # unshared
+    eng = PagedServingEngine(cfg, params, num_pages=64, page_size=16,
+                             max_batch=3, max_pages_per_seq=8,
+                             prompt_buckets=(16, 32, 64))
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    results = eng.run(reqs)
+    assert len(results) == len(reqs)
+    for r in results:
+        want = direct_greedy(cfg, params, prompts[r.uid], 4)
+        assert [int(t) for t in r.tokens] == want, r.uid
+    stats = eng.prefix_stats()
+    assert stats["prefix_hit_rate"] > 0
+    assert stats["pages_reused"] >= 2 * 2  # 32-token prefix = 2 pages, 2 reusers
+    # all sequence pages released; only prefix-cache pages remain in use
+    assert eng.pool.used_pages == len(eng.prefix)
+
+
+def test_paged_preemption_under_page_pressure(llama):
+    """A pool too small for all concurrent sequences preempts the lowest
+    priority one, requeues it, and still completes everything exactly."""
+    cfg, params = llama
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, 400, size=(20,)) for _ in range(3)]
+    # 9 usable pages; each sequence grows to 4 pages (20 + 30 tokens).
+    eng = PagedServingEngine(cfg, params, num_pages=10, page_size=16,
+                             max_batch=3, max_pages_per_seq=4,
+                             prompt_buckets=(16, 32))
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=30, priority=i)
+            for i, p in enumerate(prompts)]
+    results = eng.run(reqs)
+    assert sorted(r.uid for r in results) == [0, 1, 2]
+    assert eng.prefix_stats()["preemptions"] >= 1
+    for r in results:
+        want = direct_greedy(cfg, params, prompts[r.uid], 30)
+        assert [int(t) for t in r.tokens] == want, r.uid
+
+
+def test_paged_prefix_reuse_survives_eviction_pressure(llama):
+    """Admission that must evict prefix-cache pages to fit may never
+    recycle the very pages it is about to reuse: here the request matches
+    page 1 of a cached 3-page prefix while eviction frees pages 2-3, and
+    the decoded output must still be exact."""
+    cfg, params = llama
+    rng = np.random.default_rng(6)
+    prompt_a = rng.integers(1, 400, size=(48,))
+    prompt_b = np.concatenate([prompt_a[:16], rng.integers(1, 400, size=(48,))])
+    # 5 usable pages: A peaks at 4 and leaves 3 in the prefix cache; B
+    # (sharing one page) needs 3 fresh + 1 reserve => 2 cached pages must
+    # be evicted while the matched one is in flight.
+    eng = PagedServingEngine(cfg, params, num_pages=6, page_size=16,
+                             max_batch=1, max_pages_per_seq=5,
+                             prompt_buckets=(16, 32, 48, 64))
+    reqs = [Request(uid=0, prompt=prompt_a, max_new_tokens=16),
+            Request(uid=1, prompt=prompt_b, max_new_tokens=16)]
+    results = eng.run(reqs)
+    assert sorted(r.uid for r in results) == [0, 1]
+    stats = eng.prefix_stats()
+    assert stats["pages_reused"] >= 1
+    assert eng.stats["prefix_evictions"] >= 2
+    for r in results:
+        want = direct_greedy(cfg, params, reqs[r.uid].prompt, 16)
+        assert [int(t) for t in r.tokens] == want, r.uid
+
+
+def test_paged_rejects_unservable_request_at_admission(llama):
+    """prompt + max_new_tokens that cannot fit max_pages_per_seq must fail
+    at submit, not crash mid-decode."""
+    cfg, params = llama
+    eng = PagedServingEngine(cfg, params, num_pages=16, page_size=16,
+                             max_batch=2, max_pages_per_seq=4,
+                             prompt_buckets=(16, 32))
+    bad = Request(uid=0, prompt=np.arange(1, 17), max_new_tokens=60)
+    with pytest.raises(ValueError, match="outgrow"):
+        eng.submit(bad)
+    assert eng.pool.used_pages == 0  # nothing leaked
+
+
+def test_paged_pool_must_hold_one_max_sequence(llama):
+    """A pool smaller than one max-size sequence would hit OutOfPages
+    mid-decode with nothing to preempt; reject at construction."""
+    cfg, params = llama
+    with pytest.raises(ValueError, match="cannot hold"):
+        PagedServingEngine(cfg, params, num_pages=4, page_size=16,
+                           max_batch=1, max_pages_per_seq=4,
+                           prompt_buckets=(16,))
+
+
+def test_paged_admission_is_page_governed(llama):
+    """With rows to spare but pages for only one sequence at a time, the
+    engine serializes admission instead of overcommitting."""
+    cfg, params = llama
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, 400, size=(30,)) for _ in range(2)]
+    # 5 usable pages; a 30-token prompt + 14 new tokens needs 3 pages, so
+    # two concurrent sequences (6 pages) never fit -> one at a time.
+    eng = PagedServingEngine(cfg, params, num_pages=6, page_size=16,
+                             max_batch=4, max_pages_per_seq=3,
+                             prompt_buckets=(16, 32), prefix_sharing=False,
+                             reserve_pages=1)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=14)
+            for i, p in enumerate(prompts)]
+    results = eng.run(reqs)
+    assert sorted(r.uid for r in results) == [0, 1]
+    for r in results:
+        want = direct_greedy(cfg, params, prompts[r.uid], 14)
+        assert [int(t) for t in r.tokens] == want, r.uid
