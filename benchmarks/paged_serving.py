@@ -11,13 +11,20 @@ page tables under both placement policies with the three model layers:
 
 Reports prefix-cache hit rate (acceptance: > 0 on this trace) and modeled
 HBM/fabric traffic for head-aligned vs interleaved placement, plus the
-dense-stripe baseline the paged pool replaces.
+dense-stripe baseline the paged pool replaces, and the modeled
+paged-vs-gather cost of the extend-phase prefill the PR-3 kernel replaces.
 
 Run: PYTHONPATH=src python -m benchmarks.paged_serving
+  --smoke: CI mode — a short trace that must route prefix-extension
+  prefill through the paged Pallas prefill kernel (interpret mode on CPU
+  runners; asserts the non-fallback path was taken), skipping the full
+  placement sweep.
 Artifacts: artifacts/benchmarks/paged_serving.json
 """
 
 from __future__ import annotations
+
+import argparse
 
 import jax
 import numpy as np
@@ -67,6 +74,50 @@ def capture_peak_tables(engine):
 
     engine.step = step
     return peak
+
+
+def smoke():
+    """CI smoke: drive the paged engine over a prefix-sharing trace and
+    assert the extend phase ran through the paged Pallas prefill kernel
+    (plan impl == "pallas"; interpret mode on CPU) — the non-fallback
+    route — with outputs completing for every request."""
+    from repro.kernels import plan as plan_lib
+
+    cfg = registry.get_smoke_config("llama3-8b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    engine = PagedServingEngine(
+        cfg, params, num_pages=96, page_size=PAGE_SIZE,
+        max_batch=4, max_pages_per_seq=8, prompt_buckets=(16, 32, 64),
+    )
+    reqs = build_trace(cfg, rng, n_requests=6, system_len=32)
+    results = engine.run(reqs)
+    stats = engine.prefix_stats()
+    assert len(results) == len(reqs), (len(results), len(reqs))
+    assert stats["prefix_hit_rate"] > 0, "trace must exercise prefix sharing"
+    assert stats["extend_prefills"] > 0, \
+        "no request took the paged prefill kernel path"
+    # The engine's extend plans must all be the kernel (no gather fallback).
+    extend_keys = [k for k in engine._prefill_p if k[1] > 0]
+    assert extend_keys, "no extend-phase compilation recorded"
+    for bucket, pages in extend_keys:
+        plan = plan_lib.plan_for_config(
+            cfg,
+            (1, cfg.n_heads, cfg.n_kv_heads, bucket,
+             pages * engine.page_size + bucket, cfg.head_dim),
+            phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
+            page_size=engine.page_size, prefix_pages=pages,
+        )
+        assert plan.impl == "pallas", plan
+    new_tokens = sum(len(r.tokens) for r in results)
+    print(
+        f"[smoke] {len(results)} requests, {new_tokens} new tokens, "
+        f"prefix hit rate {stats['prefix_hit_rate']:.2f}, "
+        f"{int(stats['extend_prefills'])} extend prefills via "
+        f"paged_flash_prefill (interpret={plan.interpret}), "
+        f"jit keys {sorted(engine._prefill_p)}"
+    )
+    print("[smoke] OK")
 
 
 def main():
@@ -143,12 +194,37 @@ def main():
             page_size=PAGE_SIZE, backend="tpu" if "tpu" in tname else "gpu")
         payload["placement"][tname] = entry
 
+    # Extend-phase prefill: modeled cost of the PR-3 paged prefill kernel
+    # vs the gather-to-dense route it replaces, at this trace's mean
+    # prefix/tail split.
+    mean_prefix = int(
+        PAGE_SIZE * stats["pages_reused"] / max(stats["extend_prefills"], 1)
+    )
+    extend_kw = dict(
+        batch=1, num_q_heads=4 * hkv, num_kv_heads=hkv,
+        prefix_len=max(mean_prefix, PAGE_SIZE), tail_len=32,
+        page_size=PAGE_SIZE, head_dim=hd, dtype_bytes=2,
+        topo=numa.MI300X,
+    )
+    paged_est = perf_model.estimate_extend_prefill(**extend_kw)
+    gather_est = perf_model.estimate_extend_prefill(gather=True, **extend_kw)
+    payload["extend_prefill"] = {
+        "mean_prefix_len": extend_kw["prefix_len"],
+        "paged_kernel_time_s": paged_est.time,
+        "gather_dense_time_s": gather_est.time,
+        "paged_vs_gather_ratio": gather_est.time / paged_est.time,
+        "extend_prefills": stats["extend_prefills"],
+        "resumed_tokens": stats["resumed_tokens"],
+    }
+
     aligned = payload["placement"]["mi300x"][layout.HEAD_ALIGNED]
     naive = payload["placement"]["mi300x"][layout.INTERLEAVED]
     payload["headline"] = {
         "prefix_hit_rate": stats["prefix_hit_rate"],
         "aligned_vs_naive_time_ratio":
             naive["time_model_s"] / aligned["time_model_s"],
+        "extend_paged_vs_gather_ratio":
+            payload["extend_prefill"]["paged_vs_gather_ratio"],
     }
 
     print(common.render_table(
@@ -159,6 +235,8 @@ def main():
           f"({int(stats['pages_reused'])}/{int(stats['prompt_pages'])} prompt pages)")
     print(f"aligned vs naive modeled speedup (mi300x): "
           f"{payload['headline']['aligned_vs_naive_time_ratio']:.2f}x")
+    print(f"extend prefill, paged kernel vs gather+dense (modeled): "
+          f"{payload['headline']['extend_paged_vs_gather_ratio']:.2f}x")
     for tname in TOPOS:
         print(f"resolve_kv_layout[{tname}]: "
               f"{payload['placement'][tname]['resolved_layout']}")
@@ -167,4 +245,9 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: short trace, assert the paged prefill kernel "
+                         "path, skip the placement sweep")
+    args = ap.parse_args()
+    smoke() if args.smoke else main()

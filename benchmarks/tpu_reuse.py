@@ -10,10 +10,10 @@ head under a placement (core.placement)."""
 from __future__ import annotations
 
 from repro.core import placement
+from repro.kernels import plan as plan_lib
 from repro.kernels.flash_attention import (
     BLOCK_FIRST, HEAD_FIRST, MappingConfig, hbm_block_fetches,
 )
-from repro.kernels.ops import resolve_mapping
 
 from benchmarks.common import fmt, render_table, save_result
 
@@ -54,12 +54,17 @@ def kernel_reuse_table():
 
 
 def resolver_table(batch: int = 8):
-    """What ``kernels.ops.resolve_mapping`` auto-selects per model config —
-    the schedule every workload now gets by default (mapping_name="auto"),
-    side by side with its predicted reuse efficiency."""
+    """What the plan layer (``kernels.plan.plan_attention``) auto-selects
+    per model config and phase — the schedule every workload now gets by
+    default (mapping policy "auto"), side by side with the prefill plan's
+    predicted reuse efficiency."""
     rows = []
     for name, hq, hkv, seq, d in CONFIGS:
-        mc = resolve_mapping((batch, hq, hkv, seq, seq, d))
+        p = plan_lib.plan_attention((batch, hq, hkv, seq, seq, d))
+        dec = plan_lib.plan_attention(
+            (batch, hq, hkv, 1, seq, d), phase=plan_lib.DECODE
+        )
+        mc = p.mapping
         eff = hbm_block_fetches(
             batch=batch, num_q_heads=hq, num_kv_heads=hkv,
             seq_q=seq, seq_kv=seq, head_dim=d, mapping=mc,
@@ -69,11 +74,13 @@ def resolver_table(batch: int = 8):
             "order": mc.order,
             "kv_resident": str(mc.kv_resident),
             "blocks": f"{mc.block_m}x{mc.block_n}",
+            "decode_chunk": str(dec.chunk),
             "reuse_%": fmt(eff * 100, 1),
         })
     print(render_table(
-        "Auto-resolved mapping per config (kernels.ops.resolve_mapping)",
-        rows, ["config", "order", "kv_resident", "blocks", "reuse_%"],
+        "Auto-resolved attention plans per config (kernels.plan)",
+        rows,
+        ["config", "order", "kv_resident", "blocks", "decode_chunk", "reuse_%"],
     ))
     save_result("tpu_resolver", rows)
     return rows

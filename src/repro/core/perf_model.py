@@ -201,6 +201,125 @@ def estimate_paged_decode(
     )
 
 
+def estimate_extend_prefill(
+    *,
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    prefix_len: int,
+    tail_len: int,
+    page_size: int,
+    head_dim: int,
+    dtype_bytes: int,
+    topo: Topology,
+    policy: str = "head_aligned",
+    gather: bool = False,
+) -> DecodeEstimate:
+    """Prefix-extension prefill: ``tail_len`` new queries attending a
+    ``prefix_len``-token paged prefix plus their own causal tail.
+
+    ``gather=False`` models the paged prefill kernel: each (batch, kv-head)
+    grid cell streams the prefix's pages exactly once (the whole GQA group
+    rides in the q block) plus the tail K/V. ``gather=True`` models the
+    legacy route the kernel replaces: the pages are read *and written back*
+    as a dense copy, which the dense flash path then reads again — ~3x the
+    prefix bytes, before any fabric cost."""
+    from repro.cache import layout as layout_lib
+
+    d = max(topo.num_domains, 1)
+    page_bytes = 2.0 * page_size * head_dim * dtype_bytes
+    prefix_pages = -(-prefix_len // page_size)
+    prefix_bytes = batch * num_kv_heads * prefix_pages * page_bytes
+    tail_bytes = 2.0 * batch * num_kv_heads * tail_len * head_dim * dtype_bytes
+    q_bytes = 2.0 * batch * num_q_heads * tail_len * head_dim * dtype_bytes
+    hbm_bytes = (3.0 * prefix_bytes if gather else prefix_bytes) \
+        + tail_bytes + q_bytes
+    if policy not in (layout_lib.HEAD_ALIGNED, layout_lib.INTERLEAVED):
+        raise ValueError(f"unknown page placement policy {policy!r}")
+    if policy == layout_lib.HEAD_ALIGNED and not gather:
+        link_bytes = 0.0
+    else:
+        # Interleaved placement — or gathering to a dense stripe, which
+        # forfeits head-alignment: the copy lands wherever the allocator
+        # put the dense buffer.
+        link_bytes = prefix_bytes * (d - 1) / d
+    # Causal tail: each query row scores prefix_len + ~half the tail.
+    flops = 4.0 * batch * num_q_heads * tail_len * (
+        prefix_len + tail_len / 2.0
+    ) * head_dim
+    t_mem = hbm_bytes / topo.hbm_bw + link_bytes / max(topo.link_bw * d, 1.0)
+    t = max(flops / topo.peak_flops, t_mem)
+    # Reuse = fraction of logical prefix reads (one per q-head: the GQA
+    # group shares each page) served without a physical fetch — the same
+    # convention as estimate_paged_decode. The gather route's 3x prefix
+    # traffic eats into it; it can go to 0, never negative.
+    group = max(1, num_q_heads // max(num_kv_heads, 1))
+    logical = group * prefix_bytes
+    fetched = prefix_bytes * (3.0 if gather else 1.0)
+    return DecodeEstimate(
+        layout=f"extend:{'gather' if gather else 'paged'}",
+        time=t, hbm_bytes=hbm_bytes, link_bytes=link_bytes, flops=flops,
+        reuse_rate=max(0.0, 1.0 - fetched / logical) if logical else 0.0,
+    )
+
+
+def estimate_attention_plan(
+    plan,
+    shape,
+    *,
+    topo: Topology,
+    dtype_bytes: int = 2,
+):
+    """Score an :class:`~repro.kernels.plan.AttentionPlan` for a shape —
+    the single scoring entry point the plan layer and the benchmarks share.
+
+    ``shape`` is ``(batch, num_q_heads, num_kv_heads, seq_q, seq_kv,
+    head_dim)`` (the plan's own convention). Dispatches on phase/layout:
+    prefill -> :func:`estimate` of the plan's mapping; dense decode ->
+    :func:`estimate_dense_decode`; paged decode ->
+    :func:`estimate_paged_decode`; paged extend ->
+    :func:`estimate_extend_prefill` (gather-modeled when the plan fell off
+    the kernel path)."""
+    from repro.core.cache_sim import AttentionWorkload
+    from repro.core.swizzle import AttentionGrid
+
+    b, hq, hkv, sq, skv, hd = (int(x) for x in shape)
+    if plan.phase == "decode":
+        if plan.kv_layout == "paged":
+            return estimate_paged_decode(
+                batch=b, num_q_heads=hq, num_kv_heads=hkv, mean_len=skv,
+                page_size=plan.page_size, head_dim=hd,
+                dtype_bytes=dtype_bytes, topo=topo,
+                policy=plan.placement or "head_aligned",
+            )
+        return estimate_dense_decode(
+            batch=b, num_q_heads=hq, num_kv_heads=hkv, capacity=skv,
+            head_dim=hd, dtype_bytes=dtype_bytes, topo=topo,
+        )
+    if plan.phase == "extend" and plan.kv_layout == "paged":
+        return estimate_extend_prefill(
+            batch=b, num_q_heads=hq, num_kv_heads=hkv,
+            prefix_len=skv - sq, tail_len=sq, page_size=plan.page_size,
+            head_dim=hd, dtype_bytes=dtype_bytes, topo=topo,
+            policy=plan.placement or "head_aligned",
+            gather=plan.impl != "pallas",
+        )
+    # prefill (and the dense-extend oracle): the mapping's analytic model.
+    mc = plan.mapping
+    name = ("swizzled_" if mc.acc_parallel else "naive_") + mc.order
+    grid = AttentionGrid(
+        batch=b, num_q_heads=hq,
+        blocks_per_head=-(-skv // mc.block_m),
+        group_size=max(1, hq // max(hkv, 1)),
+    )
+    wl = AttentionWorkload(
+        grid=grid, seq_len=skv, head_dim=hd,
+        block_m=mc.block_m, block_n=mc.block_n,
+        causal=True, dtype_bytes=dtype_bytes,
+    )
+    return estimate(name, wl, topo)
+
+
 def relative_performance(
     wl: AttentionWorkload,
     topo: Topology,

@@ -1,18 +1,25 @@
 """NUMA-aware attention kernels (Pallas TPU) + oracles.
 
+plan             the attention-plan layer: one resolver (plan_attention)
+                 for every phase (prefill | extend | decode) and KV layout
 flash_attention  FA2 forward: mapping-parameterized grid (paper's technique)
 flash_attention_bwd  dQ / dK/dV kernels with the same grid-order choice
 decode_attention  flash-decode: one ACC per (batch, kv-head) grid cell
 paged_decode_attention  flash-decode over a page table (scalar-prefetch
                  index maps; head-major page pool = NUMA-aligned placement)
+paged_prefill_attention  prefix-extension prefill reading prefix K/V
+                 straight from the page table (no gather, no q_offset
+                 fallback)
 ssd              Mamba-2 SSD intra-chunk kernel (head-first grid)
-ops              public jit'd API with impl dispatch + custom VJP
+ops              public jit'd API executing AttentionPlans + custom VJP
 ref              pure-jnp oracles for all of the above
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import ops, plan, ref  # noqa: F401
 from repro.kernels.ops import resolve_kv_layout, resolve_mapping  # noqa: F401
+from repro.kernels.plan import AttentionPlan, plan_attention  # noqa: F401
 from repro.kernels.paged_decode_attention import paged_flash_decode  # noqa: F401
+from repro.kernels.paged_prefill_attention import paged_flash_prefill  # noqa: F401
 from repro.kernels.flash_attention import (  # noqa: F401
     BLOCK_FIRST,
     HEAD_FIRST,

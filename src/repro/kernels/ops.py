@@ -1,10 +1,11 @@
-"""Public jit'd attention ops: impl dispatch, padding, custom VJP.
+"""Public jit'd attention ops: plan-driven dispatch, padding, custom VJP.
 
 Three implementations behind one API:
 
   * ``pallas``    — the NUMA-aware Pallas kernels (flash_attention.py /
-                    flash_attention_bwd.py / decode_attention.py). Real
-                    Mosaic lowering on TPU; ``interpret=True`` elsewhere.
+                    flash_attention_bwd.py / decode_attention.py /
+                    paged_decode_attention.py / paged_prefill_attention.py).
+                    Real Mosaic lowering on TPU; ``interpret=True`` elsewhere.
   * ``xla_flash`` — chunked online-softmax in pure jnp (lax.scan over KV
                     chunks). Differentiable, remat-friendly, O(S·chunk)
                     memory. Used for the multi-pod dry-run (the CPU backend
@@ -15,23 +16,19 @@ Three implementations behind one API:
                     EXPERIMENTS.md §Perf).
   * ``ref``       — exact attention (tests only).
 
-``impl='auto'`` picks pallas on TPU and xla_flash elsewhere (backend
-detection via ``repro.compat``).
+Scheduling lives in **``kernels.plan``** (PR 3): every public op accepts an
+:class:`~repro.kernels.plan.AttentionPlan` and, when none is passed, builds
+one via ``plan.plan_attention`` for its phase (prefill / extend / decode)
+and KV layout (dense / paged). The legacy entry points below —
+``resolve_mapping`` and ``resolve_kv_layout`` — are thin wrappers over that
+resolver, kept for benchmarks and tests that only want the mapping or the
+layout ranking.
 
-``resolve_mapping(shape, backend)`` is the scheduling entry point: given an
-attention shape it scores every (grid order x KV residency x block size)
-candidate with the analytic NUMA model (``core.perf_model``, cross-validated
-against ``core.cache_sim``) plus the static HBM-traffic model
-(``hbm_block_fetches``) and returns the best ``MappingConfig``. Results are
-LRU-cached per shape/backend — decode-ness and sliding window are part of
-the key, so decode shapes resolve distinctly from prefill. Passing
-``mapping=None`` (the default) to ``flash_attention`` routes through it —
-there is deliberately no module-level default mapping anymore.
-
-Serving adds the paged pair: ``paged_decode_attention`` dispatches the
-page-table kernel (``paged_decode_attention.py``) the same way, and
-``resolve_kv_layout`` ranks paged (head-aligned / interleaved placement)
-against dense stripes with ``core.perf_model``'s paged decode estimates.
+The paged serving pair: ``paged_decode_attention`` dispatches the
+page-table flash-decode kernel, and ``paged_prefill_attention`` dispatches
+the prefix-aware paged prefill kernel — prefix K/V read straight from the
+page table, no gather and no XLA ``q_offset`` fallback (which survives on
+``flash_attention`` as the oracle route).
 """
 
 from __future__ import annotations
@@ -42,151 +39,23 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro import compat
+from repro.kernels import plan as plan_lib
 from repro.kernels import ref as ref_mod
 from repro.kernels.decode_attention import flash_decode
 from repro.kernels.paged_decode_attention import paged_flash_decode
+from repro.kernels.paged_prefill_attention import paged_flash_prefill
 from repro.kernels.flash_attention import (
-    BLOCK_FIRST,
-    HEAD_FIRST,
     MappingConfig,
     flash_attention_fwd,
-    hbm_block_fetches,
+    hbm_block_fetches,  # noqa: F401  (re-export: benchmarks/tests import it here)
 )
 from repro.kernels.flash_attention_bwd import flash_attention_bwd
-
-
-def _on_tpu() -> bool:
-    return compat.on_tpu()
+from repro.kernels.plan import AttentionPlan, plan_attention  # noqa: F401
 
 
 # -----------------------------------------------------------------------------
-# Mapping resolution: shape -> best NUMA-aware schedule
+# Legacy resolvers: thin wrappers over the plan layer
 # -----------------------------------------------------------------------------
-
-#: Candidate (block_m, block_n) tilings, preference-ordered. The MXU-native
-#: 128x128 default first; larger variants only win when the model says so
-#: (e.g. less padding waste). Sub-128 blocks are excluded — the analytic
-#: model would pick them for their smaller causal-diagonal waste, but they
-#: under-fill the 128x128 MXU; short sequences still clamp via min(bm, sq).
-_CANDIDATE_BLOCKS = ((128, 128), (256, 128), (128, 256))
-
-#: Grid order -> paper mapping name for the analytic model. Every emitted
-#: candidate has acc_parallel=True, so both orders score as their swizzled
-#: variant (the naive_* names carry perf_model's ACC-replication penalty for
-#: schedules we never emit); residency is decided by the candidate filter
-#: plus the exact HBM-traffic tie-break, not by the analytic proxy.
-_PAPER_NAME = {
-    HEAD_FIRST: "swizzled_head_first",
-    BLOCK_FIRST: "swizzled_block_first",
-}
-
-
-def _topology_for(backend: str):
-    from repro.core import numa
-
-    if backend == "gpu":
-        return numa.MI300X
-    # TPU and CPU alike schedule for the megacore TPU target: CPU hosts run
-    # the kernels in interpret mode, and using the same topology guarantees
-    # dry-runs pick the same mapping the real hardware would.
-    return numa.TPU_V5P_MEGACORE
-
-
-@functools.lru_cache(maxsize=1024)
-def _resolve_mapping_cached(
-    batch: int,
-    num_q_heads: int,
-    num_kv_heads: int,
-    seq_q: int,
-    seq_kv: int,
-    head_dim: int,
-    dtype_bytes: int,
-    backend: str,
-    vmem_budget_bytes: int,
-    decode: bool,
-    window: Optional[int],
-) -> MappingConfig:
-    from repro.core import perf_model
-    from repro.core.cache_sim import AttentionWorkload
-    from repro.core.swizzle import AttentionGrid
-
-    topo = _topology_for(backend)
-    group = max(1, num_q_heads // max(num_kv_heads, 1))
-    # A sliding window bounds the KV each row actually touches: score (and
-    # choose blocks for) the live span, rounded up to a whole tile, not the
-    # full cache. Decode shapes attend every prior position, so they score
-    # non-causal — a causal model would halve their tile count and pick
-    # systematically undersized blocks.
-    causal = not decode
-    if window is not None and window > 0:
-        seq_kv = min(seq_kv, -(-(window + (0 if decode else seq_q)) // 128) * 128)
-
-    def _clamp(block, seq):
-        # Never emit a block shorter than the sequence rounded up to the
-        # sublane quantum (16 covers bf16's 16 and f32's 8): ops pads the
-        # sequence to the block size, and a non-multiple-of-sublane block
-        # only works in interpret mode — Mosaic rejects the layout.
-        return min(block, max(16, -(-seq // 16) * 16))
-
-    best = None  # (time, traffic, candidate_rank, config)
-    rank = 0
-    for bm, bn in _CANDIDATE_BLOCKS:
-        bm_eff = _clamp(bm, seq_q)
-        bn_eff = _clamp(bn, seq_kv)
-        for order in (HEAD_FIRST, BLOCK_FIRST):
-            for kv_resident in (True, False):
-                cand = MappingConfig(
-                    order=order,
-                    kv_resident=kv_resident,
-                    acc_parallel=True,
-                    block_m=bm_eff,
-                    block_n=bn_eff,
-                    vmem_budget_bytes=vmem_budget_bytes,
-                )
-                if kv_resident and not cand.resolve_resident(
-                    seq_kv, head_dim, dtype_bytes
-                ):
-                    # Over-budget residency degenerates to streaming; keep
-                    # only the honest streaming candidate.
-                    continue
-                # perf_model.estimate models a square (seq_kv x seq_kv)
-                # launch: it recomputes blocks_per_head from wl.seq_len, so
-                # feed it the same convention. For rectangular shapes
-                # (bucketed prefill vs long cache) the analytic time is a
-                # square proxy; the exact rectangular traffic enters via the
-                # tie-break below.
-                grid = AttentionGrid(
-                    batch=batch,
-                    num_q_heads=num_q_heads,
-                    blocks_per_head=-(-seq_kv // bm_eff),
-                    group_size=group,
-                )
-                wl = AttentionWorkload(
-                    grid=grid,
-                    seq_len=seq_kv,
-                    head_dim=head_dim,
-                    block_m=bm_eff,
-                    block_n=bn_eff,
-                    causal=causal,
-                    dtype_bytes=dtype_bytes,
-                )
-                est = perf_model.estimate(_PAPER_NAME[order], wl, topo)
-                traffic = hbm_block_fetches(
-                    batch=batch,
-                    num_q_heads=num_q_heads,
-                    num_kv_heads=num_kv_heads,
-                    seq_q=seq_q,
-                    seq_kv=seq_kv,
-                    head_dim=head_dim,
-                    dtype_bytes=dtype_bytes,
-                    mapping=cand,
-                )["total_bytes"]
-                key = (est.time, traffic, rank)
-                rank += 1
-                if best is None or key < best[0]:
-                    best = (key, cand)
-    return best[1]
 
 
 def resolve_mapping(
@@ -200,28 +69,21 @@ def resolve_mapping(
 ) -> MappingConfig:
     """Pick the best ``MappingConfig`` for an attention shape.
 
-    ``shape`` is ``(batch, num_q_heads, num_kv_heads, seq_q, seq_kv,
-    head_dim)``; ``backend`` defaults to the host's jit target. The resolver
-    prefers the paper's swizzled head-first residency exactly when the K/V of
-    one head fits the VMEM budget (``MappingConfig.resolve_resident``), and
-    falls back to a streamed head-first sweep otherwise; block sizes are
-    chosen by the HBM-traffic model. Results are LRU-cached.
-
-    ``decode`` / ``window`` are part of the cache key and the scoring:
-    decode shapes score non-causal (every prior position is live) and a
-    sliding window truncates the scored KV span — so a decode-over-long-
-    cache shape resolves to a different schedule than a prefill of the same
-    nominal (seq_q, seq_kv).
+    Thin wrapper over :func:`repro.kernels.plan.plan_attention` (which owns
+    the scoring and the cache); returns only the plan's mapping. ``shape``
+    is ``(batch, num_q_heads, num_kv_heads, seq_q, seq_kv, head_dim)``;
+    ``decode`` / ``window`` select the phase and are part of the plan key,
+    so a decode-over-long-cache shape resolves to a different schedule than
+    a prefill of the same nominal (seq_q, seq_kv).
     """
-    b, hq, hkv, sq, skv, d = (int(x) for x in shape)
-    return _resolve_mapping_cached(
-        b, hq, hkv, sq, skv, d,
-        int(dtype_bytes),
-        backend or compat.default_backend(),
-        int(vmem_budget_bytes),
-        bool(decode),
-        int(window) if window else None,
-    )
+    return plan_attention(
+        shape,
+        phase=plan_lib.DECODE if decode else plan_lib.PREFILL,
+        backend=backend,
+        dtype_bytes=dtype_bytes,
+        window=window,
+        vmem_budget_bytes=vmem_budget_bytes,
+    ).mapping
 
 
 def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
@@ -419,24 +281,40 @@ def flash_attention(
     impl: str = "auto",
     chunk_unroll: bool = False,
     q_offset: int = 0,
+    plan: Optional[AttentionPlan] = None,
 ) -> jnp.ndarray:
     """Multi-head / grouped-query attention. q: (B,Hq,Sq,D); k,v: (B,Hkv,Skv,D).
 
-    ``mapping=None`` auto-selects the NUMA-aware schedule for this shape via
-    :func:`resolve_mapping`.
+    ``plan=None`` resolves an :class:`AttentionPlan` for this shape (phase
+    ``prefill``, or dense ``extend`` when ``q_offset`` is nonzero); an
+    explicit ``mapping`` overrides the plan's schedule (paper A/B pins).
 
     ``q_offset`` places the query block at absolute positions
-    ``[q_offset, q_offset + Sq)`` against a longer KV (prefix-extension
-    prefill over a shared-prefix cache). Supported on the xla/ref paths; the
-    Pallas forward does not carry the offset yet, so a nonzero offset routes
-    to the XLA flash path (ROADMAP: paged prefill kernel).
+    ``[q_offset, q_offset + Sq)`` against a longer KV — the dense
+    prefix-extension route. The Pallas forward does not carry the offset,
+    so this path runs XLA flash; it is the oracle the paged prefill kernel
+    (:func:`paged_prefill_attention`) is tested against.
     """
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "xla_flash"
-    if q_offset and impl == "pallas":
-        impl = "xla_flash"
     b, hq, sq, d = q.shape
     skv = k.shape[2]
+    if plan is None:
+        phase = plan_lib.EXTEND if q_offset else plan_lib.PREFILL
+        if mapping is not None:
+            # The schedule is already decided (paper A/B pins, kernel
+            # tests): resolve only the impl/backend environment.
+            plan = plan_lib.plan_for_mapping(
+                mapping, phase=phase, impl=impl, window=window,
+            )
+        else:
+            plan = plan_attention(
+                (b, hq, k.shape[1], sq, skv, d),
+                phase=phase, window=window,
+                dtype_bytes=q.dtype.itemsize, impl=impl,
+            )
+    impl = plan.impl
+    if q_offset and impl == "pallas":
+        # Safety net for hand-built prefill plans reused with an offset.
+        impl = "xla_flash"
     if impl == "ref":
         return ref_mod.attention(
             q, k, v, causal=causal, window=window, softcap=softcap, scale=scale,
@@ -456,17 +334,13 @@ def flash_attention(
         raise ValueError(f"unknown impl {impl!r}")
 
     if mapping is None:
-        mapping = resolve_mapping(
-            (b, hq, k.shape[1], sq, skv, d),
-            dtype_bytes=q.dtype.itemsize,
-        )
+        mapping = plan.mapping
     bm, bn = mapping.block_m, mapping.block_n
     qp = _pad_to(q, 2, bm)
     kp = _pad_to(k, 2, bn)
     vp = _pad_to(v, 2, bn)
-    interpret = compat.use_interpret()
     o = _pallas_attention(
-        qp, kp, vp, causal, window, softcap, scale, mapping, interpret
+        qp, kp, vp, causal, window, softcap, scale, mapping, plan.interpret
     )
     return o[:, :, :sq]
 
@@ -481,45 +355,35 @@ def decode_attention(
     scale: Optional[float] = None,
     window: Optional[int] = None,
     impl: str = "auto",
+    plan: Optional[AttentionPlan] = None,
 ) -> jnp.ndarray:
     """Single-token decode. q: (B,Hq,D); caches: (B,Hkv,Smax,D); lengths: (B,)."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "xla"
-    if impl == "xla" or impl == "ref":
+    b, hq, d = q.shape
+    hkv, smax = k_cache.shape[1], k_cache.shape[2]
+    if plan is None:
+        plan = plan_attention(
+            (b, hq, hkv, 1, smax, d),
+            phase=plan_lib.DECODE, window=window,
+            dtype_bytes=q.dtype.itemsize, impl=impl,
+        )
+    if plan.impl in ("xla", "ref"):
         return ref_mod.decode_attention(
             q, k_cache, v_cache, lengths, softcap=softcap, scale=scale, window=window
         )
-    if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
-    b, hq, d = q.shape
-    hkv, smax = k_cache.shape[1], k_cache.shape[2]
-    # The KV chunk is the resolver's block_n for this decode shape (decode
-    # and window are part of the resolution key, so a windowed decode picks
-    # its schedule independently of the prefill of the same cache).
-    mapping = resolve_mapping(
-        (b, hq, hkv, 1, smax, d),
-        dtype_bytes=q.dtype.itemsize, decode=True, window=window,
-    )
-    chunk = min(mapping.block_n, smax)
+    if plan.impl != "pallas":
+        raise ValueError(f"unknown impl {plan.impl!r}")
+    # The KV chunk comes from the plan (the resolver's block_n, preferring a
+    # divisor of the capacity). Only truly odd capacities pay the
+    # pad-to-chunk copy; the padded tail sits beyond every ``lengths``
+    # entry, so masking never admits it.
+    chunk = min(plan.chunk or smax, smax)
     if smax % chunk:
-        # Decode is the serving hot loop: prefer a chunk that divides the
-        # cache (largest sublane-multiple divisor <= block_n) so no copy
-        # happens per tick. Only truly odd capacities pay the pad-to-chunk
-        # copy; the padded tail sits beyond every ``lengths`` entry, so
-        # masking never admits it.
-        divisor = next(
-            (c for c in range(chunk, 7, -1) if smax % c == 0 and c % 8 == 0),
-            None,
-        )
-        if divisor is not None:
-            chunk = divisor
-        else:
-            k_cache = _pad_to(k_cache, 2, chunk)
-            v_cache = _pad_to(v_cache, 2, chunk)
+        k_cache = _pad_to(k_cache, 2, chunk)
+        v_cache = _pad_to(v_cache, 2, chunk)
     return flash_decode(
         q, k_cache, v_cache, lengths,
         softcap=softcap, scale=scale, window=window, chunk=chunk,
-        interpret=compat.use_interpret(),
+        interpret=plan.interpret,
     )
 
 
@@ -534,64 +398,90 @@ def paged_decode_attention(
     scale: Optional[float] = None,
     window: Optional[int] = None,
     impl: str = "auto",
+    plan: Optional[AttentionPlan] = None,
 ) -> jnp.ndarray:
     """Paged single-token decode. q: (B,Hq,D); k/v_pages: (Hkv,P,ps,D)
     head-major; page_table: (B,max_pages) physical ids (null-page padded);
     lengths: (B,). The pallas path consumes the page table natively via
     scalar prefetch; xla/ref gathers a dense view first (oracle/dry-run)."""
-    if impl == "auto":
-        impl = "pallas" if _on_tpu() else "xla"
-    if impl == "xla" or impl == "ref":
+    b, hq, d = q.shape
+    hkv, _, ps, _ = k_pages.shape
+    if plan is None:
+        plan = plan_attention(
+            (b, hq, hkv, 1, page_table.shape[1] * ps, d),
+            phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED, page_size=ps,
+            window=window, dtype_bytes=q.dtype.itemsize, impl=impl,
+        )
+    if plan.impl in ("xla", "ref"):
         return ref_mod.paged_decode_attention(
             q, k_pages, v_pages, page_table, lengths,
             softcap=softcap, scale=scale, window=window,
         )
-    if impl != "pallas":
-        raise ValueError(f"unknown impl {impl!r}")
+    if plan.impl != "pallas":
+        raise ValueError(f"unknown impl {plan.impl!r}")
     return paged_flash_decode(
         q, k_pages, v_pages, page_table, lengths,
         softcap=softcap, scale=scale, window=window,
-        interpret=compat.use_interpret(),
+        interpret=plan.interpret,
     )
 
 
-# -----------------------------------------------------------------------------
-# KV-layout resolution: paged vs dense, placement policy
-# -----------------------------------------------------------------------------
+def paged_prefill_attention(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    k_tail: jnp.ndarray,
+    v_tail: jnp.ndarray,
+    prefix_len: jnp.ndarray,
+    tail_len: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    impl: str = "auto",
+    plan: Optional[AttentionPlan] = None,
+) -> jnp.ndarray:
+    """Prefix-extension prefill over paged prefix K/V (PR-3 headline).
 
+    q: (B,Hq,St,D) tail queries at absolute positions ``prefix_len[b]+i``;
+    k/v_pages: (Hkv,P,ps,D) head-major pool; page_table:
+    (B,max_prefix_pages) physical ids in logical order (null-page padded
+    past the live prefix); k/v_tail: (B,Hkv,St,D) the tail's fresh K/V;
+    prefix_len/tail_len: (B,) live prefix/tail tokens (dynamic — the page
+    table width is a bucketed jit constant, the live lengths are not).
 
-@functools.lru_cache(maxsize=256)
-def _resolve_kv_layout_cached(
-    batch: int,
-    num_q_heads: int,
-    num_kv_heads: int,
-    mean_len: int,
-    capacity: int,
-    page_size: int,
-    head_dim: int,
-    dtype_bytes: int,
-    backend: str,
-    shared_prefix_len: int,
-) -> Tuple[str, float, float]:
-    from repro.core import perf_model
-
-    topo = _topology_for(backend)
-    dense = perf_model.estimate_dense_decode(
-        batch=batch, num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
-        capacity=capacity, head_dim=head_dim, dtype_bytes=dtype_bytes,
-        topo=topo,
-    )
-    candidates = {"dense": dense.time}
-    for policy in ("head_aligned", "interleaved"):
-        est = perf_model.estimate_paged_decode(
-            batch=batch, num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
-            mean_len=mean_len, page_size=page_size, head_dim=head_dim,
-            dtype_bytes=dtype_bytes, topo=topo, policy=policy,
-            shared_prefix_len=shared_prefix_len,
+    The pallas path reads the prefix straight from the page table (no
+    gather, no dense copy); xla/ref is the gather-based oracle.
+    """
+    b, hq, st, d = q.shape
+    hkv, _, ps, _ = k_pages.shape
+    if plan is None:
+        plan = plan_attention(
+            (b, hq, hkv, st, page_table.shape[1] * ps + st, d),
+            phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED, page_size=ps,
+            prefix_pages=page_table.shape[1], window=window,
+            dtype_bytes=q.dtype.itemsize, impl=impl,
         )
-        candidates[f"paged:{policy}"] = est.time
-    best = min(candidates, key=candidates.get)
-    return best, candidates[best], candidates["dense"]
+    if plan.impl in ("xla", "ref"):
+        return ref_mod.paged_prefill_attention(
+            q, k_pages, v_pages, page_table, k_tail, v_tail,
+            prefix_len, tail_len,
+            softcap=softcap, scale=scale, window=window,
+        )
+    if plan.impl != "pallas":
+        raise ValueError(f"unknown impl {plan.impl!r}")
+    return paged_flash_prefill(
+        q, k_pages, v_pages, page_table, k_tail, v_tail,
+        prefix_len, tail_len,
+        softcap=softcap, scale=scale, window=window,
+        interpret=plan.interpret,
+    )
+
+
+# -----------------------------------------------------------------------------
+# KV-layout resolution: thin wrapper over the plan layer
+# -----------------------------------------------------------------------------
 
 
 def resolve_kv_layout(
@@ -604,19 +494,14 @@ def resolve_kv_layout(
     shared_prefix_len: int = 0,
 ) -> str:
     """Rank KV layouts for a decode mix; returns ``"dense"``,
-    ``"paged:head_aligned"`` or ``"paged:interleaved"``.
-
-    ``shape`` is ``(batch, num_q_heads, num_kv_heads, mean_len, head_dim)``
-    — the decode batch and its mean live sequence length; ``capacity`` is
-    the dense per-slot stripe the paged layout would replace. Scored with
-    ``core.perf_model``'s paged/dense decode estimates (page-granular
-    traffic, once-per-domain shared-prefix reuse, link-cost for remote
-    pages), the decode analogue of :func:`resolve_mapping`'s ranking."""
-    b, hq, hkv, mean_len, head_dim = (int(x) for x in shape)
-    best, _, _ = _resolve_kv_layout_cached(
-        b, hq, hkv, mean_len, int(capacity), int(page_size),
-        head_dim, int(dtype_bytes),
-        backend or compat.default_backend(),
-        int(shared_prefix_len),
+    ``"paged:head_aligned"`` or ``"paged:interleaved"``. Thin wrapper over
+    :func:`repro.kernels.plan.resolve_kv_layout` (which owns the scoring and
+    the cache) — kept as the legacy entry point for benchmarks/engines."""
+    return plan_lib.resolve_kv_layout(
+        shape,
+        capacity=capacity,
+        page_size=page_size,
+        dtype_bytes=dtype_bytes,
+        backend=backend,
+        shared_prefix_len=shared_prefix_len,
     )
-    return best

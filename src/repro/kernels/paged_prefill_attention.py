@@ -1,0 +1,276 @@
+"""Paged prefix-aware prefill Pallas kernel (PR-3 headline).
+
+Prefix-extension prefill: a request whose first ``prefix_len`` tokens were
+already prefilled by an earlier request sharing the prefix (paged engine,
+``cache.prefix``) only computes its tail's Q/K/V — but every tail query
+must still attend the whole prefix. Before this kernel that meant
+gathering the prefix's pages to a dense view and running the XLA
+``q_offset`` flash path (off Pallas entirely). Here the prefix K/V is read
+**straight from the page table**, exactly like ``paged_decode_attention``:
+
+  * the page table rides in SMEM via scalar prefetch and the prefix K/V
+    BlockSpec index maps read it directly
+    (``index_map = lambda b, h, s, pt, ...: (h, pt[b, s], 0, 0)``) — no
+    gather, no dense copy;
+  * grid ``(B, Hkv, prefix_pages + tail_tiles)`` is head-first: the leading
+    two dims stay PARALLEL so a megacore splits at ACC boundaries, and the
+    head-major pool keeps every page in its head's domain stripe
+    (``cache.layout.HEAD_ALIGNED`` by construction);
+  * the whole GQA group rides in the q block (``(G*Sq, D)`` folded rows),
+    so each prefix page is fetched once per (batch, kv-head) — never per
+    q-head — the paper's ACC co-location carried into prefill.
+
+The KV walk is two-phase under one online softmax: steps ``< prefix_pages``
+sweep the scalar-prefetched pages, later steps sweep the dense tail K/V
+(just produced by the projections; the caller scatters it into fresh pages
+afterwards). Lengths are **dynamic**: ``prefix_len`` (B,) masks the live
+prefix inside a power-of-two-bucketed page table (entries past the live
+prefix hold the reserved null page — the copy still issues, the compute is
+skipped), and ``tail_len`` (B,) masks bucket padding; rows at or past the
+live tail emit exact zeros, so length-0 tails are well-defined.
+
+The XLA ``flash_attention(q_offset=...)`` route survives as the oracle this
+kernel is tested against in interpret mode (tests/test_paged_prefill.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+
+NEG_INF = -1e30
+
+
+def _paged_prefill_kernel(
+    pt_ref, plen_ref, tlen_ref,   # scalar-prefetch: (B, mp), (B,), (B,)
+    q_ref, kp_ref, vp_ref, kt_ref, vt_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, scale, softcap, window, page_size, num_prefix, num_tail, seq_tail,
+):
+    b_idx = pl.program_id(0)
+    s_idx = pl.program_id(2)
+    plen = plen_ref[b_idx]
+    tlen = tlen_ref[b_idx]
+    num_steps = num_prefix + num_tail
+    rows = q_ref.shape[2]          # G * seq_tail (GQA group folded in)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Tail-local row index of each folded (group, tail-position) row; its
+    # absolute position is plen + row_i. Rows at/past the live tail are
+    # fully masked and emit zeros.
+    row_i = jax.lax.broadcasted_iota(jnp.int32, (rows, page_size), 0) % seq_tail
+    row_ok = row_i < tlen
+
+    def online_update(s, valid, v):
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[:, 0:1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+        l_ref[...] = jnp.broadcast_to(
+            l_ref[:, 0:1] * alpha + jnp.sum(p, axis=1, keepdims=True),
+            l_ref.shape,
+        )
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    def scores(k):
+        q = q_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale
+        if softcap is not None and softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        return s
+
+    # ---- phase A: prefix pages (page-table-indirected) -------------------
+    prefix_live = s_idx * page_size < plen
+    if window is not None and window > 0:
+        # Pages wholly before the earliest row's window (rows start at
+        # absolute position plen) contribute nothing — skip the compute,
+        # as the decode kernel does; the in-mask handles the boundary.
+        prefix_live &= s_idx * page_size + page_size - 1 >= plen - window
+
+    @pl.when((s_idx < num_prefix) & prefix_live)
+    def _prefix():
+        k = kp_ref[0, 0].astype(jnp.float32)     # (page_size, D)
+        v = vp_ref[0, 0].astype(jnp.float32)
+        col = s_idx * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1
+        )
+        # Prefix columns are always causally visible (col < plen <= row
+        # absolute position); only liveness and the window mask apply.
+        valid = (col < plen) & row_ok
+        if window is not None and window > 0:
+            valid &= col > (plen + row_i) - window
+        online_update(scores(k), valid, v)
+
+    # ---- phase B: dense tail (freshly projected K/V) ---------------------
+    t_idx = s_idx - num_prefix
+    @pl.when((s_idx >= num_prefix) & (t_idx * page_size < tlen))
+    def _tail():
+        k = kt_ref[0, 0].astype(jnp.float32)     # (page_size, D)
+        v = vt_ref[0, 0].astype(jnp.float32)
+        col = t_idx * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, page_size), 1
+        )
+        # Tail columns sit at absolute plen + col: causality and the window
+        # reduce to tail-local comparisons (plen cancels).
+        valid = (col <= row_i) & (col < tlen) & row_ok
+        if window is not None and window > 0:
+            valid &= col > row_i - window
+        online_update(scores(k), valid, v)
+
+    @pl.when(s_idx == num_steps - 1)
+    def _emit():
+        l = l_ref[:, 0:1]
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.where(l == 0.0, 1.0, l)
+        ).astype(o_ref.dtype)
+
+
+def paged_flash_prefill(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    k_tail: jnp.ndarray,
+    v_tail: jnp.ndarray,
+    prefix_len: jnp.ndarray,
+    tail_len: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Prefix-extension prefill over paged prefix K/V + dense tail K/V.
+
+    q: (B, Hq, St, D) tail queries at absolute positions
+    ``prefix_len[b] + i``; k/v_pages: (Hkv, P, page_size, D) head-major
+    pool; page_table: (B, max_prefix_pages) physical page ids in logical
+    order (entries past the live prefix must hold a valid id — the null
+    page); k/v_tail: (B, Hkv, St, D) the tail's freshly projected K/V;
+    prefix_len: (B,) live prefix tokens (<= max_prefix_pages * page_size,
+    need not be a page multiple); tail_len: (B,) live tail tokens (rows
+    past it emit zeros). Returns (B, Hq, St, D).
+    """
+    b, hq, st, d = q.shape
+    hkv, _, page_size, _ = k_pages.shape
+    if k_tail.shape != (b, hkv, st, d):
+        raise ValueError(
+            f"tail K/V shape {k_tail.shape} != {(b, hkv, st, d)}"
+        )
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not divisible by Hkv={hkv}")
+    if page_size % 8:
+        raise ValueError(f"page_size {page_size} must be a sublane multiple (8)")
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / d**0.5
+
+    # Pad the tail to whole page-size tiles (the padded tail rows/cols are
+    # masked via tail_len) so the tail sweep reuses the page tile shape.
+    st_p = max(page_size, -(-st // page_size) * page_size)
+    if st_p != st:
+        pad = ((0, 0), (0, 0), (0, st_p - st), (0, 0))
+        q = jnp.pad(q, pad)
+        k_tail = jnp.pad(k_tail, pad)
+        v_tail = jnp.pad(v_tail, pad)
+    num_tail = st_p // page_size
+
+    # An empty page table would break the clamped index map; give it one
+    # (never-live) column so prefix_len == 0 batches still trace.
+    mp = page_table.shape[1]
+    if mp == 0:
+        page_table = jnp.zeros((b, 1), jnp.int32)
+        mp = 1
+
+    # Fold the GQA group into the q block: each page is then fetched once
+    # per (batch, kv-head) grid cell, never per q-head. st_p is a multiple
+    # of page_size >= 8, so the folded row count stays sublane-aligned.
+    rows = group * st_p
+    qg = q.reshape(b, hkv, rows, d)
+
+    grid = (b, hkv, mp + num_tail)
+    kernel = functools.partial(
+        _paged_prefill_kernel,
+        scale=scale, softcap=softcap, window=window,
+        page_size=page_size, num_prefix=mp, num_tail=num_tail, seq_tail=st_p,
+    )
+
+    def page_idx(b_, h_, s_, pt, plen, tlen):
+        # Tail steps clamp to the last table entry: the copy still issues
+        # (a valid physical page — the engine null-pads) but compute is
+        # gated off by the phase predicate.
+        return (h_, pt[b_, jnp.minimum(s_, mp - 1)], 0, 0)
+
+    def tail_idx(b_, h_, s_, pt, plen, tlen):
+        return (b_, h_, jnp.clip(s_ - mp, 0, num_tail - 1), 0)
+
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, rows, d),
+                    lambda b_, h_, s_, pt, plen, tlen: (b_, h_, 0, 0),
+                ),
+                pl.BlockSpec((1, 1, page_size, d), page_idx),
+                pl.BlockSpec((1, 1, page_size, d), page_idx),
+                pl.BlockSpec((1, 1, page_size, d), tail_idx),
+                pl.BlockSpec((1, 1, page_size, d), tail_idx),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, rows, d),
+                lambda b_, h_, s_, pt, plen, tlen: (b_, h_, 0, 0),
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((rows, d), jnp.float32),
+                pltpu.VMEM((rows, 128), jnp.float32),
+                pltpu.VMEM((rows, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, rows, d), q.dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=(
+                compat.PARALLEL,
+                compat.PARALLEL,
+                compat.ARBITRARY,
+            ),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=int(4.0 * b * hq * st_p * (mp * page_size + st_p) * d),
+            bytes_accessed=int(
+                q.dtype.itemsize
+                * b * hkv * (2 * (mp + num_tail) * page_size * d
+                             + 2 * group * st_p * d)
+            ),
+            transcendentals=int(b * hq * st_p * (mp * page_size + st_p)),
+        ),
+        interpret=interpret,
+        name="paged_flash_prefill",
+    )
+    out = fn(
+        page_table.astype(jnp.int32),
+        prefix_len.astype(jnp.int32),
+        tail_len.astype(jnp.int32),
+        qg, k_pages, v_pages, k_tail, v_tail,
+    )
+    return out.reshape(b, hq, st_p, d)[:, :, :st]

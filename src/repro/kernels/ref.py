@@ -162,6 +162,75 @@ def gather_pages(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
     return g.reshape(hkv, b, mp * ps, d).transpose(1, 0, 2, 3)
 
 
+def paged_prefill_attention(
+    q: jnp.ndarray,
+    k_pages: jnp.ndarray,
+    v_pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    k_tail: jnp.ndarray,
+    v_tail: jnp.ndarray,
+    prefix_len: jnp.ndarray,
+    tail_len: jnp.ndarray,
+    *,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Prefix-extension prefill oracle: gather the prefix pages to a dense
+    view (exactly what the paged prefill kernel avoids), concatenate the
+    tail K/V, and run exact attention with per-row dynamic offsets.
+
+    q/k_tail/v_tail: (B, H*, St, D); k/v_pages: (Hkv, P, ps, D);
+    page_table: (B, mp); prefix_len/tail_len: (B,) live prefix/tail tokens.
+    Rows at or past ``tail_len`` emit exact zeros. Returns (B, Hq, St, D).
+    """
+    b, hq, st, d = q.shape
+    hkv = k_pages.shape[0]
+    group = hq // hkv
+    kp = gather_pages(k_pages, page_table)        # (B, Hkv, sp, D)
+    vp = gather_pages(v_pages, page_table)
+    sp = kp.shape[2]
+    k = _expand_kv(jnp.concatenate([kp, k_tail], axis=2), group)
+    v = _expand_kv(jnp.concatenate([vp, v_tail], axis=2), group)
+    if scale is None:
+        scale = 1.0 / d**0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    rows = jnp.arange(st)[None, :]                              # tail-local
+    rows_abs = prefix_len[:, None] + rows                       # (B, St)
+    col_pref = jnp.arange(sp)[None, :]                          # absolute
+    col_tail = jnp.arange(st)[None, :]                          # tail-local
+    # (B, St, sp): live prefix columns (always causally visible).
+    m_pref = jnp.broadcast_to(
+        (col_pref < prefix_len[:, None])[:, None, :], (b, st, sp)
+    )
+    # (B, St, St): causal within the tail, bucket padding masked.
+    m_tail = (col_tail[:, None, :] <= rows[:, :, None]) & (
+        (col_tail < tail_len[:, None])[:, None, :]
+    )
+    m_tail = jnp.broadcast_to(m_tail, (b, st, st))
+    mask = jnp.concatenate([m_pref, m_tail], axis=-1)           # (B, St, K)
+    if window is not None and window > 0:
+        col_abs = jnp.concatenate(
+            [jnp.broadcast_to(col_pref, (b, sp)),
+             prefix_len[:, None] + col_tail], axis=-1
+        )                                                       # (B, K)
+        mask &= col_abs[:, None, :] > rows_abs[:, :, None] - window
+    mask &= (rows < tail_len[:, None])[:, :, None]              # dead rows
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask[:, None], jnp.exp(s - m), 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum(
+        "bhqk,bhkd->bhqd", p / jnp.where(l == 0.0, 1.0, l),
+        v.astype(jnp.float32),
+    )
+    return o.astype(q.dtype)
+
+
 def paged_decode_attention(
     q: jnp.ndarray,
     k_pages: jnp.ndarray,

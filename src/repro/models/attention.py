@@ -2,8 +2,10 @@
 
 The kernel-facing layer of the model stack. The paper's technique enters in
 two ways:
-  * the ``mapping`` handed to ``kernels.ops.flash_attention`` (grid order /
-    KV residency / megacore semantics),
+  * the :class:`~repro.kernels.plan.AttentionPlan` handed to the
+    ``kernels.ops`` entry points (grid order / KV residency / megacore
+    semantics / kernel impl) — resolved here via ``plan_for_config``, the
+    only place the config's schedule policy is read,
   * head layout: q/k/v projections emit heads in ACC-contiguous order so the
     model-axis shard boundaries coincide with KV groups
     (``core.placement.ACC_ALIGNED``) — KV is never duplicated across shards.
@@ -19,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.kernels import ops
-from repro.kernels.flash_attention import PAPER_MAPPINGS, MappingConfig
+from repro.kernels import plan as plan_lib
 from repro.models import layers
 
 
@@ -40,13 +42,14 @@ def init_attention(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def _mapping(cfg: ModelConfig) -> Optional[MappingConfig]:
-    """Mapping for the kernels: an explicit paper mapping by name, or None
-    for ``"auto"`` — ops then resolves the best schedule per call shape via
-    ``kernels.ops.resolve_mapping`` (perf-model + HBM-traffic scored)."""
-    if cfg.mapping_name == "auto":
-        return None
-    return PAPER_MAPPINGS[cfg.mapping_name]
+def _plan(cfg: ModelConfig, shape, *, phase, window=None, kv_layout=plan_lib.DENSE,
+          page_size=None, prefix_pages=0, dtype_bytes=None) -> plan_lib.AttentionPlan:
+    """The layer's attention plan: schedule + impl for this call shape,
+    resolved (and LRU-cached) by the plan layer from the config policy."""
+    return plan_lib.plan_for_config(
+        cfg, shape, phase=phase, window=window, kv_layout=kv_layout,
+        page_size=page_size, prefix_pages=prefix_pages, dtype_bytes=dtype_bytes,
+    )
 
 
 def _project_qkv(params, x, cfg: ModelConfig, positions, rope_theta, kv_x=None,
@@ -102,13 +105,17 @@ def attention_block(
         kv_x=encoder_states if cross else None,
         rope=not cross,
     )
+    window = None if cross else spec.window
+    plan = _plan(
+        cfg, (b, cfg.n_heads, k.shape[1], s, k.shape[2], cfg.head_dim),
+        phase=plan_lib.PREFILL, window=window, dtype_bytes=q.dtype.itemsize,
+    )
     o = ops.flash_attention(
         q, k, v,
         causal=not cross,
-        window=None if cross else spec.window,
+        window=window,
         softcap=cfg.attn_softcap,
-        mapping=_mapping(cfg),
-        impl=cfg.attn_impl,
+        plan=plan,
         chunk_unroll=cfg.attn_chunk_unroll,
     )
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
@@ -117,35 +124,27 @@ def attention_block(
 
 def attention_prefill(
     params, x, cfg: ModelConfig, spec: LayerSpec, *, cache_len: int,
-    positions=None, encoder_states=None, prefix_kv=None, q_offset: int = 0,
+    positions=None, encoder_states=None,
 ) -> Tuple[jnp.ndarray, dict]:
     """Like attention_block but also returns the populated KV cache
-    (padded to ``cache_len``) for subsequent decode steps.
-
-    ``prefix_kv`` (+ static ``q_offset``): prefix-extension prefill — the
-    first ``q_offset`` positions were already prefilled by an earlier
-    request sharing this prefix (paged engine, ``cache.prefix``); their K/V
-    arrives dense-gathered in ``prefix_kv["k"|"v"]: (B, Hkv, q_offset, hd)``
-    and only the tail's K/V is computed and returned (the caller scatters it
-    into fresh pages). Queries sit at absolute positions ``q_offset + i``.
-    """
+    (padded to ``cache_len``) for subsequent decode steps."""
     b, s, d = x.shape
     if positions is None:
-        positions = q_offset + jnp.arange(s)
+        positions = jnp.arange(s)
     cross = spec.cross_attn and encoder_states is not None
     q, k, v = _project_qkv(
         params, x, cfg, positions, spec.rope_theta,
         kv_x=encoder_states if cross else None, rope=not cross,
     )
-    k_full, v_full = k, v
-    if prefix_kv is not None:
-        k_full = jnp.concatenate([prefix_kv["k"].astype(k.dtype), k], axis=2)
-        v_full = jnp.concatenate([prefix_kv["v"].astype(v.dtype), v], axis=2)
+    window = None if cross else spec.window
+    plan = _plan(
+        cfg, (b, cfg.n_heads, k.shape[1], s, k.shape[2], cfg.head_dim),
+        phase=plan_lib.PREFILL, window=window, dtype_bytes=q.dtype.itemsize,
+    )
     o = ops.flash_attention(
-        q, k_full, v_full, causal=not cross,
-        window=None if cross else spec.window,
-        softcap=cfg.attn_softcap, mapping=_mapping(cfg), impl=cfg.attn_impl,
-        chunk_unroll=cfg.attn_chunk_unroll, q_offset=q_offset,
+        q, k, v, causal=not cross, window=window,
+        softcap=cfg.attn_softcap, plan=plan,
+        chunk_unroll=cfg.attn_chunk_unroll,
     )
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
     pad = cache_len - k.shape[2]
@@ -154,6 +153,48 @@ def attention_prefill(
         "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))),
     }
     return o @ params["wo_md"].astype(x.dtype), cache
+
+
+def attention_prefill_paged(
+    params, x, cfg: ModelConfig, spec: LayerSpec, cache: dict,
+    page_table: jnp.ndarray, prefix_len: jnp.ndarray, tail_len: jnp.ndarray,
+    *, cache_len: int, positions: jnp.ndarray,
+    plan: Optional[plan_lib.AttentionPlan] = None,
+) -> Tuple[jnp.ndarray, dict]:
+    """Prefix-extension prefill over the paged KV pool (PR-3 headline).
+
+    The first ``prefix_len[b]`` positions were already prefilled by an
+    earlier request sharing this prefix (paged engine, ``cache.prefix``);
+    their K/V stays **in its pages** — the paged prefill kernel reads it
+    straight from ``page_table`` (B, prefix_pages), no gather. Only the
+    tail's K/V is computed and returned, padded to ``cache_len`` (the
+    caller scatters it into fresh pages). ``positions`` must already carry
+    the absolute query positions (``prefix_len[b] + i``); ``tail_len``
+    masks bucket padding (rows past it emit zeros).
+    """
+    b, s, d = x.shape
+    q, k, v = _project_qkv(params, x, cfg, positions, spec.rope_theta)
+    k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+    if plan is None:
+        plan = _plan(
+            cfg,
+            (b, cfg.n_heads, cfg.n_kv_heads,
+             s, page_table.shape[1] * k_pages.shape[2] + s, cfg.head_dim),
+            phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
+            page_size=k_pages.shape[2], prefix_pages=page_table.shape[1],
+            window=spec.window, dtype_bytes=q.dtype.itemsize,
+        )
+    o = ops.paged_prefill_attention(
+        q, k_pages, v_pages, page_table, k, v, prefix_len, tail_len,
+        softcap=cfg.attn_softcap, window=spec.window, plan=plan,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
+    pad = cache_len - k.shape[2]
+    cache_out = {
+        "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))),
+        "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))),
+    }
+    return o @ params["wo_md"].astype(x.dtype), cache_out
 
 
 def attention_decode(
@@ -171,9 +212,13 @@ def attention_decode(
         if cfg.qk_norm:
             q = layers.rmsnorm(params["q_norm"], q)
         kv_len = jnp.full((b,), cache["k"].shape[2], jnp.int32)
+        plan = _plan(
+            cfg, (b, h, hkv, 1, cache["k"].shape[2], hd),
+            phase=plan_lib.DECODE, dtype_bytes=q.dtype.itemsize,
+        )
         o = ops.decode_attention(
             q[:, :, 0], cache["k"], cache["v"], kv_len,
-            softcap=cfg.attn_softcap, impl=cfg.attn_impl if cfg.attn_impl != "xla_flash" else "xla",
+            softcap=cfg.attn_softcap, plan=plan,
         )
         o = o.reshape(b, 1, h * hd)
         return o @ params["wo_md"].astype(x.dtype), cache
@@ -188,10 +233,13 @@ def attention_decode(
 
     k = jax.vmap(_write)(cache["k"], k_new, idx)
     v = jax.vmap(_write)(cache["v"], v_new, idx)
-    impl = cfg.attn_impl if cfg.attn_impl not in ("xla_flash", "xla_flash_tri") else "xla"
+    plan = _plan(
+        cfg, (b, h, hkv, 1, k.shape[2], hd),
+        phase=plan_lib.DECODE, window=spec.window, dtype_bytes=q.dtype.itemsize,
+    )
     o = ops.decode_attention(
         q[:, :, 0], k, v, lengths,
-        softcap=cfg.attn_softcap, window=spec.window, impl=impl,
+        softcap=cfg.attn_softcap, window=spec.window, plan=plan,
     )
     o = o.reshape(b, 1, h * hd)
     return o @ params["wo_md"].astype(x.dtype), {"k": k, "v": v}
@@ -230,10 +278,14 @@ def attention_decode_paged(
     v_pages = v_pages.at[:, pids, offs].set(
         v_new[:, :, 0].transpose(1, 0, 2).astype(v_pages.dtype)
     )
-    impl = cfg.attn_impl if cfg.attn_impl not in ("xla_flash", "xla_flash_tri") else "xla"
+    plan = _plan(
+        cfg, (b, h, hkv, 1, page_table.shape[1] * ps, hd),
+        phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED, page_size=ps,
+        window=spec.window, dtype_bytes=q.dtype.itemsize,
+    )
     o = ops.paged_decode_attention(
         q[:, :, 0], k_pages, v_pages, page_table, lengths,
-        softcap=cfg.attn_softcap, window=spec.window, impl=impl,
+        softcap=cfg.attn_softcap, window=spec.window, plan=plan,
     )
     o = o.reshape(b, 1, h * hd)
     return o @ params["wo_md"].astype(x.dtype), {

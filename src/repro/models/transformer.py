@@ -76,15 +76,19 @@ def apply_layer(
     encoder_states: Optional[jnp.ndarray] = None,
     cache_len: int = 0,
     page_table: Optional[jnp.ndarray] = None,
-    q_offset: int = 0,
+    prefix_len: Optional[jnp.ndarray] = None,
+    plan=None,
     shard_moe=lambda t: t,
 ) -> Tuple[jnp.ndarray, Optional[Params], Dict[str, jnp.ndarray]]:
     """Returns (x, new_cache, aux).
 
     In decode mode a cache holding ``k_pages`` routes through the paged
     decode path (``page_table`` required). In prefill mode a non-None
-    ``cache`` holds the dense-gathered K/V of an already-prefilled shared
-    prefix of ``q_offset`` tokens (prefix-extension prefill).
+    ``cache`` holds the *paged* K/V pool of an already-prefilled shared
+    prefix (prefix-extension prefill): ``page_table`` names its pages,
+    ``prefix_len`` (B,) its live length, ``lengths`` (B,) the live tail
+    length, and ``plan`` the engine-resolved
+    :class:`~repro.kernels.plan.AttentionPlan` for the extend phase.
     """
     aux = _zero_aux()
     h = layers.rmsnorm(p["ln1"], x)
@@ -96,10 +100,23 @@ def apply_layer(
                 p["attn"], h, cfg, spec, positions=positions,
             ), None
         if mode == "prefill":
+            c = None if cache is None else cache.get("attn")
+            if c is not None:
+                if "k_pages" not in c:
+                    # Falling through to plain prefill would silently drop
+                    # the prefix; the dense prefix_kv route was removed in
+                    # favor of the paged prefill kernel.
+                    raise ValueError(
+                        "prefill-mode prefix caches must be paged "
+                        "(k_pages/v_pages pools)"
+                    )
+                return attn_lib.attention_prefill_paged(
+                    p["attn"], h, cfg, spec, c, page_table, prefix_len,
+                    lengths, cache_len=cache_len, positions=positions,
+                    plan=plan,
+                )
             return attn_lib.attention_prefill(
                 p["attn"], h, cfg, spec, cache_len=cache_len, positions=positions,
-                prefix_kv=None if cache is None else cache.get("attn"),
-                q_offset=q_offset,
             )
         if cache is not None and "k_pages" in cache["attn"]:
             return attn_lib.attention_decode_paged(
@@ -279,7 +296,7 @@ def _logits(params, cfg: ModelConfig, x):
 def _run_stack(
     params, cfg: ModelConfig, x, *, mode, caches=None, lengths=None,
     positions=None, encoder_states=None, cache_len=0, page_table=None,
-    q_offset=0, shard_moe=lambda t: t, remat: bool = False,
+    prefix_len=None, plan=None, shard_moe=lambda t: t, remat: bool = False,
 ):
     pattern, rem = cfg.pattern_for_depth()
     aux_tot = _zero_aux()
@@ -294,7 +311,7 @@ def _run_stack(
                 stacked_params[j], x, cfg, spec, mode=mode, cache=c_j,
                 lengths=lengths, positions=positions,
                 encoder_states=encoder_states, cache_len=cache_len,
-                page_table=page_table, q_offset=q_offset,
+                page_table=page_table, prefix_len=prefix_len, plan=plan,
                 shard_moe=shard_moe,
             )
             new_caches.append(nc)
@@ -324,8 +341,8 @@ def _run_stack(
         x, nc, a = apply_layer(
             params["layers_rem"][i], x, cfg, spec, mode=mode, cache=c_i,
             lengths=lengths, positions=positions, encoder_states=encoder_states,
-            cache_len=cache_len, page_table=page_table, q_offset=q_offset,
-            shard_moe=shard_moe,
+            cache_len=cache_len, page_table=page_table, prefix_len=prefix_len,
+            plan=plan, shard_moe=shard_moe,
         )
         new_rem.append(nc)
         aux_tot = {k: aux_tot[k] + a[k] for k in aux_tot}
@@ -366,7 +383,9 @@ def prefill(
     image_embeds: Optional[jnp.ndarray] = None,
     last_positions: Optional[jnp.ndarray] = None,
     prefix_caches: Optional[Params] = None,
-    q_offset: int = 0,
+    page_table: Optional[jnp.ndarray] = None,
+    prefix_len: Optional[jnp.ndarray] = None,
+    plan=None,
     shard_moe=lambda t: t,
 ) -> Tuple[jnp.ndarray, Params]:
     """Prefill: returns (logits at the last real position (B,V[,K]), caches).
@@ -376,21 +395,40 @@ def prefill(
     are materialized — at prefill_32k scale the full (B, S, V) tensor would
     be hundreds of GB.
 
-    ``prefix_caches`` + static ``q_offset``: prefix-extension prefill.
-    ``tokens`` holds only the tail (positions ``q_offset`` onward); each
-    attention layer additionally attends the dense-gathered K/V of the
-    shared ``q_offset``-token prefix. The returned caches cover the tail
-    only — the caller owns where prefix and tail K/V physically live
-    (``serving.engine.PagedServingEngine`` scatters them into pages).
+    ``prefix_caches`` + ``page_table`` + ``prefix_len``: prefix-extension
+    prefill. ``tokens`` holds only the tail; each attention layer
+    additionally attends the shared prefix's K/V **in place in its pages**
+    (``prefix_caches`` is the paged pool tree, ``page_table`` (B, pages)
+    names the prefix's pages, ``prefix_len`` (B,) its live token count —
+    dynamic, so one compilation serves every prefix length in a page
+    bucket). ``plan`` is the caller-resolved extend-phase
+    :class:`~repro.kernels.plan.AttentionPlan` (None lets each layer
+    resolve its own). The returned caches cover the tail only — the caller
+    owns where tail K/V physically lands
+    (``serving.engine.PagedServingEngine`` scatters it into fresh pages).
     """
     x = _embed_tokens(params, cfg, tokens)
     enc = None
     if cfg.vision_tokens and image_embeds is not None:
         enc = layers.linear(params["vision_proj"], image_embeds.astype(x.dtype))
+    positions = None
+    tail_len = None
+    if prefix_caches is not None:
+        if page_table is None or prefix_len is None:
+            raise ValueError(
+                "prefix-extension prefill needs page_table and prefix_len"
+            )
+        b, s = tokens.shape[:2]
+        positions = prefix_len[:, None] + jnp.arange(s)[None, :]
+        tail_len = (
+            last_positions + 1 if last_positions is not None
+            else jnp.full((b,), s, jnp.int32)
+        )
     x, caches, _ = _run_stack(
         params, cfg, x, mode="prefill", encoder_states=enc,
-        cache_len=cache_len, caches=prefix_caches, q_offset=q_offset,
-        shard_moe=shard_moe,
+        cache_len=cache_len, caches=prefix_caches, lengths=tail_len,
+        positions=positions, page_table=page_table, prefix_len=prefix_len,
+        plan=plan, shard_moe=shard_moe,
     )
     if last_positions is None:
         x = x[:, -1:]

@@ -18,27 +18,33 @@ in a pool of fixed-size pages (``cache.pool``), so
     of reserving a ``cache_len`` stripe up front,
   * common prefixes are prefilled once: ``cache.prefix`` hash-chains full
     pages, and later requests reuse the physical pages and prefill only
-    their tail (prefix-extension prefill, ``q_offset``),
+    their tail — the **extend phase**: the paged prefill kernel reads the
+    prefix K/V straight from the page table (no gather, no dense copy),
+    driven by one engine-resolved ``AttentionPlan`` per (tail-bucket,
+    prefix-page-bucket) jit key; prefix page counts bucket to powers of
+    two so compilations stay O(log smax) under diverse prefix lengths,
   * pool exhaustion first evicts idle prefix-cache pages, then preempts
-    the lowest-priority active sequence (its request is requeued and
-    re-prefills later — usually cheaply, through the prefix cache),
+    the lowest-priority active sequence — which later **resumes**: its
+    generated tokens are replayed through the same extend path instead of
+    restarting the decode from scratch,
   * pages are head-major (``cache.layout.HEAD_ALIGNED``): a KV head's
     pages live in that head's domain stripe, so the paged decode kernel's
     (batch, kv-head) grid cells only touch local pages — the paper's
     WG->XCD co-location carried into serving.
 
-The decode path is the paper-relevant one: ``kernels.decode_attention`` /
-``kernels.paged_decode_attention`` fetch each KV head once per
-(batch, kv-head) grid cell — the ACC insight applied to serving. Engines
-are mesh-transparent: pass sharded caches and jitted fns and they drive
-the distributed case identically.
+All kernel scheduling flows through ``kernels.plan`` (PR 3): the engines
+never thread mapping names or query offsets — they resolve
+``AttentionPlan``s and hand them to ``transformer.prefill``; the model
+layers resolve their own plans for the other phases. Engines are
+mesh-transparent: pass sharded caches and jitted fns and they drive the
+distributed case identically.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +53,7 @@ import numpy as np
 from repro.cache.pool import NULL_PAGE, OutOfPages, PagePool, SequencePages
 from repro.cache.prefix import PrefixCache, page_hashes
 from repro.configs.base import ModelConfig
-from repro.kernels import ops as kernel_ops
+from repro.kernels import plan as plan_lib
 from repro.models import transformer
 
 
@@ -81,16 +87,12 @@ class ServingEngine:
         mapping: Optional[str] = None,
     ):
         # ``mapping`` overrides the config's kernel-schedule policy for this
-        # engine: "auto" (resolve_mapping per shape) or a PAPER_MAPPINGS name.
-        if mapping is not None and mapping != cfg.mapping_name:
-            cfg = dataclasses.replace(cfg, mapping_name=mapping)
+        # engine: "auto" (plan-resolved per shape) or a paper mapping name.
+        # ``with_mapping`` validates a pinned name at construction (fail
+        # fast) instead of mid-trace.
+        cfg = plan_lib.with_mapping(cfg, mapping)
         self.cfg = cfg
         self.params = params
-        if cfg.mapping_name != "auto":
-            # Fail fast on a bad pinned name (otherwise surfaces mid-trace).
-            from repro.kernels.flash_attention import PAPER_MAPPINGS
-
-            PAPER_MAPPINGS[cfg.mapping_name]
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.prompt_buckets = tuple(b for b in prompt_buckets if b <= cache_len)
@@ -118,19 +120,17 @@ class ServingEngine:
     @property
     def mapping(self):
         """The engine's advertised kernel schedule (stats, capacity
-        planning): the pinned paper mapping, or — under "auto" — what
-        resolve_mapping picks for the steady-state prefill shape (all
-        ``num_slots`` stripes attending ``cache_len`` keys). Resolved
-        lazily; the attention layers still re-resolve per traced shape."""
-        if self.cfg.mapping_name != "auto":
-            from repro.kernels.flash_attention import PAPER_MAPPINGS
-
-            return PAPER_MAPPINGS[self.cfg.mapping_name]
-        return kernel_ops.resolve_mapping(
+        planning): what the plan layer resolves for the steady-state
+        prefill shape (all ``num_slots`` stripes attending ``cache_len``
+        keys) under the config's policy — a pinned paper mapping passes
+        through unchanged. Resolved lazily; the attention layers still
+        re-resolve per traced shape."""
+        return plan_lib.plan_for_config(
+            self.cfg,
             (self.num_slots, self.cfg.n_heads, self.cfg.n_kv_heads,
              self.cache_len, self.cache_len, self.cfg.head_dim),
-            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
-        )
+            phase=plan_lib.PREFILL,
+        ).mapping
 
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill:
@@ -307,13 +307,7 @@ class PagedServingEngine(ServingEngine):
         prefix_sharing: bool = True,
         reserve_pages: int = 1,
     ):
-        if mapping is not None and mapping != cfg.mapping_name:
-            cfg = dataclasses.replace(cfg, mapping_name=mapping)
-        if cfg.mapping_name != "auto":
-            # Fail fast on a bad pinned name (otherwise surfaces mid-trace).
-            from repro.kernels.flash_attention import PAPER_MAPPINGS
-
-            PAPER_MAPPINGS[cfg.mapping_name]
+        cfg = plan_lib.with_mapping(cfg, mapping)
         if cfg.num_codebooks != 1:
             raise ValueError("paged engine supports single-codebook models")
         for b in prompt_buckets:
@@ -358,9 +352,13 @@ class PagedServingEngine(ServingEngine):
         self.rng = np.random.default_rng(rng_seed)
         self._pending_first: Dict[int, np.ndarray] = {}
         self._submit_counter = 0
-        self._requeue: deque = deque()
+        # Preempted work: (request, tokens already generated). On
+        # re-admission the generated tokens are replayed through the extend
+        # path so decode resumes mid-stream instead of starting over.
+        self._requeue: "deque[Tuple[Request, List]]" = deque()
         self.stats = {"preemptions": 0, "prefix_evictions": 0,
-                      "pages_reused": 0, "prompt_pages": 0, "cow_copies": 0}
+                      "pages_reused": 0, "prompt_pages": 0, "cow_copies": 0,
+                      "extend_prefills": 0, "resumed_tokens": 0}
 
         self._decode = jax.jit(
             lambda params, tok, caches, lengths, pt: transformer.decode_step(
@@ -368,38 +366,10 @@ class PagedServingEngine(ServingEngine):
             )
         )
         self._prefill_p: Dict = {}
-        self._gather_jit = jax.jit(self._gather_prefix)
         self._scatter_jit = jax.jit(self._scatter_tail)
         self._copy_jit = jax.jit(self._copy_page)
 
     # -- jitted cache plumbing ---------------------------------------------
-
-    @staticmethod
-    def _gather_prefix(caches, pids):
-        """Dense view of the shared-prefix pages, in prefill-cache layout.
-
-        pids: (m,) physical ids of the prefix's pages in logical order.
-        Scanned page leaves are (n_periods, Hkv, P, ps, hd) -> dense
-        (n_periods, 1, Hkv, m*ps, hd); rem leaves lose the period axis.
-        """
-
-        def g(pages, scanned):
-            axis = 2 if scanned else 1
-            x = jnp.take(pages, pids, axis=axis)
-            if scanned:
-                npp, hkv, m, ps, hd = x.shape
-                return x.reshape(npp, hkv, m * ps, hd)[:, None]
-            hkv, m, ps, hd = x.shape
-            return x.reshape(hkv, m * ps, hd)[None]
-
-        def layer(c, scanned):
-            return {"attn": {"k": g(c["attn"]["k_pages"], scanned),
-                             "v": g(c["attn"]["v_pages"], scanned)}}
-
-        return {
-            "scanned": tuple(layer(c, True) for c in caches["scanned"]),
-            "rem": tuple(layer(c, False) for c in caches["rem"]),
-        }
 
     @staticmethod
     def _scatter_tail(caches, tail_caches, pids):
@@ -459,12 +429,27 @@ class PagedServingEngine(ServingEngine):
 
     # -- prefill -----------------------------------------------------------
 
+    @staticmethod
+    def _prefix_page_bucket(pages: int) -> int:
+        """Bucket a live prefix page count to the next power of two: the
+        page-table width is a jit constant, so bucketing bounds tail-
+        prefill compilations at O(log smax) under diverse prefix lengths
+        (the live length stays dynamic via ``prefix_len``)."""
+        if pages <= 0:
+            return 0
+        return 1 << (pages - 1).bit_length()
+
     def _prefill_paged_fn(self, bucket: int, prefix_pages: int):
-        """Jitted tail prefill, keyed by (tail bucket, #prefix pages)."""
+        """Jitted tail prefill, keyed by (tail bucket, prefix-page bucket).
+
+        The nonzero-prefix variant runs the **extend phase**: one
+        engine-resolved ``AttentionPlan`` per key drives the paged prefill
+        kernel, which reads prefix K/V straight from the page table — the
+        pool tensors ride in as arguments, never gathered to dense.
+        """
         key = (bucket, prefix_pages)
         if key not in self._prefill_p:
             cfg = self.cfg
-            q_offset = prefix_pages * self.page_size
 
             if prefix_pages == 0:
                 def f(params, tokens, last_positions):
@@ -473,11 +458,21 @@ class PagedServingEngine(ServingEngine):
                         last_positions=last_positions,
                     )
             else:
-                def f(params, tokens, last_positions, prefix_dense):
+                plan = plan_lib.plan_for_config(
+                    cfg,
+                    (1, cfg.n_heads, cfg.n_kv_heads, bucket,
+                     prefix_pages * self.page_size + bucket, cfg.head_dim),
+                    phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
+                    page_size=self.page_size, prefix_pages=prefix_pages,
+                )
+
+                def f(params, tokens, last_positions, caches, page_table,
+                      prefix_len):
                     return transformer.prefill(
                         params, cfg, tokens, cache_len=bucket,
                         last_positions=last_positions,
-                        prefix_caches=prefix_dense, q_offset=q_offset,
+                        prefix_caches=caches, page_table=page_table,
+                        prefix_len=prefix_len, plan=plan,
                     )
 
             self._prefill_p[key] = jax.jit(f)
@@ -517,12 +512,18 @@ class PagedServingEngine(ServingEngine):
             for p in matched:
                 self.pool.decref(p)
 
-    def submit(self, req: Request) -> bool:
+    def submit(self, req: Request, resume_tokens: Sequence = ()) -> bool:
         """Admit a request if a decode row and its pages are available.
 
         Prefix-cache lookup happens first: shared full pages are reused
         (prefilled once, by whoever computed them) and only the tail is
-        prefilled here.
+        prefilled here — through the paged prefill kernel, which reads the
+        prefix straight from its pages.
+
+        ``resume_tokens``: tokens a preempted run of this request already
+        generated. They are replayed through the same extend path (they are
+        just more prompt from the cache's point of view), so decode resumes
+        mid-stream instead of restarting from scratch.
         """
         free_rows = np.flatnonzero(~self.active)
         if len(free_rows) == 0:
@@ -530,6 +531,11 @@ class PagedServingEngine(ServingEngine):
         tok = np.asarray(req.prompt)
         if tok.ndim != 1:
             raise ValueError("paged engine expects flat token prompts")
+        orig_n = len(tok)
+        if len(resume_tokens):
+            tok = np.concatenate(
+                [tok, np.asarray([int(t) for t in resume_tokens], tok.dtype)]
+            )
         n = len(tok)
         ps = self.page_size
         total_pages = self.pool.pages_needed(n)
@@ -539,9 +545,9 @@ class PagedServingEngine(ServingEngine):
                 f"max_pages_per_seq {self.max_pages_per_seq}"
             )
 
-        if self.pool.pages_needed(n + req.max_new_tokens) > self.max_pages_per_seq:
+        if self.pool.pages_needed(orig_n + req.max_new_tokens) > self.max_pages_per_seq:
             raise ValueError(
-                f"request {req.uid}: prompt {n} + max_new_tokens "
+                f"request {req.uid}: prompt {orig_n} + max_new_tokens "
                 f"{req.max_new_tokens} can outgrow max_pages_per_seq="
                 f"{self.max_pages_per_seq} ({self.cache_len} tokens) "
                 "mid-decode; reject at admission instead"
@@ -558,6 +564,21 @@ class PagedServingEngine(ServingEngine):
         # Validate the prefill bucket before touching the allocator (a late
         # ValueError must not leak pages).
         if not fits_buckets(n - len(matched) * ps):
+            if len(resume_tokens):
+                # A replay tail no bucket holds: drop replayed tokens until
+                # it fits (greedy decode regenerates them exactly). The
+                # prefix match for a truncated sequence is the full match
+                # capped at its page count, so the fit is computable without
+                # re-hashing; keep the longest replay that fits.
+                m_full = len(matched)
+                for keep in range(len(resume_tokens) - 1, -1, -1):
+                    nk = orig_n + keep
+                    mk = min(m_full, (nk - 1) // ps)
+                    if fits_buckets(nk - mk * ps):
+                        return self.submit(req, list(resume_tokens)[:keep])
+                # Not even the bare prompt fits (its prefix pages were
+                # evicted since first admission): fall through to the
+                # admission error below.
             raise ValueError(
                 f"prompt tail {n - len(matched) * ps} exceeds buckets "
                 f"{self.prompt_buckets}"
@@ -585,11 +606,17 @@ class PagedServingEngine(ServingEngine):
                 self.params, jnp.asarray(padded), last
             )
         else:
-            prefix_dense = self._gather_jit(
-                self.caches, jnp.asarray(matched, jnp.int32)
-            )
-            logits, tail_caches = self._prefill_paged_fn(bucket, m)(
-                self.params, jnp.asarray(padded), last, prefix_dense
+            # Extend phase: the page-table row is padded to the power-of-two
+            # page bucket with null pages (the kernel masks them via the
+            # dynamic prefix_len), so every prefix length in a bucket shares
+            # one compilation — and the pool is consumed in place, no gather.
+            mb = self._prefix_page_bucket(m)
+            pt_row = np.full((1, mb), NULL_PAGE, np.int32)
+            pt_row[0, :m] = matched
+            self.stats["extend_prefills"] += 1
+            logits, tail_caches = self._prefill_paged_fn(bucket, mb)(
+                self.params, jnp.asarray(padded), last, self.caches,
+                jnp.asarray(pt_row), jnp.asarray([m * ps], jnp.int32),
             )
         # Scatter the tail K/V into its fresh pages (bucket is page-aligned;
         # destinations beyond the tail's real pages sink into the null page).
@@ -611,7 +638,8 @@ class PagedServingEngine(ServingEngine):
         self.page_table[row, : len(seq.pages)] = seq.pages
         self.lengths[row] = n
         self.active[row] = True
-        self.slot_out[row] = []
+        self.slot_out[row] = list(resume_tokens)
+        self.stats["resumed_tokens"] += len(resume_tokens)
         self._pending_first[row] = self._sample_host(np.asarray(logits)[0], req)
         return True
 
@@ -619,7 +647,8 @@ class PagedServingEngine(ServingEngine):
 
     def _preempt_one(self, protect: int) -> bool:
         """Evict the weakest active sequence (lowest priority, then newest)
-        and requeue its request; never the row ``protect``."""
+        and requeue it with its generated-so-far tokens (replayed through
+        the extend path on re-admission); never the row ``protect``."""
         victims = [
             (s.req.priority, -s.submit_order, row)
             for row, s in enumerate(self.seqs)
@@ -631,7 +660,7 @@ class PagedServingEngine(ServingEngine):
         state = self.seqs[row]
         self.stats["preemptions"] += 1
         self.pool.release(state.pages)
-        self._requeue.appendleft(state.req)
+        self._requeue.appendleft((state.req, list(self.slot_out[row])))
         self.active[row] = False
         self.seqs[row] = None
         self.page_table[row] = NULL_PAGE
@@ -710,7 +739,9 @@ class PagedServingEngine(ServingEngine):
         """Drive until every request (including preempted ones) completes."""
         queue = deque(requests)
         while queue or self._requeue or self.active.any():
-            while self._requeue and self.submit(self._requeue[0]):
+            while self._requeue and self.submit(
+                self._requeue[0][0], resume_tokens=self._requeue[0][1]
+            ):
                 self._requeue.popleft()
             if not self._requeue:
                 while queue and self.submit(queue[0]):
@@ -730,17 +761,14 @@ class PagedServingEngine(ServingEngine):
     @property
     def mapping(self):
         """Resolved decode-shape schedule (decode & window are part of the
-        resolver key, so this differs from the prefill resolution)."""
-        if self.cfg.mapping_name != "auto":
-            from repro.kernels.flash_attention import PAPER_MAPPINGS
-
-            return PAPER_MAPPINGS[self.cfg.mapping_name]
-        return kernel_ops.resolve_mapping(
+        plan key, so this differs from the prefill resolution)."""
+        return plan_lib.plan_for_config(
+            self.cfg,
             (self.max_batch, self.cfg.n_heads, self.cfg.n_kv_heads,
              1, self.cache_len, self.cfg.head_dim),
-            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
-            decode=True,
-        )
+            phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED,
+            page_size=self.page_size,
+        ).mapping
 
     @property
     def kv_layout(self) -> str:
@@ -748,7 +776,7 @@ class PagedServingEngine(ServingEngine):
         state (paged head-aligned vs interleaved vs dense stripes)."""
         live = self.lengths[self.active]
         mean_len = int(live.mean()) if live.size else self.cache_len // 2
-        return kernel_ops.resolve_kv_layout(
+        return plan_lib.resolve_kv_layout(
             (self.max_batch, self.cfg.n_heads, self.cfg.n_kv_heads,
              max(mean_len, 1), self.cfg.head_dim),
             capacity=self.cache_len,
@@ -765,6 +793,8 @@ class PagedServingEngine(ServingEngine):
             "prompt_pages": float(total),
             "prefix_hit_rate": reused / total if total else 0.0,
             "preemptions": float(self.stats["preemptions"]),
+            "resumed_tokens": float(self.stats["resumed_tokens"]),
+            "extend_prefills": float(self.stats["extend_prefills"]),
             "cow_copies": float(self.stats["cow_copies"]),
             "free_pages": float(self.pool.free_pages),
         }

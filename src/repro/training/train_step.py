@@ -35,9 +35,9 @@ class TrainConfig:
     remat: bool = True
     grad_compression: str = "none"   # "none" | "int8_ef"
     # Kernel-schedule policy for the attention layers: None keeps the model
-    # config's own ``mapping_name``; "auto" resolves the NUMA-aware mapping
-    # per shape (kernels/ops.py resolve_mapping); a PAPER_MAPPINGS name pins
-    # a fixed A/B configuration for ablations.
+    # config's own policy; "auto" resolves the NUMA-aware plan per shape
+    # (kernels/plan.py); a paper mapping name pins a fixed A/B
+    # configuration for ablations.
     attn_mapping: Optional[str] = None
 
 
@@ -129,8 +129,9 @@ def make_train_step(
 
     state = {"params": ..., "opt": OptState, "ef": ErrorFeedback|None}
     """
-    if tcfg.attn_mapping is not None and tcfg.attn_mapping != cfg.mapping_name:
-        cfg = dataclasses.replace(cfg, mapping_name=tcfg.attn_mapping)
+    from repro.kernels import plan as plan_lib
+
+    cfg = plan_lib.with_mapping(cfg, tcfg.attn_mapping)
 
     def train_step(state, batch):
         params, opt = state["params"], state["opt"]

@@ -1,0 +1,308 @@
+"""The attention-plan layer: resolution, caching, and call-site hygiene.
+
+Covers the PR-3 acceptance criteria directly:
+  * ``plan_attention`` is the single resolver for every phase; the legacy
+    entry points (``ops.resolve_mapping`` / ``ops.resolve_kv_layout``) are
+    thin wrappers over it,
+  * the plan LRU cache keys on **backend + interpret flag** as well as
+    shape (the PR-1 resolver silently shared entries across backends in
+    tests that flip ``JAX_PLATFORMS``),
+  * grep enforcement: no dispatch site threads ``mapping_name`` /
+    ``q_offset`` out-of-band or hand-rolls a ``MappingConfig`` past the
+    plan layer.
+"""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.kernels import ops
+from repro.kernels import plan as plan_lib
+from repro.kernels.flash_attention import (
+    HEAD_FIRST,
+    PAPER_MAPPINGS,
+    MappingConfig,
+)
+
+
+SHAPE = (2, 8, 2, 2048, 2048, 64)
+
+
+# --- resolution ---------------------------------------------------------------
+
+
+def test_plan_phases_resolve_distinct_impls():
+    prefill = plan_lib.plan_attention(SHAPE, backend="cpu")
+    decode = plan_lib.plan_attention(
+        (2, 8, 2, 1, 2048, 64), phase=plan_lib.DECODE, backend="cpu"
+    )
+    extend = plan_lib.plan_attention(
+        (1, 8, 2, 32, 96, 64), phase=plan_lib.EXTEND,
+        kv_layout=plan_lib.PAGED, page_size=16, prefix_pages=4, backend="cpu",
+    )
+    assert prefill.impl == "xla_flash"
+    assert decode.impl == "xla" and decode.chunk is not None
+    # The headline: paged extend is the Pallas kernel on EVERY backend (no
+    # gather fallback); CPU hosts run it in interpret mode.
+    assert extend.impl == "pallas" and extend.interpret
+    assert extend.prefix_capacity == 64
+    # Dense extend stays the legacy XLA q_offset oracle (pallas cannot
+    # carry the offset).
+    dense_ext = plan_lib.plan_attention(
+        (1, 8, 2, 32, 96, 64), phase=plan_lib.EXTEND, backend="cpu",
+    )
+    assert dense_ext.impl == "xla_flash"
+    # An explicitly pinned compiled CPU impl never lands on the
+    # interpreter: paged extend coerces it to the compiled gather oracle.
+    pinned = plan_lib.plan_attention(
+        (1, 8, 2, 32, 96, 64), phase=plan_lib.EXTEND,
+        kv_layout=plan_lib.PAGED, page_size=16, prefix_pages=4,
+        backend="cpu", impl="xla_flash",
+    )
+    assert pinned.impl == "xla"
+
+
+def test_plan_on_tpu_backend_targets_mosaic():
+    p = plan_lib.plan_attention(SHAPE, backend="tpu")
+    assert p.impl == "pallas" and not p.interpret
+
+
+def test_plan_cache_keys_on_backend_and_interpret():
+    """Same shape, different backend / interpret flag -> distinct entries;
+    identical key -> the same LRU object."""
+    cpu = plan_lib.plan_attention(SHAPE, backend="cpu")
+    tpu = plan_lib.plan_attention(SHAPE, backend="tpu")
+    assert cpu is not tpu
+    assert (cpu.backend, cpu.impl) != (tpu.backend, tpu.impl)
+    forced = plan_lib.plan_attention(SHAPE, backend="tpu", interpret=True)
+    assert forced is not tpu and forced.interpret
+    again = plan_lib.plan_attention(SHAPE, backend="cpu")
+    assert again is cpu
+    hash(cpu)  # usable as a jit-closure constant / custom_vjp nondiff arg
+
+
+def test_plan_decode_chunk_prefers_capacity_divisor():
+    # 2048 divides by the resolver's block_n (128) -> chunk 128, no pad.
+    even = plan_lib.plan_attention(
+        (2, 8, 2, 1, 2048, 64), phase=plan_lib.DECODE, backend="cpu"
+    )
+    assert even.chunk and 2048 % even.chunk == 0
+    # An odd capacity picks the largest sublane-multiple divisor.
+    odd = plan_lib.plan_attention(
+        (2, 8, 2, 1, 2000, 64), phase=plan_lib.DECODE, backend="cpu"
+    )
+    assert odd.chunk and 2000 % odd.chunk == 0 and odd.chunk % 8 == 0
+
+
+def test_plan_pinned_mapping_and_bad_names():
+    p = plan_lib.plan_attention(
+        SHAPE, backend="cpu", mapping_name="naive_block_first"
+    )
+    assert p.mapping is PAPER_MAPPINGS["naive_block_first"]
+    with pytest.raises(KeyError):
+        plan_lib.plan_attention(SHAPE, backend="cpu", mapping_name="nope")
+    with pytest.raises(ValueError):
+        plan_lib.plan_attention(SHAPE, phase="warmup")
+    with pytest.raises(ValueError):
+        plan_lib.plan_attention(SHAPE, kv_layout=plan_lib.PAGED)  # no page_size
+
+
+def test_plan_for_config_reads_policy():
+    cfg = registry.get_smoke_config("llama3-8b")
+    shape = (1, cfg.n_heads, cfg.n_kv_heads, 64, 64, cfg.head_dim)
+    p = plan_lib.plan_for_config(cfg, shape)
+    assert p.mapping.order == HEAD_FIRST
+    pinned = plan_lib.with_mapping(cfg, "swizzled_block_first")
+    p2 = plan_lib.plan_for_config(pinned, shape)
+    assert p2.mapping is PAPER_MAPPINGS["swizzled_block_first"]
+    with pytest.raises(KeyError):
+        plan_lib.with_mapping(cfg, "not_a_mapping")
+
+
+# --- thin wrappers ------------------------------------------------------------
+
+
+def test_resolve_mapping_is_a_thin_wrapper():
+    mc = ops.resolve_mapping(SHAPE)
+    assert mc is plan_lib.plan_attention(SHAPE).mapping
+    dec = ops.resolve_mapping((2, 8, 2, 1, 2048, 64), decode=True)
+    assert dec is plan_lib.plan_attention(
+        (2, 8, 2, 1, 2048, 64), phase=plan_lib.DECODE
+    ).mapping
+
+
+def test_resolve_kv_layout_is_a_thin_wrapper():
+    shape = (6, 32, 8, 512, 128)
+    assert ops.resolve_kv_layout(shape, capacity=2048, page_size=16) == \
+        plan_lib.resolve_kv_layout(shape, capacity=2048, page_size=16)
+
+
+def test_flash_attention_executes_a_plan():
+    """An explicitly resolved plan drives ops.flash_attention and matches
+    the oracle (the pallas route, interpret mode)."""
+    from repro.kernels import ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    plan = plan_lib.plan_attention(
+        (1, 4, 2, 256, 256, 64), impl="pallas", dtype_bytes=4
+    )
+    o = ops.flash_attention(q, k, v, causal=True, plan=plan)
+    o_ref = ref.attention(q, k, v, causal=True)
+    assert jnp.max(jnp.abs(o - o_ref)) < 2e-5
+
+
+def test_explicit_mapping_and_paged_extend_skip_scoring():
+    """A caller-decided MappingConfig (plan_for_mapping) and a paged
+    extend plan (whose kernel takes no mapping) must not pay the
+    12-candidate scoring sweep."""
+    before = plan_lib._score_mapping.cache_info().misses
+    p = plan_lib.plan_for_mapping(
+        MappingConfig(block_m=256), impl="pallas", backend="cpu"
+    )
+    assert p.impl == "pallas" and p.interpret
+    assert p.mapping.block_m == 256
+    ext = plan_lib.plan_attention(
+        (1, 8, 2, 32, 32 * 16 + 32, 64), phase=plan_lib.EXTEND,
+        kv_layout=plan_lib.PAGED, page_size=16, prefix_pages=32,
+        backend="cpu",
+    )
+    assert ext.impl == "pallas"
+    assert plan_lib._score_mapping.cache_info().misses == before
+
+
+def test_prefill_rejects_dense_prefix_caches():
+    """A dense (non-paged) prefix cache in prefill mode must raise, not
+    silently drop the prefix (the dense prefix_kv route is gone)."""
+    import numpy as np
+
+    from repro.models import transformer
+
+    cfg = registry.get_smoke_config("llama3-8b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    dense = transformer.init_caches(params, cfg, batch=1, cache_len=32)
+    tokens = jnp.asarray(np.arange(1, 17)[None])
+    with pytest.raises(ValueError, match="paged"):
+        transformer.prefill(
+            params, cfg, tokens, cache_len=16, prefix_caches=dense,
+            page_table=jnp.zeros((1, 2), jnp.int32),
+            prefix_len=jnp.asarray([16], jnp.int32),
+        )
+
+
+def test_perf_model_scores_plans():
+    """perf_model.estimate_attention_plan dispatches on the plan's
+    phase/layout, and the paged extend kernel models cheaper than the
+    gather route it replaced (prefix bytes read once, not thrice)."""
+    from repro.core import numa, perf_model
+
+    shape_e = (1, 32, 8, 64, 512 + 64, 128)
+    pe = plan_lib.plan_attention(
+        shape_e, phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
+        page_size=16, prefix_pages=32, backend="gpu",
+    )
+    paged = perf_model.estimate_attention_plan(pe, shape_e, topo=numa.MI300X)
+    gather = perf_model.estimate_extend_prefill(
+        batch=1, num_q_heads=32, num_kv_heads=8, prefix_len=512, tail_len=64,
+        page_size=16, head_dim=128, dtype_bytes=2, topo=numa.MI300X,
+        gather=True,
+    )
+    assert paged.layout == "extend:paged" and gather.layout == "extend:gather"
+    assert paged.hbm_bytes < gather.hbm_bytes
+    assert paged.time <= gather.time
+    # Reuse ranks the kernel above the gather route (fraction of logical
+    # per-q-head prefix reads served without a fetch).
+    assert paged.reuse_rate > gather.reuse_rate
+
+    shape_d = (8, 32, 8, 1, 2048, 128)
+    pd = plan_lib.plan_attention(shape_d, phase=plan_lib.DECODE, backend="gpu")
+    assert perf_model.estimate_attention_plan(
+        pd, shape_d, topo=numa.MI300X
+    ).layout == "dense"
+    pdp = plan_lib.plan_attention(
+        shape_d, phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED,
+        page_size=16, backend="gpu",
+    )
+    assert perf_model.estimate_attention_plan(
+        pdp, shape_d, topo=numa.MI300X
+    ).layout.startswith("paged:")
+
+    shape_p = (8, 32, 8, 4096, 4096, 128)
+    pp = plan_lib.plan_attention(shape_p, backend="gpu")
+    assert perf_model.estimate_attention_plan(
+        pp, shape_p, topo=numa.MI300X
+    ).time > 0
+
+
+# --- grep enforcement ---------------------------------------------------------
+
+
+def test_no_out_of_band_schedule_threading():
+    """The four former dispatch sites consume AttentionPlans: none of them
+    may thread ``q_offset`` / ``mapping_name`` by hand, look up
+    ``PAPER_MAPPINGS``, or hand-roll a ``MappingConfig`` past the plan
+    layer. (kernels/ops.py keeps ``q_offset`` only as the oracle/fallback
+    argument of ``flash_attention``; the plan layer itself is the one
+    reader of the config policy.)"""
+    root = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+    forbidden = {
+        "models/attention.py": (
+            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
+            "MappingConfig",
+        ),
+        "models/transformer.py": (
+            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
+            "MappingConfig",
+        ),
+        "serving/engine.py": (
+            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
+            "MappingConfig",
+        ),
+        # ops dispatches plans; the scoring bodies must live in plan.py.
+        "kernels/ops.py": (
+            "_resolve_mapping_cached", "_resolve_kv_layout_cached",
+            "PAPER_MAPPINGS", "use_interpret",
+        ),
+    }
+    offenders = []
+    for rel, names in forbidden.items():
+        text = (root / rel).read_text()
+        for name in names:
+            if name in text:
+                offenders.append(f"src/repro/{rel}: {name}")
+    assert not offenders, offenders
+
+
+def test_engine_resolves_schedules_through_plans():
+    """Both engines' advertised mapping comes from the plan layer and
+    honors a pinned override."""
+    import numpy as np
+
+    from repro.models import transformer
+    from repro.serving.engine import PagedServingEngine, ServingEngine
+
+    cfg = registry.get_smoke_config("llama3-8b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServingEngine(cfg, params, num_slots=2, cache_len=64,
+                        prompt_buckets=(16,))
+    assert eng.mapping is plan_lib.plan_for_config(
+        cfg, (2, cfg.n_heads, cfg.n_kv_heads, 64, 64, cfg.head_dim)
+    ).mapping
+    pinned = ServingEngine(cfg, params, num_slots=2, cache_len=64,
+                           prompt_buckets=(16,), mapping="naive_head_first")
+    assert pinned.mapping is PAPER_MAPPINGS["naive_head_first"]
+    with pytest.raises(KeyError):
+        ServingEngine(cfg, params, num_slots=2, cache_len=64,
+                      prompt_buckets=(16,), mapping="bogus")
+    paged = PagedServingEngine(cfg, params, num_pages=32, page_size=16,
+                               max_batch=2, max_pages_per_seq=4,
+                               prompt_buckets=(16, 32))
+    assert paged.mapping is plan_lib.plan_for_config(
+        cfg, (2, cfg.n_heads, cfg.n_kv_heads, 1, 64, cfg.head_dim),
+        phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED, page_size=16,
+    ).mapping

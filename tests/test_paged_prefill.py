@@ -1,0 +1,175 @@
+"""Paged prefix-aware prefill kernel vs its two oracles (PR-3 headline).
+
+All kernel runs are interpret-mode (CPU CI). Two independent ground truths:
+
+  * ``ref.paged_prefill_attention`` — gather the prefix pages to dense and
+    run exact attention with per-row dynamic offsets (the paged-decode-style
+    oracle),
+  * ``ops.flash_attention(q_offset=...)`` — the legacy dense XLA route the
+    kernel replaces in the engine, for uniform (static) prefix lengths.
+
+Coverage demanded by the issue: GQA / MQA / MHA shapes, prefix lengths that
+are *not* page multiples, and length-0 tails.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.paged_prefill_attention import paged_flash_prefill
+
+
+def mk_extend(b, hq, hkv, d, ps, max_pages, st, seed=0, prefix_lens=None,
+              tail_lens=None, dtype=jnp.float32):
+    """Random q / page pool / table / tail K-V / lengths.
+
+    prefix_lens may be arbitrary (non-page-multiple) per row; the page
+    table holds ceil(len/ps) live pages from a shuffled pool (null page 0
+    elsewhere). tail_lens default to the full tail bucket ``st``.
+    """
+    rng = np.random.default_rng(seed)
+    num_pages = 1 + b * max_pages + 2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, hq, st, d), dtype)
+    kp = jax.random.normal(ks[1], (hkv, num_pages, ps, d), dtype)
+    vp = jax.random.normal(ks[2], (hkv, num_pages, ps, d), dtype)
+    kt = jax.random.normal(ks[3], (b, hkv, st, d), dtype)
+    vt = jax.random.normal(ks[4], (b, hkv, st, d), dtype)
+    if prefix_lens is None:
+        prefix_lens = [int(rng.integers(0, max_pages * ps + 1)) for _ in range(b)]
+    if tail_lens is None:
+        tail_lens = [st] * b
+    avail = list(rng.permutation(np.arange(1, num_pages)))
+    pt = np.zeros((b, max_pages), np.int32)
+    for i, plen in enumerate(prefix_lens):
+        live = -(-int(plen) // ps)
+        pt[i, :live] = [avail.pop() for _ in range(live)]
+    return (q, kp, vp, jnp.asarray(pt), kt, vt,
+            jnp.asarray(prefix_lens, jnp.int32),
+            jnp.asarray(tail_lens, jnp.int32))
+
+
+@pytest.mark.parametrize("b,hq,hkv,d", [
+    (2, 8, 2, 64),       # GQA
+    (1, 4, 4, 32),       # MHA
+    (2, 4, 1, 64),       # MQA (gemma-like)
+    (1, 25, 5, 64),      # odd group (hymba-like)
+])
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("softcap", [None, 50.0])
+def test_paged_prefill_vs_oracle(b, hq, hkv, d, window, softcap):
+    """Parity vs the gather-based exact oracle, random (non-page-multiple)
+    prefix lengths and random tails."""
+    q, kp, vp, pt, kt, vt, plen, tlen = mk_extend(
+        b, hq, hkv, d, ps=16, max_pages=4, st=32, seed=b * 31 + hq,
+    )
+    o = paged_flash_prefill(q, kp, vp, pt, kt, vt, plen, tlen,
+                            window=window, softcap=softcap, interpret=True)
+    o_ref = ref.paged_prefill_attention(q, kp, vp, pt, kt, vt, plen, tlen,
+                                        window=window, softcap=softcap)
+    assert jnp.max(jnp.abs(o - o_ref)) < 2e-5
+
+
+@pytest.mark.parametrize("plen", [16, 19, 37, 64])  # incl. non-multiples
+def test_paged_prefill_vs_dense_q_offset_path(plen):
+    """Parity vs the legacy dense XLA ``q_offset`` route the kernel
+    replaces: gather the prefix to dense, concatenate the tail, and run
+    ``ops.flash_attention`` with a static offset."""
+    b, hq, hkv, d, ps, st = 1, 8, 2, 64, 16, 32
+    q, kp, vp, pt, kt, vt, plen_a, tlen = mk_extend(
+        b, hq, hkv, d, ps=ps, max_pages=4, st=st, seed=plen,
+        prefix_lens=[plen],
+    )
+    o = paged_flash_prefill(q, kp, vp, pt, kt, vt, plen_a, tlen,
+                            interpret=True)
+    k_pref = ref.gather_pages(kp, pt)[:, :, :plen]
+    v_pref = ref.gather_pages(vp, pt)[:, :, :plen]
+    k_full = jnp.concatenate([k_pref, kt], axis=2)
+    v_full = jnp.concatenate([v_pref, vt], axis=2)
+    o_dense = ops.flash_attention(
+        q, k_full, v_full, causal=True, q_offset=plen, impl="xla_flash",
+    )
+    assert jnp.max(jnp.abs(o - o_dense)) < 2e-5
+
+
+def test_paged_prefill_zero_length_tail_rows_are_zero():
+    """Rows at/past the live tail (bucket padding; a whole length-0 tail)
+    emit exact zeros — no NaNs from fully-masked softmax rows."""
+    q, kp, vp, pt, kt, vt, plen, _ = mk_extend(
+        3, 8, 2, 32, ps=16, max_pages=3, st=16, seed=5,
+        prefix_lens=[40, 16, 0],
+    )
+    tlen = jnp.asarray([7, 0, 16], jnp.int32)   # incl. a length-0 tail
+    o = paged_flash_prefill(q, kp, vp, pt, kt, vt, plen, tlen, interpret=True)
+    assert not jnp.any(jnp.isnan(o))
+    assert float(jnp.max(jnp.abs(o[0, :, 7:]))) == 0.0
+    assert float(jnp.max(jnp.abs(o[1]))) == 0.0
+    o_ref = ref.paged_prefill_attention(q, kp, vp, pt, kt, vt, plen, tlen)
+    assert jnp.max(jnp.abs(o - o_ref)) < 2e-5
+
+
+def test_paged_prefill_zero_prefix_matches_plain_causal():
+    """prefix_len == 0 (all-null table) degenerates to plain causal
+    attention over the tail alone."""
+    b, hq, hkv, d, st = 2, 8, 2, 32, 32
+    q, kp, vp, pt, kt, vt, plen, tlen = mk_extend(
+        b, hq, hkv, d, ps=16, max_pages=2, st=st, seed=7,
+        prefix_lens=[0, 0],
+    )
+    o = paged_flash_prefill(q, kp, vp, pt, kt, vt, plen, tlen, interpret=True)
+    o_plain = ref.attention(q, kt, vt, causal=True)
+    assert jnp.max(jnp.abs(o - o_plain)) < 2e-5
+
+
+def test_paged_prefill_ignores_dead_table_entries():
+    """Null-page padding past the live prefix and unreferenced physical
+    pages must not leak into the output (bucketed page tables rely on it)."""
+    q, kp, vp, pt, kt, vt, plen, tlen = mk_extend(
+        2, 4, 2, 32, ps=16, max_pages=4, st=16, seed=9,
+        prefix_lens=[20, 48],
+    )
+    o1 = paged_flash_prefill(q, kp, vp, pt, kt, vt, plen, tlen, interpret=True)
+    live = set()
+    ptn = np.asarray(pt)
+    for i, L in enumerate(np.asarray(plen)):
+        live |= set(ptn[i, : -(-int(L) // 16)].tolist())
+    poison = jnp.asarray(
+        [1e6 if p not in live else 0.0 for p in range(kp.shape[1])], kp.dtype
+    )[None, :, None, None]
+    o2 = paged_flash_prefill(q, kp + poison, vp + poison, pt, kt, vt,
+                             plen, tlen, interpret=True)
+    assert jnp.max(jnp.abs(o1 - o2)) == 0.0
+    # ...even inside the live pages, tokens past a non-multiple prefix_len
+    # (the partial last page's dead rows) must be masked too.
+    row_poison = kp.at[:, ptn[0, 1], 4:].add(1e6)  # prefix_len=20 < 32
+    o3 = paged_flash_prefill(q, row_poison, vp, pt, kt, vt, plen, tlen,
+                             interpret=True)
+    assert jnp.max(jnp.abs(o1[0] - o3[0])) == 0.0
+
+
+def test_ops_paged_prefill_dispatch():
+    """ops-level dispatch: the pallas plan path equals the xla oracle plan
+    path; unknown impls raise."""
+    q, kp, vp, pt, kt, vt, plen, tlen = mk_extend(
+        2, 8, 2, 64, ps=16, max_pages=3, st=16, seed=11,
+    )
+    o1 = ops.paged_prefill_attention(q, kp, vp, pt, kt, vt, plen, tlen,
+                                     impl="pallas")
+    o2 = ops.paged_prefill_attention(q, kp, vp, pt, kt, vt, plen, tlen,
+                                     impl="xla")
+    assert jnp.max(jnp.abs(o1 - o2)) < 2e-5
+    with pytest.raises(ValueError):
+        ops.paged_prefill_attention(q, kp, vp, pt, kt, vt, plen, tlen,
+                                    impl="nope")
+
+
+def test_paged_prefill_page_size_must_be_sublane_multiple():
+    q = jnp.zeros((1, 4, 16, 32))
+    kp = jnp.zeros((2, 4, 12, 32))  # page_size 12: not a multiple of 8
+    pt = jnp.zeros((1, 2), jnp.int32)
+    kt = jnp.zeros((1, 2, 16, 32))
+    one = jnp.asarray([5], jnp.int32)
+    with pytest.raises(ValueError):
+        paged_flash_prefill(q, kp, kp, pt, kt, kt, one, one, interpret=True)

@@ -146,6 +146,90 @@ def test_paged_prefix_reuse_survives_eviction_pressure(llama):
         assert [int(t) for t in r.tokens] == want, r.uid
 
 
+def test_paged_prefill_compile_cache_is_log_bounded(llama):
+    """Diverse live prefix lengths must NOT mint one tail-prefill
+    compilation each: the jit key buckets prefix pages to powers of two,
+    so the cache stays O(log smax) while outputs remain exact."""
+    cfg, params = llama
+    rng = np.random.default_rng(7)
+    base = rng.integers(1, 400, size=(96,))  # 6 full pages once published
+    eng = PagedServingEngine(cfg, params, num_pages=64, page_size=16,
+                             max_batch=2, max_pages_per_seq=10,
+                             prompt_buckets=(16, 32, 64, 96))
+    prompts = [base]  # publishes all 6 full pages into the prefix cache
+    # Prefixes of 1..6 shared pages, each with a short unique tail.
+    for i in range(1, 7):
+        prompts.append(
+            np.concatenate([base[: 16 * i], rng.integers(1, 400, size=(8,))])
+        )
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=3)
+            for i, p in enumerate(prompts)]
+    results = eng.run(reqs)
+    assert len(results) == len(reqs)
+    for r in results:
+        want = direct_greedy(cfg, params, prompts[r.uid], 3)
+        assert [int(t) for t in r.tokens] == want, r.uid
+    assert eng.stats["extend_prefills"] >= 5  # the sweep hit the extend path
+    prefix_keys = {pages for _, pages in eng._prefill_p if pages > 0}
+    # Powers of two only, and logarithmically many despite 6 distinct
+    # matched prefix lengths.
+    assert all(p & (p - 1) == 0 for p in prefix_keys), prefix_keys
+    import math
+
+    assert len(prefix_keys) <= math.ceil(math.log2(eng.max_pages_per_seq)) + 1, \
+        prefix_keys
+
+
+def test_paged_preemption_resumes_generated_tokens(llama):
+    """A preempted sequence must resume by replaying its generated tokens
+    through the extend path — not restart decode from scratch — and still
+    bit-match the direct greedy decode."""
+    cfg, params = llama
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(1, 400, size=(20,)) for _ in range(3)]
+    eng = PagedServingEngine(cfg, params, num_pages=10, page_size=16,
+                             max_batch=3, max_pages_per_seq=4,
+                             prompt_buckets=(16, 32, 64))
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=30, priority=i)
+            for i, p in enumerate(prompts)]
+    results = eng.run(reqs)
+    assert sorted(r.uid for r in results) == [0, 1, 2]
+    stats = eng.prefix_stats()
+    assert stats["preemptions"] >= 1
+    # The victim had decoded tokens before eviction and they were replayed
+    # (restart-from-scratch would leave this at 0).
+    assert stats["resumed_tokens"] > 0
+    for r in results:
+        want = direct_greedy(cfg, params, prompts[r.uid], 30)
+        assert [int(t) for t in r.tokens] == want, r.uid
+
+
+def test_paged_resume_truncates_oversized_replay(llama):
+    """A resumed request whose prompt+generated replay tail exceeds every
+    prefill bucket must shed replayed tokens until the tail fits (they are
+    regenerated by decode) instead of raising mid-run."""
+    cfg, params = llama
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(1, 400, size=(30,))
+    eng = PagedServingEngine(cfg, params, num_pages=32, page_size=16,
+                             max_batch=2, max_pages_per_seq=5,
+                             prompt_buckets=(16, 32))
+    req = Request(uid=0, prompt=prompt, max_new_tokens=45)
+    # Seed the prefix cache with the prompt's full page, as a prior
+    # admission would have.
+    assert eng.submit(req)
+    eng._preempt_one(protect=-1)
+    # Resume with a 40-token replay: tail 30+40-16 = 54 exceeds bucket 32,
+    # so the engine must keep only the 18 replayed tokens that fit
+    # (30+18-16 = 32) and re-decode the rest.
+    fake = [int(t) for t in rng.integers(1, 400, size=(40,))]
+    assert eng.submit(req, resume_tokens=fake)
+    row = int(np.flatnonzero(eng.active)[0])
+    assert eng.slot_out[row] == fake[:18]
+    assert eng.lengths[row] == 30 + 18
+    assert eng.stats["resumed_tokens"] == 18
+
+
 def test_paged_rejects_unservable_request_at_admission(llama):
     """prompt + max_new_tokens that cannot fit max_pages_per_seq must fail
     at submit, not crash mid-decode."""
