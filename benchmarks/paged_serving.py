@@ -80,8 +80,13 @@ def smoke():
     """CI smoke: drive the paged engine over a prefix-sharing trace and
     assert the extend phase ran through the paged Pallas prefill kernel
     (plan impl == "pallas"; interpret mode on CPU) — the non-fallback
-    route — with outputs completing for every request."""
+    route — with outputs completing for every request; then exercise a
+    plan-chosen ``num_splits > 1`` split-K decode (interpret mode) and
+    check it against the oracle."""
+    import jax.numpy as jnp
+
     from repro.kernels import plan as plan_lib
+    from repro.kernels import ref
 
     cfg = registry.get_smoke_config("llama3-8b")
     params = transformer.init_model(jax.random.PRNGKey(0), cfg)
@@ -100,10 +105,10 @@ def smoke():
     # The engine's extend plans must all be the kernel (no gather fallback).
     extend_keys = [k for k in engine._prefill_p if k[1] > 0]
     assert extend_keys, "no extend-phase compilation recorded"
-    for bucket, pages in extend_keys:
+    for bucket, pages, rows in extend_keys:
         plan = plan_lib.plan_for_config(
             cfg,
-            (1, cfg.n_heads, cfg.n_kv_heads, bucket,
+            (rows, cfg.n_heads, cfg.n_kv_heads, bucket,
              pages * engine.page_size + bucket, cfg.head_dim),
             phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
             page_size=engine.page_size, prefix_pages=pages,
@@ -115,7 +120,33 @@ def smoke():
         f"prefix hit rate {stats['prefix_hit_rate']:.2f}, "
         f"{int(stats['extend_prefills'])} extend prefills via "
         f"paged_flash_prefill (interpret={plan.interpret}), "
+        f"{int(stats['batched_prefills'])} batched launches, "
         f"jit keys {sorted(engine._prefill_p)}"
+    )
+
+    # Split-K decode (PR 4): a long-context B x Hkv = 1 shape must resolve
+    # to num_splits > 1 on the scoring topology, and the split kernel must
+    # run (interpret mode on CPU runners) to oracle parity.
+    b, hq, hkv, smax, hd = 1, 4, 1, 32768, 64
+    splan = plan_lib.plan_attention(
+        (b, hq, hkv, 1, smax, hd), phase=plan_lib.DECODE, backend="cpu",
+        dtype_bytes=4, impl="pallas",
+    )
+    assert splan.num_splits > 1, splan
+    assert splan.interpret, "CI smoke must exercise interpret mode"
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (b, hq, hd), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, hkv, smax, hd), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, hkv, smax, hd), jnp.float32)
+    lengths = jnp.asarray([smax - 3], jnp.int32)
+    o = kernel_ops.decode_attention(q, kc, vc, lengths, plan=splan)
+    o_ref = ref.decode_attention(q, kc, vc, lengths)
+    err = float(jnp.max(jnp.abs(o - o_ref)))
+    assert err < 2e-5, err
+    print(
+        f"[smoke] split-K decode: plan chose num_splits={splan.num_splits} "
+        f"(chunk={splan.chunk}) for B*Hkv={b * hkv} at {smax} tokens; "
+        f"kernel parity {err:.2e}"
     )
     print("[smoke] OK")
 
@@ -217,6 +248,48 @@ def main():
         "resumed_tokens": stats["resumed_tokens"],
     }
 
+    # Split-K decode (PR 4): plan-resolved num_splits and the modeled
+    # decode-throughput win at long-context, small-batch shapes — the
+    # occupancy regime (B*Hkv < num_domains) the split axis exists for.
+    from repro.kernels import plan as plan_lib
+
+    split_rows = []
+    payload["split_k"] = {}
+    long_ctx = 32768
+    for b, hq_, hkv_ in [(1, 8, 1), (1, 32, 4), (1, 32, 8), (8, 32, 8)]:
+        plan = plan_lib.plan_attention(
+            (b, hq_, hkv_, 1, long_ctx, hd), phase=plan_lib.DECODE,
+            backend="gpu", dtype_bytes=2,
+        )
+        est = perf_model.estimate_decode_splits(
+            batch=b, num_q_heads=hq_, num_kv_heads=hkv_, seq_kv=long_ctx,
+            granule=plan.chunk or 512, head_dim=hd, dtype_bytes=2,
+            topo=numa.MI300X,
+        )
+        assert plan.num_splits == est.num_splits  # the plan IS the model
+        payload["split_k"][f"b{b}_hq{hq_}_hkv{hkv_}"] = {
+            "cells": b * hkv_,
+            "num_domains": numa.MI300X.num_domains,
+            "num_splits": plan.num_splits,
+            "chunk": plan.chunk,
+            "modeled_speedup": est.speedup,
+            # Aggregate: one tick decodes one token per sequence.
+            "tokens_per_s_one_pass": b / est.base_time,
+            "tokens_per_s_split": b / est.time,
+            "sweep": {str(s): t for s, t in est.times},
+        }
+        split_rows.append({
+            "B": b, "Hq": hq_, "Hkv": hkv_,
+            "cells": b * hkv_,
+            "splits": plan.num_splits,
+            "speedup": f"{est.speedup:.2f}x",
+            "t_1 us": f"{1e6 * est.base_time:.1f}",
+            "t_split us": f"{1e6 * est.time:.1f}",
+        })
+    lonely = payload["split_k"]["b1_hq8_hkv1"]
+    assert lonely["num_splits"] > 1 and lonely["modeled_speedup"] > 1.0, \
+        "B*Hkv < num_domains long-context decode must split"
+
     aligned = payload["placement"]["mi300x"][layout.HEAD_ALIGNED]
     naive = payload["placement"]["mi300x"][layout.INTERLEAVED]
     payload["headline"] = {
@@ -225,18 +298,28 @@ def main():
             naive["time_model_s"] / aligned["time_model_s"],
         "extend_paged_vs_gather_ratio":
             payload["extend_prefill"]["paged_vs_gather_ratio"],
+        "split_k_speedup_b1_hkv1": lonely["modeled_speedup"],
+        "split_k_num_splits_b1_hkv1": lonely["num_splits"],
     }
 
     print(common.render_table(
         "Paged decode tick: NUMA-aligned vs naive page placement",
         rows, ("topo", "policy", "local%", "reuse%", "HBM MiB",
                "remote MiB", "t_model us")))
+    print(common.render_table(
+        f"Split-K decode (mi300x, {long_ctx}-token context, plan-chosen "
+        "splits)",
+        split_rows, ("B", "Hq", "Hkv", "cells", "splits", "speedup",
+                     "t_1 us", "t_split us")))
     print(f"\nprefix-cache hit rate: {stats['prefix_hit_rate']:.2f} "
           f"({int(stats['pages_reused'])}/{int(stats['prompt_pages'])} prompt pages)")
     print(f"aligned vs naive modeled speedup (mi300x): "
           f"{payload['headline']['aligned_vs_naive_time_ratio']:.2f}x")
     print(f"extend prefill, paged kernel vs gather+dense (modeled): "
           f"{payload['headline']['extend_paged_vs_gather_ratio']:.2f}x")
+    print(f"split-K decode speedup at B*Hkv=1, {long_ctx} ctx (modeled): "
+          f"{payload['headline']['split_k_speedup_b1_hkv1']:.2f}x "
+          f"(num_splits={payload['headline']['split_k_num_splits_b1_hkv1']})")
     for tname in TOPOS:
         print(f"resolve_kv_layout[{tname}]: "
               f"{payload['placement'][tname]['resolved_layout']}")

@@ -31,7 +31,7 @@ so the three layers can never disagree on the placement arithmetic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence
+from typing import Dict, Sequence, Tuple
 
 from repro.core.numa import Topology
 
@@ -39,6 +39,68 @@ HEAD_ALIGNED = "head_aligned"
 INTERLEAVED = "interleaved"
 
 PAGE_POLICIES = (HEAD_ALIGNED, INTERLEAVED)
+
+
+# -----------------------------------------------------------------------------
+# Split-K decode: page-range partitioning (PR 4)
+# -----------------------------------------------------------------------------
+
+
+def decode_split_ranges(
+    num_units: int, num_splits: int
+) -> Tuple[Tuple[int, int], ...]:
+    """Partition a decode cell's KV walk of ``num_units`` units (pages for
+    the paged kernel, KV chunks for the dense one) into ``num_splits``
+    contiguous half-open ranges ``(start, end)``.
+
+    This is the single source of truth for split-K boundaries: the
+    kernels derive their per-split grid extent from it, the tests prove
+    domain alignment against it, and ``ref.split_decode_attention``
+    replays it. Boundaries are **unit-granular by construction** — a
+    split never bisects a page/chunk, which under the head-major pool
+    (``HEAD_ALIGNED``: every page of a KV head lives in that head's
+    domain stripe) means a split never straddles NUMA domains either
+    (:func:`split_ranges_domain_aligned`). Ranges are equal-width
+    (``ceil(num_units / num_splits)``) except the trailing one, which may
+    be short when ``num_splits`` does not divide ``num_units``; ranges
+    that would be *empty* are dropped, so the returned split count can be
+    below ``num_splits`` (e.g. 5 units over 4 requested splits -> three
+    ranges of 2+2+1) — a split grid cell always has real work.
+    """
+    if num_units <= 0:
+        return ((0, 0),)
+    s = max(1, min(int(num_splits), int(num_units)))
+    per = -(-num_units // s)
+    s = -(-num_units // per)  # drop empty trailing ranges
+    return tuple(
+        (i * per, min((i + 1) * per, num_units))
+        for i in range(s)
+    )
+
+
+def split_ranges_domain_aligned(
+    ranges: Sequence[Tuple[int, int]],
+    *,
+    head: int,
+    policy: str,
+    num_kv_heads: int,
+    num_domains: int,
+) -> bool:
+    """True iff every page range reads from a single memory domain for
+    ``head`` under ``policy`` — the property that makes split-K NUMA-clean:
+    each split's partial pass stays inside one domain's cache. Holds for
+    every range under ``HEAD_ALIGNED`` (a head's pages share a domain by
+    construction); fails for any multi-page range under ``INTERLEAVED``
+    when ``num_domains > 1`` — which is exactly why the pool is
+    head-major."""
+    for start, end in ranges:
+        domains = {
+            domain_of_page(pid, head, policy, num_kv_heads, num_domains)
+            for pid in range(start, end)
+        }
+        if len(domains) > 1:
+            return False
+    return True
 
 
 def domain_of_head(head: int, num_kv_heads: int, num_domains: int) -> int:

@@ -24,7 +24,7 @@ Model (per domain, steady state):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional, Tuple
 
 from repro.core import acc as acc_lib
 from repro.core import swizzle
@@ -201,6 +201,115 @@ def estimate_paged_decode(
     )
 
 
+# -----------------------------------------------------------------------------
+# Split-K decode: occupancy-driven split selection (PR 4)
+# -----------------------------------------------------------------------------
+
+#: Fixed cost charged for the split-combine stage: the second (tiny) launch
+#: plus its scheduling latency. Charged once whenever num_splits > 1.
+COMBINE_LAUNCH_OVERHEAD_S = 2e-6
+
+#: Default cap on the split sweep. The model plateaus well before this on
+#: every topology we carry (waves stop shrinking once cells x splits covers
+#: the domains, and the combine term grows linearly), so the cap only
+#: bounds the candidate loop.
+MAX_DECODE_SPLITS = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitEstimate:
+    """Occupancy model of split-K decode for one shape: the chosen split
+    count, its modeled time, the one-pass baseline, and the full sweep."""
+
+    num_splits: int
+    time: float                      # modeled tick seconds at num_splits
+    base_time: float                 # num_splits == 1 baseline
+    times: Tuple[Tuple[int, float], ...]  # the whole candidate sweep
+
+    @property
+    def speedup(self) -> float:
+        return self.base_time / self.time if self.time else 0.0
+
+
+def estimate_decode_splits(
+    *,
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    seq_kv: int,
+    granule: int,
+    head_dim: int,
+    dtype_bytes: int,
+    topo: Topology,
+    window: Optional[int] = None,
+    max_splits: int = MAX_DECODE_SPLITS,
+) -> SplitEstimate:
+    """Pick ``num_splits`` for a flash-decode launch by occupancy.
+
+    A decode tick exposes only ``cells = batch x num_kv_heads`` parallel
+    grid cells (the GQA group rides inside a cell); on a machine with
+    more NUMA domains than cells most of the chip idles while one cell
+    streams its whole KV serially. Splitting the KV walk into ``s``
+    ranges multiplies the cell count by ``s`` at the price of a combine
+    pass over the partial states. Modeled per candidate ``s``:
+
+      * each (cell, split) streams ``kv_bytes / s`` from its domain's HBM
+        share and runs ``flops / s`` on its domain's compute share
+        (``granule``-sized units: pages for the paged kernel, KV chunks
+        for the dense one — ``s`` is capped at the unit count so a split
+        is never empty by construction);
+      * the launch executes in ``waves = ceil(cells * s / num_domains)``
+        rounds — the occupancy term: splitting only wins while extra
+        splits still land on idle domains;
+      * ``s > 1`` is charged the combine explicitly: the fp32 partial
+        ``(acc, m, l)`` states written by stage one and re-read by the
+        combine, plus :data:`COMBINE_LAUNCH_OVERHEAD_S`.
+
+    A sliding window bounds the *live* KV (flops and the useful split
+    count) without reducing streamed bytes — the pipeline copies every
+    unit regardless; relevance only gates compute. Splitting still pays
+    off under a window because the cost being parallelized IS the
+    streaming: each split cell DMAs only its range (``kv_bytes / s``)
+    even when all its positions are masked, so the bandwidth term — which
+    dominates decode — genuinely divides by ``s``; only the (negligible)
+    compute concentrates in the window-holding splits. Capping the
+    candidate count at the live unit count keeps the choice conservative.
+    """
+    cells = max(1, batch * num_kv_heads)
+    group = max(1, num_q_heads // max(num_kv_heads, 1))
+    domains = max(1, topo.num_domains)
+    live = min(seq_kv, window) if (window and window > 0) else seq_kv
+    units = max(1, -(-int(live) // max(int(granule), 1)))
+
+    kv_bytes = 2.0 * seq_kv * head_dim * dtype_bytes        # per cell, K + V
+    flops = 4.0 * group * live * head_dim                   # per cell
+    bw_dom = topo.hbm_bw / domains
+    fl_dom = topo.peak_flops / domains
+    gp = max(8, -(-group // 8) * 8)
+    # Partial state per (cell, split): fp32 acc (gp x d) + m + l (gp x 1
+    # each), written once and read once by the combine.
+    state_bytes = 2 * 4.0 * gp * (head_dim + 2)
+
+    times = []
+    best = None
+    for s in range(1, max(1, min(int(max_splits), units)) + 1):
+        waves = -(-cells * s // domains)
+        t_cell = max(kv_bytes / s / bw_dom, flops / s / fl_dom)
+        t = waves * t_cell
+        if s > 1:
+            t += cells * s * state_bytes / topo.hbm_bw
+            t += COMBINE_LAUNCH_OVERHEAD_S
+        times.append((s, t))
+        if best is None or t < best[1]:
+            best = (s, t)
+    return SplitEstimate(
+        num_splits=best[0],
+        time=best[1],
+        base_time=times[0][1],
+        times=tuple(times),
+    )
+
+
 def estimate_extend_prefill(
     *,
     batch: int,
@@ -223,7 +332,17 @@ def estimate_extend_prefill(
     rides in the q block) plus the tail K/V. ``gather=True`` models the
     legacy route the kernel replaces: the pages are read *and written back*
     as a dense copy, which the dense flash path then reads again — ~3x the
-    prefix bytes, before any fabric cost."""
+    prefix bytes, before any fabric cost.
+
+    Both routes are charged **occupancy** (PR 4): the paged kernel's grid
+    exposes only ``batch x num_kv_heads`` parallel cells (its page walk
+    and tail steps are sequential inside a cell), while the gather
+    route's dense flash fans out over ``batch x num_q_heads x tail
+    q-blocks``. Each route's effective bandwidth/compute is its occupied
+    share ``min(1, cells / num_domains)`` of the chip — so at low
+    ``B x Hkv`` (MQA, single-request admission) the gather route's extra
+    prefix bytes can be cheaper than leaving domains idle, and the plan
+    layer picks the route per shape on exactly this estimate."""
     from repro.cache import layout as layout_lib
 
     d = max(topo.num_domains, 1)
@@ -232,8 +351,6 @@ def estimate_extend_prefill(
     prefix_bytes = batch * num_kv_heads * prefix_pages * page_bytes
     tail_bytes = 2.0 * batch * num_kv_heads * tail_len * head_dim * dtype_bytes
     q_bytes = 2.0 * batch * num_q_heads * tail_len * head_dim * dtype_bytes
-    hbm_bytes = (3.0 * prefix_bytes if gather else prefix_bytes) \
-        + tail_bytes + q_bytes
     if policy not in (layout_lib.HEAD_ALIGNED, layout_lib.INTERLEAVED):
         raise ValueError(f"unknown page placement policy {policy!r}")
     if policy == layout_lib.HEAD_ALIGNED and not gather:
@@ -247,8 +364,25 @@ def estimate_extend_prefill(
     flops = 4.0 * batch * num_q_heads * tail_len * (
         prefix_len + tail_len / 2.0
     ) * head_dim
-    t_mem = hbm_bytes / topo.hbm_bw + link_bytes / max(topo.link_bw * d, 1.0)
-    t = max(flops / topo.peak_flops, t_mem)
+    t_link = link_bytes / max(topo.link_bw * d, 1.0)
+    if gather:
+        hbm_bytes = 3.0 * prefix_bytes + tail_bytes + q_bytes
+        # The gather copy (read + write the prefix) is an embarrassingly
+        # parallel memcpy at full chip occupancy; the dense flash that
+        # follows re-reads the prefix and fans out over q blocks.
+        flash_cells = batch * num_q_heads * max(1, -(-tail_len // 128))
+        occ = min(1.0, flash_cells / d)
+        t_copy = 2.0 * prefix_bytes / topo.hbm_bw + t_link
+        flash_bytes = prefix_bytes + tail_bytes + q_bytes
+        t = t_copy + max(
+            flops / (topo.peak_flops * occ),
+            flash_bytes / (topo.hbm_bw * occ),
+        )
+    else:
+        hbm_bytes = prefix_bytes + tail_bytes + q_bytes
+        occ = min(1.0, (batch * num_kv_heads) / d)
+        t_mem = hbm_bytes / (topo.hbm_bw * occ) + t_link
+        t = max(flops / (topo.peak_flops * occ), t_mem)
     # Reuse = fraction of logical prefix reads (one per q-head: the GQA
     # group shares each page) served without a physical fetch — the same
     # convention as estimate_paged_decode. The gather route's 3x prefix

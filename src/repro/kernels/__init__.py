@@ -4,9 +4,13 @@ plan             the attention-plan layer: one resolver (plan_attention)
                  for every phase (prefill | extend | decode) and KV layout
 flash_attention  FA2 forward: mapping-parameterized grid (paper's technique)
 flash_attention_bwd  dQ / dK/dV kernels with the same grid-order choice
-decode_attention  flash-decode: one ACC per (batch, kv-head) grid cell
+decode_attention  flash-decode: one ACC per (batch, kv-head) grid cell,
+                 plus the split-K path (PARALLEL axis over KV ranges)
 paged_decode_attention  flash-decode over a page table (scalar-prefetch
-                 index maps; head-major page pool = NUMA-aligned placement)
+                 index maps; head-major page pool = NUMA-aligned placement),
+                 split-K over domain-pure page ranges
+decode_common    shared decode arithmetic: unit relevance predicate,
+                 online-softmax block update, split-state combine
 paged_prefill_attention  prefix-extension prefill reading prefix K/V
                  straight from the page table (no gather, no q_offset
                  fallback)

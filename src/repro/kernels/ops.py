@@ -375,7 +375,9 @@ def decode_attention(
     # The KV chunk comes from the plan (the resolver's block_n, preferring a
     # divisor of the capacity). Only truly odd capacities pay the
     # pad-to-chunk copy; the padded tail sits beyond every ``lengths``
-    # entry, so masking never admits it.
+    # entry, so masking never admits it. ``num_splits`` likewise rides the
+    # plan (the occupancy model's split-K choice); the kernel clamps it to
+    # the chunk count.
     chunk = min(plan.chunk or smax, smax)
     if smax % chunk:
         k_cache = _pad_to(k_cache, 2, chunk)
@@ -383,6 +385,7 @@ def decode_attention(
     return flash_decode(
         q, k_cache, v_cache, lengths,
         softcap=softcap, scale=scale, window=window, chunk=chunk,
+        num_splits=plan.num_splits,
         interpret=plan.interpret,
     )
 
@@ -422,6 +425,7 @@ def paged_decode_attention(
     return paged_flash_decode(
         q, k_pages, v_pages, page_table, lengths,
         softcap=softcap, scale=scale, window=window,
+        num_splits=plan.num_splits,
         interpret=plan.interpret,
     )
 

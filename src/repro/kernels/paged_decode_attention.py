@@ -25,9 +25,21 @@ The NUMA structure of the dense kernel is preserved:
   * the GQA group is the q block, so each page is fetched once per
     (batch, kv-head), never per q-head.
 
+Split-K (PR 4): ``num_splits > 1`` adds a PARALLEL grid axis over
+contiguous **page ranges** (``cache.layout.decode_split_ranges``). Each
+(b, hkv, split) cell walks only its range and emits partial ``(acc, m,
+l)``; ``decode_common.combine_split_states`` merges them. Split
+boundaries are page-granular by construction and, because the pool is
+head-major (every page of a KV head lives in that head's domain stripe),
+**no split ever straddles NUMA domains** — each partial pass stays inside
+one domain's cache (``layout.split_ranges_domain_aligned`` proves this in
+tests). ``num_splits`` comes from the plan layer's occupancy model; the
+long-context, small-batch serving regime is where it exceeds 1.
+
 Out-of-range page-table entries must hold a valid physical id (the engine
 pads with the reserved null page 0): the index map still issues the copy,
-and the in-kernel relevance test skips the compute.
+and the in-kernel relevance test (``decode_common.chunk_relevant``) skips
+the compute.
 """
 
 from __future__ import annotations
@@ -41,8 +53,10 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.cache import layout as layout_lib
+from repro.kernels import decode_common
 
-NEG_INF = -1e30
+NEG_INF = decode_common.NEG_INF
 
 
 def _paged_decode_kernel(
@@ -62,41 +76,65 @@ def _paged_decode_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     page_start = p_idx * page_size
-    relevant = page_start < length
-    if window is not None and window > 0:
-        relevant &= page_start + page_size - 1 >= length - window
 
-    @pl.when(relevant)
+    @pl.when(
+        decode_common.chunk_relevant(page_start, page_size, length, window)
+    )
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)      # (Gp, D)
-        k = k_ref[0, 0].astype(jnp.float32)      # (page_size, D)
-        v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        ) * scale
-        if softcap is not None and softcap > 0:
-            s = softcap * jnp.tanh(s / softcap)
-        pos = page_start + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
-        valid = pos < length
-        if window is not None and window > 0:
-            valid &= pos > length - 1 - window
-        s = jnp.where(valid, s, NEG_INF)
-        m_prev = m_ref[:, 0:1]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        alpha = jnp.exp(m_prev - m_new)
-        p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
-        l_ref[...] = jnp.broadcast_to(
-            l_ref[:, 0:1] * alpha + jnp.sum(p, axis=1, keepdims=True), l_ref.shape
+        decode_common.accumulate_kv_block(
+            q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+            scale=scale, softcap=softcap, window=window,
+            block_start=page_start, block_len=page_size, length=length,
         )
-        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
 
     @pl.when(p_idx == max_pages - 1)
     def _emit():
         l = l_ref[:, 0:1]
         o_ref[0, 0] = (acc_ref[...] / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+def _paged_decode_split_kernel(
+    pt_ref, len_ref,            # scalar-prefetch: (B, max_pages), (B,)
+    q_ref, k_ref, v_ref,
+    acc_out, m_out, l_out,
+    acc_ref, m_ref, l_ref,
+    *, scale, softcap, window, page_size, max_pages, pages_per_split,
+):
+    """Stage one of paged split-K decode: one (b, hkv, split) cell walks
+    its page range (domain-pure under the head-major pool) and emits raw
+    ``(acc, m, l)``. Overhanging tail-split steps (non-divisible ranges:
+    their DMA is clamped to the last table slot) are skipped by the range
+    test and contribute the empty state."""
+    b_idx = pl.program_id(0)
+    s_idx = pl.program_id(2)
+    j_idx = pl.program_id(3)
+    length = len_ref[b_idx]
+
+    @pl.when(j_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    p_global = s_idx * pages_per_split + j_idx
+    page_start = p_global * page_size
+    relevant = (p_global < max_pages) & decode_common.chunk_relevant(
+        page_start, page_size, length, window
+    )
+
+    @pl.when(relevant)
+    def _compute():
+        decode_common.accumulate_kv_block(
+            q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
+            scale=scale, softcap=softcap, window=window,
+            block_start=page_start, block_len=page_size, length=length,
+        )
+
+    @pl.when(j_idx == pages_per_split - 1)
+    def _emit():
+        acc_out[0, 0, 0] = acc_ref[...]
+        m_out[0, 0, 0] = m_ref[...]
+        l_out[0, 0, 0] = l_ref[...]
 
 
 def paged_flash_decode(
@@ -109,12 +147,17 @@ def paged_flash_decode(
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
     window: Optional[int] = None,
+    num_splits: int = 1,
     interpret: bool = False,
 ) -> jnp.ndarray:
     """q: (B, Hq, D); k/v_pages: (Hkv, P, page_size, D) head-major;
     page_table: (B, max_pages) int32 physical page ids (entries past a
     sequence's live pages must point at a valid page — the null page);
     lengths: (B,) int32. Returns (B, Hq, D).
+
+    ``num_splits > 1`` runs the sequence-parallel (split-K) path over
+    domain-aligned page ranges (clamped to the table width; 1 keeps the
+    one-pass kernel).
     """
     b, hq, d = q.shape
     hkv, num_pages, page_size, _ = k_pages.shape
@@ -129,6 +172,16 @@ def paged_flash_decode(
     qg = q.reshape(b, hkv, group, d)
     if gp != group:
         qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp - group), (0, 0)))
+
+    ranges = layout_lib.decode_split_ranges(max_pages, num_splits)
+    num_splits = len(ranges)
+    if num_splits > 1:
+        return _paged_flash_decode_split(
+            qg, k_pages, v_pages, page_table, lengths, ranges,
+            scale=scale, softcap=softcap, window=window,
+            max_pages=max_pages, gp=gp, group=group, interpret=interpret,
+            out_dtype=q.dtype,
+        )
 
     fn = pl.pallas_call(
         functools.partial(
@@ -181,3 +234,84 @@ def paged_flash_decode(
     out = fn(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
              qg, k_pages, v_pages)
     return out[:, :, :group, :].reshape(b, hq, d)
+
+
+def _paged_flash_decode_split(
+    qg, k_pages, v_pages, page_table, lengths, ranges,
+    *, scale, softcap, window, max_pages, gp, group, interpret, out_dtype,
+):
+    b = qg.shape[0]
+    hkv, _, page_size, d = k_pages.shape
+    num_splits = len(ranges)
+    pps = ranges[0][1] - ranges[0][0]  # pages per split (tail may be short)
+
+    def kv_index(b_, h_, s_, j_, pt, ln):
+        # Clamp the tail split's overhang to the last table slot — the DMA
+        # must name a valid page; the kernel's range test skips its compute.
+        return (h_, pt[b_, jnp.minimum(s_ * pps + j_, max_pages - 1)], 0, 0)
+
+    fn = pl.pallas_call(
+        functools.partial(
+            _paged_decode_split_kernel,
+            scale=scale, softcap=softcap, window=window,
+            page_size=page_size, max_pages=max_pages, pages_per_split=pps,
+        ),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, hkv, num_splits, pps),
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, gp, d),
+                    lambda b_, h_, s_, j_, pt, ln: (b_, h_, 0, 0),
+                ),
+                pl.BlockSpec((1, 1, page_size, d), kv_index),
+                pl.BlockSpec((1, 1, page_size, d), kv_index),
+            ],
+            out_specs=[
+                pl.BlockSpec(
+                    (1, 1, 1, gp, d),
+                    lambda b_, h_, s_, j_, pt, ln: (b_, h_, s_, 0, 0),
+                ),
+                pl.BlockSpec(
+                    (1, 1, 1, gp, 128),
+                    lambda b_, h_, s_, j_, pt, ln: (b_, h_, s_, 0, 0),
+                ),
+                pl.BlockSpec(
+                    (1, 1, 1, gp, 128),
+                    lambda b_, h_, s_, j_, pt, ln: (b_, h_, s_, 0, 0),
+                ),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((gp, d), jnp.float32),
+                pltpu.VMEM((gp, 128), jnp.float32),
+                pltpu.VMEM((gp, 128), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hkv, num_splits, gp, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, num_splits, gp, 128), jnp.float32),
+            jax.ShapeDtypeStruct((b, hkv, num_splits, gp, 128), jnp.float32),
+        ],
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=(
+                compat.PARALLEL,
+                compat.PARALLEL,
+                compat.PARALLEL,
+                compat.ARBITRARY,
+            ),
+        ),
+        cost_estimate=pl.CostEstimate(
+            flops=int(4.0 * b * hkv * group * max_pages * page_size * d),
+            bytes_accessed=int(
+                k_pages.dtype.itemsize
+                * b * (2 * hkv * max_pages * page_size * d + 2 * hkv * group * d)
+            ),
+            transcendentals=int(b * hkv * group * max_pages * page_size),
+        ),
+        interpret=interpret,
+        name="paged_flash_decode_split",
+    )
+    acc, m, l = fn(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+                   qg, k_pages, v_pages)
+    out = decode_common.combine_split_states(acc, m[..., :1], l[..., :1])
+    return out[:, :, :group, :].reshape(b, hkv * group, d).astype(out_dtype)

@@ -10,8 +10,12 @@ collapses all of that into a single value:
 
   ``AttentionPlan`` — phase (prefill | extend | decode), KV layout (dense |
   paged), the resolved ``MappingConfig``, the concrete kernel impl, the
-  decode KV chunk, the NUMA placement policy, and the backend/interpret
-  environment it was resolved for.
+  decode KV chunk, the split-K ``num_splits`` (PR 4: chosen by
+  ``perf_model.estimate_decode_splits``' occupancy model), the NUMA
+  placement policy, and the backend/interpret environment it was resolved
+  for. The paged-extend impl is likewise a scored choice
+  (``perf_model.estimate_extend_prefill``): the prefix-aware kernel vs
+  the gather route, per shape.
 
 produced by one resolver:
 
@@ -101,6 +105,7 @@ class AttentionPlan:
     prefix_pages: int = 0          # EXTEND: page-table width (bucketed)
     window: Optional[int] = None   # sliding window the plan was scored for
     placement: Optional[str] = None     # paged: head_aligned | interleaved
+    num_splits: int = 1            # DECODE: split-K ranges (occupancy model)
 
     @property
     def prefix_capacity(self) -> int:
@@ -314,6 +319,39 @@ def resolve_kv_layout(
 _DENSE_PREFILL_IMPLS = ("pallas", "xla_flash", "xla_flash_tri", "ref")
 
 
+@functools.lru_cache(maxsize=512)
+def _score_extend_route(
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    tail_len: int,
+    prefix_len: int,
+    page_size: int,
+    head_dim: int,
+    dtype_bytes: int,
+    backend: str,
+) -> str:
+    """Paged-vs-gather extend route for one shape: "pallas" (the paged
+    prefix-aware kernel) or "xla" (gather the prefix to dense, run the
+    dense flash oracle). Scored with
+    ``perf_model.estimate_extend_prefill`` under both models — the paged
+    kernel reads each prefix page once but its grid is only B x Hkv wide;
+    the gather route triples the prefix traffic (read + write-back + dense
+    re-read, fabric cost included) to regain full occupancy. Ties keep
+    the kernel (no gather is the better default at equal cost)."""
+    from repro.core import perf_model
+
+    topo = _topology_for(backend)
+    kw = dict(
+        batch=batch, num_q_heads=num_q_heads, num_kv_heads=num_kv_heads,
+        prefix_len=prefix_len, tail_len=tail_len, page_size=page_size,
+        head_dim=head_dim, dtype_bytes=dtype_bytes, topo=topo,
+    )
+    paged = perf_model.estimate_extend_prefill(gather=False, **kw)
+    gather = perf_model.estimate_extend_prefill(gather=True, **kw)
+    return "pallas" if paged.time <= gather.time else "xla"
+
+
 def _resolve_impl(phase: str, kv_layout: str, impl: str, backend: str) -> str:
     """Concrete kernel implementation for a phase/layout on a backend.
 
@@ -423,10 +461,42 @@ def _plan_cached(
         # the plan records the placement the kernels assume.
         placement = "head_aligned"
 
+    resolved_impl = _resolve_impl(phase, kv_layout, impl, backend)
+    if phase == EXTEND and kv_layout == PAGED and impl == "auto" \
+            and prefix_pages > 0:
+        # Route choice (PR-4 satellite): the paged kernel reads the prefix
+        # once but exposes only B x Hkv parallel cells; the gather route
+        # pays ~3x the prefix bytes to recover the dense flash grid's
+        # occupancy. perf_model charges both (occupancy factors included)
+        # and the cheaper route wins — an explicitly pinned impl skips
+        # this and goes through _resolve_impl's coercions above.
+        resolved_impl = _score_extend_route(
+            batch, num_q_heads, num_kv_heads, seq_q,
+            prefix_pages * (page_size or 0), page_size, head_dim,
+            dtype_bytes, backend,
+        )
+
+    num_splits = 1
+    if phase == DECODE:
+        # Split-K (PR 4): sequence-parallel decode, chosen by occupancy —
+        # cells x splits vs the domain count, combine overhead charged
+        # explicitly. The granule is what the kernel can actually split
+        # at: KV chunks for the dense stripe, pages for the pool.
+        from repro.core import perf_model
+
+        granule = chunk if kv_layout == DENSE else page_size
+        if granule:
+            num_splits = perf_model.estimate_decode_splits(
+                batch=batch, num_q_heads=num_q_heads,
+                num_kv_heads=num_kv_heads, seq_kv=seq_kv, granule=granule,
+                head_dim=head_dim, dtype_bytes=dtype_bytes,
+                topo=_topology_for(backend), window=window,
+            ).num_splits
+
     return AttentionPlan(
         phase=phase,
         kv_layout=kv_layout,
-        impl=_resolve_impl(phase, kv_layout, impl, backend),
+        impl=resolved_impl,
         mapping=mapping,
         backend=backend,
         interpret=interpret,
@@ -435,6 +505,7 @@ def _plan_cached(
         prefix_pages=prefix_pages,
         window=window,
         placement=placement,
+        num_splits=num_splits,
     )
 
 

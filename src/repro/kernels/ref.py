@@ -150,6 +150,82 @@ def decode_attention(
     return o.astype(q.dtype)
 
 
+def split_decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    num_splits: int,
+    granule: int,
+    softcap: Optional[float] = None,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jnp.ndarray:
+    """Split-K decode oracle: exact per-range softmax states, combined.
+
+    Independently re-implements what the split-K kernels compute — the KV
+    axis is partitioned into the same unit-granular ranges
+    (``cache.layout.decode_split_ranges`` over ``granule``-sized units:
+    chunks for the dense kernel, pages for the paged one), each range
+    contributes its exact ``(acc, m, l)`` state, and the states merge by
+    rescaling to the global row max. Lets tests check the *split
+    semantics* (range partitioning + state merge) against ground truth
+    rather than only end-to-end outputs. Shapes as
+    :func:`decode_attention`.
+    """
+    from repro.cache.layout import decode_split_ranges
+
+    b, hq, d = q.shape
+    _, hkv, smax, _ = k_cache.shape
+    k = _expand_kv(k_cache, hq // hkv)
+    v = _expand_kv(v_cache, hq // hkv)
+    if scale is None:
+        scale = 1.0 / d**0.5
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap is not None and softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(smax)[None, None, :]
+    valid = pos < lengths[:, None, None]
+    if window is not None and window > 0:
+        valid &= pos > (lengths[:, None, None] - 1 - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    num_units = -(-smax // granule)
+    states = []  # (m, l, acc) per range, fully-masked ranges included
+    for start, end in decode_split_ranges(num_units, num_splits):
+        lo, hi = start * granule, min(end * granule, smax)
+        sr = s[:, :, lo:hi]
+        vr = valid[:, :, lo:hi]
+        if sr.shape[-1] == 0:
+            m_r = jnp.full(s.shape[:2] + (1,), NEG_INF)
+            l_r = jnp.zeros_like(m_r)
+            acc_r = jnp.zeros(s.shape[:2] + (d,), jnp.float32)
+        else:
+            # An all-masked range must contribute the empty state exactly
+            # (m = NEG_INF), matching a split whose relevance test never
+            # fired, not max(NEG_INF-masked scores).
+            any_live = jnp.any(vr, axis=-1, keepdims=True)
+            m_r = jnp.where(
+                any_live, jnp.max(sr, axis=-1, keepdims=True), NEG_INF
+            )
+            p_r = jnp.where(vr, jnp.exp(sr - m_r), 0.0)
+            l_r = jnp.sum(p_r, axis=-1, keepdims=True)
+            acc_r = jnp.einsum(
+                "bhk,bhkd->bhd", p_r, v[:, :, lo:hi].astype(jnp.float32)
+            )
+        states.append((m_r, l_r, acc_r))
+
+    m_all = jnp.stack([m_ for m_, _, _ in states])           # (S, B, H, 1)
+    m_star = jnp.max(m_all, axis=0)
+    alpha = jnp.exp(m_all - m_star[None])
+    l_star = sum(a_ * l_ for a_, (_, l_, _) in zip(alpha, states))
+    acc_star = sum(a_ * acc_ for a_, (_, _, acc_) in zip(alpha, states))
+    o = acc_star / jnp.where(l_star == 0.0, 1.0, l_star)
+    return o.astype(q.dtype)
+
+
 def gather_pages(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
     """Materialize a dense cache view from head-major pages.
 

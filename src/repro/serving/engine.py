@@ -21,8 +21,18 @@ in a pool of fixed-size pages (``cache.pool``), so
     their tail — the **extend phase**: the paged prefill kernel reads the
     prefix K/V straight from the page table (no gather, no dense copy),
     driven by one engine-resolved ``AttentionPlan`` per (tail-bucket,
-    prefix-page-bucket) jit key; prefix page counts bucket to powers of
-    two so compilations stay O(log smax) under diverse prefix lengths,
+    prefix-page-bucket, rows) jit key; prefix page counts bucket to powers
+    of two so compilations stay O(log smax) under diverse prefix lengths,
+  * ready admissions **batch** (PR 4): ``run`` first *admits* every
+    request the pool can hold (reserving rows and pages), then launches
+    one tail prefill per shared jit key with the admitted rows stacked on
+    the batch axis — the kernel already takes ``(B,)`` prefix/tail
+    lengths, so four same-bucket admissions cost one launch instead of
+    four. Outputs are bit-exact vs one-at-a-time submission (rows are
+    independent); prefix pages publish at the flush, and a request whose
+    prefix is about to be published by the *same* flush defers one round
+    (``DEFERRED``) so it still extends off the shared pages instead of
+    re-prefilling them,
   * pool exhaustion first evicts idle prefix-cache pages, then preempts
     the lowest-priority active sequence — which later **resumes**: its
     generated tokens are replayed through the same extend path instead of
@@ -278,6 +288,12 @@ class _SeqState:
     submit_order: int
 
 
+#: Admission verdict: the request's prefix matches pages a record in the
+#: *current* flush is about to publish — admit it next round (as an extend)
+#: instead of prefilling the shared prefix a second time.
+DEFERRED = object()
+
+
 class PagedServingEngine(ServingEngine):
     """Continuous batching over the paged KV-cache subsystem.
 
@@ -306,6 +322,7 @@ class PagedServingEngine(ServingEngine):
         mapping: Optional[str] = None,
         prefix_sharing: bool = True,
         reserve_pages: int = 1,
+        batch_admissions: bool = True,
     ):
         cfg = plan_lib.with_mapping(cfg, mapping)
         if cfg.num_codebooks != 1:
@@ -334,6 +351,7 @@ class PagedServingEngine(ServingEngine):
         )
         self.reserve_pages = reserve_pages
         self.prefix_sharing = prefix_sharing
+        self.batch_admissions = batch_admissions
 
         self.pool = PagePool(num_pages, page_size)
         self.prefix = PrefixCache(self.pool)
@@ -358,7 +376,8 @@ class PagedServingEngine(ServingEngine):
         self._requeue: "deque[Tuple[Request, List]]" = deque()
         self.stats = {"preemptions": 0, "prefix_evictions": 0,
                       "pages_reused": 0, "prompt_pages": 0, "cow_copies": 0,
-                      "extend_prefills": 0, "resumed_tokens": 0}
+                      "extend_prefills": 0, "resumed_tokens": 0,
+                      "prefill_launches": 0, "batched_prefills": 0}
 
         self._decode = jax.jit(
             lambda params, tok, caches, lengths, pt: transformer.decode_step(
@@ -373,22 +392,32 @@ class PagedServingEngine(ServingEngine):
 
     @staticmethod
     def _scatter_tail(caches, tail_caches, pids):
-        """Write a prefilled tail's dense K/V into freshly allocated pages.
+        """Write prefilled tails' dense K/V into freshly allocated pages.
 
-        pids: (bucket/ps,) destinations; entries past the tail's real pages
-        are the null page (their writes are garbage sinks by design).
+        pids: (rows, bucket/ps) destinations, one row per admitted
+        sequence in the (possibly batched) prefill; entries past a tail's
+        real pages are the null page (their writes are garbage sinks by
+        design — with several rows the null page takes whichever write
+        lands last, all equally garbage).
         """
+        flat = pids.reshape(-1)
 
         def s(pages, dense, scanned):
             if scanned:
-                npp, _, hkv, bucket, hd = dense.shape
+                npp, rows, hkv, bucket, hd = dense.shape
                 ps = pages.shape[3]
-                new = dense[:, 0].reshape(npp, hkv, bucket // ps, ps, hd)
-                return pages.at[:, :, pids].set(new.astype(pages.dtype))
-            _, hkv, bucket, hd = dense.shape
+                new = dense.reshape(npp, rows, hkv, bucket // ps, ps, hd)
+                new = new.transpose(0, 2, 1, 3, 4, 5).reshape(
+                    npp, hkv, rows * (bucket // ps), ps, hd
+                )
+                return pages.at[:, :, flat].set(new.astype(pages.dtype))
+            rows, hkv, bucket, hd = dense.shape
             ps = pages.shape[2]
-            new = dense[0].reshape(hkv, bucket // ps, ps, hd)
-            return pages.at[:, pids].set(new.astype(pages.dtype))
+            new = dense.reshape(rows, hkv, bucket // ps, ps, hd)
+            new = new.transpose(1, 0, 2, 3, 4).reshape(
+                hkv, rows * (bucket // ps), ps, hd
+            )
+            return pages.at[:, flat].set(new.astype(pages.dtype))
 
         def layer(c, t, scanned):
             return {"attn": {
@@ -439,15 +468,17 @@ class PagedServingEngine(ServingEngine):
             return 0
         return 1 << (pages - 1).bit_length()
 
-    def _prefill_paged_fn(self, bucket: int, prefix_pages: int):
-        """Jitted tail prefill, keyed by (tail bucket, prefix-page bucket).
+    def _prefill_paged_fn(self, bucket: int, prefix_pages: int, rows: int = 1):
+        """Jitted tail prefill, keyed by (tail bucket, prefix-page bucket,
+        admitted rows) — ``rows > 1`` is the batched-admission launch: the
+        admitted sequences stack on the batch axis of one call.
 
         The nonzero-prefix variant runs the **extend phase**: one
         engine-resolved ``AttentionPlan`` per key drives the paged prefill
         kernel, which reads prefix K/V straight from the page table — the
         pool tensors ride in as arguments, never gathered to dense.
         """
-        key = (bucket, prefix_pages)
+        key = (bucket, prefix_pages, rows)
         if key not in self._prefill_p:
             cfg = self.cfg
 
@@ -460,7 +491,7 @@ class PagedServingEngine(ServingEngine):
             else:
                 plan = plan_lib.plan_for_config(
                     cfg,
-                    (1, cfg.n_heads, cfg.n_kv_heads, bucket,
+                    (rows, cfg.n_heads, cfg.n_kv_heads, bucket,
                      prefix_pages * self.page_size + bucket, cfg.head_dim),
                     phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
                     page_size=self.page_size, prefix_pages=prefix_pages,
@@ -515,10 +546,33 @@ class PagedServingEngine(ServingEngine):
     def submit(self, req: Request, resume_tokens: Sequence = ()) -> bool:
         """Admit a request if a decode row and its pages are available.
 
+        One-at-a-time entry point (kept for callers driving the engine by
+        hand): admit, then launch its prefill immediately. ``run`` instead
+        admits every ready request first and flushes the launches grouped
+        by jit key (:meth:`_launch_prefills`).
+        """
+        rec = self._admit(req, resume_tokens)
+        if rec is None:
+            return False
+        self._launch_prefills([rec])
+        return True
+
+    def _admit(self, req: Request, resume_tokens: Sequence = (),
+               pending_hashes=()):
+        """Reserve a decode row and pages for a request; no prefill yet.
+
         Prefix-cache lookup happens first: shared full pages are reused
         (prefilled once, by whoever computed them) and only the tail is
-        prefilled here — through the paged prefill kernel, which reads the
-        prefix straight from its pages.
+        prefilled — through the paged prefill kernel, which reads the
+        prefix straight from its pages. Returns an admission record for
+        :meth:`_launch_prefills`; None when the pool/rows cannot hold the
+        request; or :data:`DEFERRED` when the request's next unmatched
+        prefix page is in ``pending_hashes`` (pages a record admitted
+        earlier in the *same* flush will publish) — admitting it now would
+        re-prefill a prefix that is one flush away from being shareable.
+        The row is claimed here (so subsequent admissions in the same
+        flush see it taken); the caller must flush before the next decode
+        step.
 
         ``resume_tokens``: tokens a preempted run of this request already
         generated. They are replayed through the same extend path (they are
@@ -527,7 +581,7 @@ class PagedServingEngine(ServingEngine):
         """
         free_rows = np.flatnonzero(~self.active)
         if len(free_rows) == 0:
-            return False
+            return None
         tok = np.asarray(req.prompt)
         if tok.ndim != 1:
             raise ValueError("paged engine expects flat token prompts")
@@ -557,6 +611,12 @@ class PagedServingEngine(ServingEngine):
         # Reuse at most (n-1)//ps pages: at least one tail token must be
         # prefilled here to produce the next-token logits.
         matched = self.prefix.lookup(hashes[: (n - 1) // ps])
+        m0 = len(matched)
+        if pending_hashes and m0 < (n - 1) // ps and hashes[m0] in pending_hashes:
+            # The next page this prompt could share is being prefilled by a
+            # record already admitted this flush: wait one round and extend
+            # off the published pages instead of recomputing the prefix.
+            return DEFERRED
 
         def fits_buckets(tail_len: int) -> bool:
             return any(tail_len <= b for b in self.prompt_buckets)
@@ -575,7 +635,9 @@ class PagedServingEngine(ServingEngine):
                     nk = orig_n + keep
                     mk = min(m_full, (nk - 1) // ps)
                     if fits_buckets(nk - mk * ps):
-                        return self.submit(req, list(resume_tokens)[:keep])
+                        return self._admit(
+                            req, list(resume_tokens)[:keep], pending_hashes
+                        )
                 # Not even the bare prompt fits (its prefix pages were
                 # evicted since first admission): fall through to the
                 # admission error below.
@@ -593,42 +655,15 @@ class PagedServingEngine(ServingEngine):
             matched = []
             seq = self._reserve(n, matched)
         if seq is None:
-            return False
+            return None
         m = len(matched)
         tail = tok[m * ps :]
         bucket = self._bucket_for(len(tail))
         self.stats["pages_reused"] += m
         self.stats["prompt_pages"] += total_pages
-        padded = np.pad(tail, (0, bucket - len(tail)))[None]
-        last = jnp.asarray([len(tail) - 1], jnp.int32)
-        if m == 0:
-            logits, tail_caches = self._prefill_paged_fn(bucket, 0)(
-                self.params, jnp.asarray(padded), last
-            )
-        else:
-            # Extend phase: the page-table row is padded to the power-of-two
-            # page bucket with null pages (the kernel masks them via the
-            # dynamic prefix_len), so every prefix length in a bucket shares
-            # one compilation — and the pool is consumed in place, no gather.
-            mb = self._prefix_page_bucket(m)
-            pt_row = np.full((1, mb), NULL_PAGE, np.int32)
-            pt_row[0, :m] = matched
-            self.stats["extend_prefills"] += 1
-            logits, tail_caches = self._prefill_paged_fn(bucket, mb)(
-                self.params, jnp.asarray(padded), last, self.caches,
-                jnp.asarray(pt_row), jnp.asarray([m * ps], jnp.int32),
-            )
-        # Scatter the tail K/V into its fresh pages (bucket is page-aligned;
-        # destinations beyond the tail's real pages sink into the null page).
-        tail_pids = seq.pages[m:] + [NULL_PAGE] * (bucket // ps - (total_pages - m))
-        self.caches = self._scatter_jit(
-            self.caches, tail_caches, jnp.asarray(tail_pids, jnp.int32)
-        )
-        # Publish this prompt's full pages for later requests.
-        if self.prefix_sharing:
-            nfull = n // ps
-            self.prefix.insert(hashes[:nfull], seq.pages[:nfull])
 
+        # Claim the decode row now — pages and row are spoken for; the
+        # prefill itself runs at flush time (_launch_prefills).
         row = int(free_rows[0])
         self.seqs[row] = _SeqState(
             req=req, pages=seq, submit_order=self._submit_counter
@@ -640,8 +675,78 @@ class PagedServingEngine(ServingEngine):
         self.active[row] = True
         self.slot_out[row] = list(resume_tokens)
         self.stats["resumed_tokens"] += len(resume_tokens)
-        self._pending_first[row] = self._sample_host(np.asarray(logits)[0], req)
-        return True
+        return {
+            "req": req, "row": row, "seq": seq, "matched": matched,
+            "tail": tail, "bucket": bucket, "n": n, "hashes": hashes,
+            "mb": self._prefix_page_bucket(m) if m else 0,
+        }
+
+    def _launch_prefills(self, records) -> None:
+        """Flush admitted records: one tail-prefill launch per shared
+        (tail-bucket, prefix-page-bucket) jit key, admitted rows stacked on
+        the batch axis — the paged prefill kernel takes per-row
+        ``prefix_len`` / ``tail_len``, so rows with different live lengths
+        share a launch. Rows are independent (per-row page tables, per-row
+        online softmax), so outputs are bit-exact vs one launch per
+        request. Prefix pages publish after each group's scatter: a record
+        never reads pages whose contents this same flush still owes.
+        """
+        ps = self.page_size
+        groups: Dict[Tuple[int, int], list] = {}
+        for rec in records:
+            groups.setdefault((rec["bucket"], rec["mb"]), []).append(rec)
+        for (bucket, mb), grp in groups.items():
+            rows = len(grp)
+            padded = np.stack(
+                [np.pad(r["tail"], (0, bucket - len(r["tail"]))) for r in grp]
+            )
+            last = jnp.asarray(
+                [len(r["tail"]) - 1 for r in grp], jnp.int32
+            )
+            self.stats["prefill_launches"] += 1
+            self.stats["batched_prefills"] += rows > 1
+            if mb == 0:
+                logits, tail_caches = self._prefill_paged_fn(bucket, 0, rows)(
+                    self.params, jnp.asarray(padded), last
+                )
+            else:
+                # Extend phase: each page-table row is padded to the
+                # power-of-two page bucket with null pages (the kernel
+                # masks them via the dynamic prefix_len), so every prefix
+                # length in a bucket shares one compilation — and the pool
+                # is consumed in place, no gather.
+                pt = np.full((rows, mb), NULL_PAGE, np.int32)
+                for i, r in enumerate(grp):
+                    pt[i, : len(r["matched"])] = r["matched"]
+                plens = jnp.asarray(
+                    [len(r["matched"]) * ps for r in grp], jnp.int32
+                )
+                self.stats["extend_prefills"] += rows
+                logits, tail_caches = self._prefill_paged_fn(bucket, mb, rows)(
+                    self.params, jnp.asarray(padded), last, self.caches,
+                    jnp.asarray(pt), plens,
+                )
+            # Scatter every row's tail K/V into its fresh pages (buckets
+            # are page-aligned; destinations beyond a tail's real pages
+            # sink into the null page).
+            pids = np.full((rows, bucket // ps), NULL_PAGE, np.int32)
+            for i, r in enumerate(grp):
+                tail_pages = r["seq"].pages[len(r["matched"]):]
+                pids[i, : len(tail_pages)] = tail_pages
+            self.caches = self._scatter_jit(
+                self.caches, tail_caches, jnp.asarray(pids)
+            )
+            logits_np = np.asarray(logits)
+            for i, r in enumerate(grp):
+                # Publish this prompt's full pages for later requests.
+                if self.prefix_sharing:
+                    nfull = r["n"] // ps
+                    self.prefix.insert(
+                        r["hashes"][:nfull], r["seq"].pages[:nfull]
+                    )
+                self._pending_first[r["row"]] = self._sample_host(
+                    logits_np[i], r["req"]
+                )
 
     # -- preemption / decode ----------------------------------------------
 
@@ -736,16 +841,60 @@ class PagedServingEngine(ServingEngine):
         self.lengths[row] = 0
 
     def run(self, requests: List[Request]) -> List[Result]:
-        """Drive until every request (including preempted ones) completes."""
+        """Drive until every request (including preempted ones) completes.
+
+        With ``batch_admissions`` (the default) each scheduling round
+        admits every ready request first (rows and pages reserved, in
+        arrival order) and then flushes the tail prefills grouped by jit
+        key — one launch per (tail-bucket, prefix-page-bucket) instead of
+        one per request. ``batch_admissions=False`` keeps the legacy
+        submit-one-launch-one loop (the bit-exactness oracle in tests)."""
         queue = deque(requests)
         while queue or self._requeue or self.active.any():
-            while self._requeue and self.submit(
-                self._requeue[0][0], resume_tokens=self._requeue[0][1]
-            ):
-                self._requeue.popleft()
-            if not self._requeue:
-                while queue and self.submit(queue[0]):
-                    queue.popleft()
+            if self.batch_admissions:
+                records = []
+                # Pages this flush will publish: a later request matching
+                # one defers a round (DEFERRED) and extends off it instead
+                # of re-prefilling the shared prefix.
+                pending = set()
+
+                def take(rec):
+                    records.append(rec)
+                    pending.update(rec["hashes"][: rec["n"] // self.page_size])
+
+                try:
+                    while self._requeue:
+                        rec = self._admit(
+                            self._requeue[0][0],
+                            resume_tokens=self._requeue[0][1],
+                            pending_hashes=pending,
+                        )
+                        if rec is None or rec is DEFERRED:
+                            break
+                        self._requeue.popleft()
+                        take(rec)
+                    if not self._requeue:
+                        while queue:
+                            rec = self._admit(queue[0], pending_hashes=pending)
+                            if rec is None or rec is DEFERRED:
+                                break
+                            queue.popleft()
+                            take(rec)
+                finally:
+                    # Flush even when a later _admit raises (oversized
+                    # prompt, bucket overflow): rows admitted this round
+                    # are already claimed and must not reach a decode step
+                    # — or a caller that catches the error — unprefilled.
+                    if records:
+                        self._launch_prefills(records)
+            else:
+                while self._requeue and self.submit(
+                    self._requeue[0][0], resume_tokens=self._requeue[0][1]
+                ):
+                    self._requeue.popleft()
+                if not self._requeue:
+                    while queue and self.submit(queue[0]):
+                        queue.popleft()
             if not self.active.any():
                 if queue or self._requeue:
                     raise OutOfPages(
@@ -795,6 +944,8 @@ class PagedServingEngine(ServingEngine):
             "preemptions": float(self.stats["preemptions"]),
             "resumed_tokens": float(self.stats["resumed_tokens"]),
             "extend_prefills": float(self.stats["extend_prefills"]),
+            "prefill_launches": float(self.stats["prefill_launches"]),
+            "batched_prefills": float(self.stats["batched_prefills"]),
             "cow_copies": float(self.stats["cow_copies"]),
             "free_pages": float(self.pool.free_pages),
         }

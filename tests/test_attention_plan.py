@@ -239,6 +239,46 @@ def test_perf_model_scores_plans():
     ).time > 0
 
 
+def test_extend_route_is_scored_per_shape():
+    """PR-4 satellite: the paged-extend impl is chosen by
+    perf_model.estimate_extend_prefill, and each route wins somewhere.
+
+    Low occupancy (one MQA request: B x Hkv = 1 of MI300X's 8 domains,
+    long tail) -> the gather route's dense flash regains the idle domains
+    and beats the kernel despite 3x prefix traffic. High occupancy
+    (batched GQA, long prefix, short tail) -> the kernel's once-per-page
+    reads win. A pinned impl skips the scoring entirely."""
+    from repro.core import numa, perf_model
+
+    gather_shape = (1, 8, 1, 512, 512 + 16, 64)
+    gp = plan_lib.plan_attention(
+        gather_shape, phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
+        page_size=16, prefix_pages=1, backend="gpu",
+    )
+    assert gp.impl == "xla"
+    paged_shape = (8, 32, 8, 64, 2048 + 64, 128)
+    pp = plan_lib.plan_attention(
+        paged_shape, phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
+        page_size=16, prefix_pages=128, backend="gpu",
+    )
+    assert pp.impl == "pallas"
+    # The choices agree with the estimates they claim to come from.
+    for shape, plan in ((gather_shape, gp), (paged_shape, pp)):
+        b, hq, hkv, sq, skv, hd = shape
+        kw = dict(batch=b, num_q_heads=hq, num_kv_heads=hkv,
+                  prefix_len=skv - sq, tail_len=sq, page_size=16,
+                  head_dim=hd, dtype_bytes=2, topo=numa.MI300X)
+        paged_t = perf_model.estimate_extend_prefill(gather=False, **kw).time
+        gather_t = perf_model.estimate_extend_prefill(gather=True, **kw).time
+        assert (plan.impl == "pallas") == (paged_t <= gather_t), shape
+    # Pinned impls are never re-routed.
+    pinned = plan_lib.plan_attention(
+        gather_shape, phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
+        page_size=16, prefix_pages=1, backend="gpu", impl="pallas",
+    )
+    assert pinned.impl == "pallas"
+
+
 # --- grep enforcement ---------------------------------------------------------
 
 

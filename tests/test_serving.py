@@ -170,7 +170,7 @@ def test_paged_prefill_compile_cache_is_log_bounded(llama):
         want = direct_greedy(cfg, params, prompts[r.uid], 3)
         assert [int(t) for t in r.tokens] == want, r.uid
     assert eng.stats["extend_prefills"] >= 5  # the sweep hit the extend path
-    prefix_keys = {pages for _, pages in eng._prefill_p if pages > 0}
+    prefix_keys = {k[1] for k in eng._prefill_p if k[1] > 0}
     # Powers of two only, and logarithmically many despite 6 distinct
     # matched prefix lengths.
     assert all(p & (p - 1) == 0 for p in prefix_keys), prefix_keys
@@ -230,6 +230,72 @@ def test_paged_resume_truncates_oversized_replay(llama):
     assert eng.stats["resumed_tokens"] == 18
 
 
+def test_paged_batched_admissions_bit_exact(llama):
+    """Batched admission (PR 4): ready requests sharing a jit bucket ride
+    one tail-prefill launch — fewer launches, identical tokens vs the
+    legacy one-launch-per-request loop, and still equal to direct greedy."""
+    cfg, params = llama
+    rng = np.random.default_rng(10)
+    system = rng.integers(1, 400, size=(32,))
+    prompts = []
+    for i in range(6):
+        tail = rng.integers(1, 400, size=(int(rng.integers(2, 14)),))
+        prompts.append(np.concatenate([system, tail]) if i % 3 else tail)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+    kw = dict(num_pages=96, page_size=16, max_batch=4, max_pages_per_seq=8,
+              prompt_buckets=(16, 32, 64))
+
+    batched = PagedServingEngine(cfg, params, batch_admissions=True, **kw)
+    res_b = batched.run([Request(**vars(r)) for r in reqs])
+    serial = PagedServingEngine(cfg, params, batch_admissions=False, **kw)
+    res_s = serial.run([Request(**vars(r)) for r in reqs])
+
+    toks_b = {r.uid: [int(t) for t in r.tokens] for r in res_b}
+    toks_s = {r.uid: [int(t) for t in r.tokens] for r in res_s}
+    assert toks_b == toks_s  # bit-exact across the two admission modes
+    for uid, toks in toks_b.items():
+        assert toks == direct_greedy(cfg, params, prompts[uid], 4), uid
+    # The batched engine actually coalesced launches; the serial one never.
+    assert batched.stats["batched_prefills"] > 0
+    assert batched.stats["prefill_launches"] < serial.stats["prefill_launches"]
+    assert serial.stats["batched_prefills"] == 0
+
+
+def test_paged_batched_extend_rows_share_one_launch(llama):
+    """Several requests matching the same cached prefix (same tail bucket
+    and page bucket) must extend in ONE launch with per-row prefix
+    lengths."""
+    cfg, params = llama
+    rng = np.random.default_rng(11)
+    base = rng.integers(1, 400, size=(32,))
+    eng = PagedServingEngine(cfg, params, num_pages=96, page_size=16,
+                             max_batch=4, max_pages_per_seq=8,
+                             prompt_buckets=(16, 32, 64))
+    # Publish the prefix first (its own flush), then three same-bucket
+    # extenders arrive together.
+    warm = [Request(uid=0, prompt=base, max_new_tokens=2)]
+    eng.run(warm)
+    launches_before = eng.stats["prefill_launches"]
+    tails = [rng.integers(1, 400, size=(6 + i,)) for i in range(3)]
+    reqs = [Request(uid=10 + i, prompt=np.concatenate([base, t]),
+                    max_new_tokens=3) for i, t in enumerate(tails)]
+    results = [r for r in eng.run(reqs) if r.uid >= 10]  # results accumulate
+    assert len(results) == 3
+    assert eng.stats["extend_prefills"] >= 3
+    assert eng.stats["prefill_launches"] == launches_before + 1  # one flush
+    assert eng.stats["batched_prefills"] >= 1
+    # A (bucket, pages, rows=3) jit key exists — the kernel consumed (B,)
+    # prefix/tail lengths in one call.
+    assert any(k[2] == 3 and k[1] > 0 for k in eng._prefill_p), \
+        sorted(eng._prefill_p)
+    for r in results:
+        want = direct_greedy(
+            cfg, params, np.concatenate([base, tails[r.uid - 10]]), 3
+        )
+        assert [int(t) for t in r.tokens] == want, r.uid
+
+
 def test_paged_rejects_unservable_request_at_admission(llama):
     """prompt + max_new_tokens that cannot fit max_pages_per_seq must fail
     at submit, not crash mid-decode."""
@@ -241,6 +307,28 @@ def test_paged_rejects_unservable_request_at_admission(llama):
     with pytest.raises(ValueError, match="outgrow"):
         eng.submit(bad)
     assert eng.pool.used_pages == 0  # nothing leaked
+
+
+def test_paged_batched_flushes_before_raising(llama):
+    """A bad request admitted *after* good ones in the same batched round
+    must not strand the good rows unprefilled: the flush runs before the
+    ValueError propagates, so a caller that catches it can keep driving
+    the engine."""
+    cfg, params = llama
+    rng = np.random.default_rng(12)
+    good = Request(uid=0, prompt=rng.integers(1, 400, size=(10,)),
+                   max_new_tokens=3)
+    bad = Request(uid=1, prompt=np.arange(1, 17), max_new_tokens=60)
+    eng = PagedServingEngine(cfg, params, num_pages=64, page_size=16,
+                             max_batch=2, max_pages_per_seq=4,
+                             prompt_buckets=(16, 32))
+    with pytest.raises(ValueError, match="outgrow"):
+        eng.run([good, bad])
+    row = int(np.flatnonzero(eng.active)[0])
+    assert row in eng._pending_first  # good row's prefill was flushed
+    res = eng.run([])  # drain the good request to completion
+    assert [int(t) for t in res[0].tokens] == \
+        direct_greedy(cfg, params, good.prompt, 3)
 
 
 def test_paged_pool_must_hold_one_max_sequence(llama):
