@@ -1,7 +1,7 @@
 """Paged serving benchmark: prefix sharing + NUMA page placement A/B.
 
-Drives ``PagedServingEngine`` (smoke model, CPU-runnable) over a mixed-
-length request trace with a shared system prompt, then scores the *final*
+Drives ``LLMEngine(kv_layout="paged")`` (smoke model, CPU-runnable) over a
+mixed-length request trace with a shared system prompt, then scores the *final*
 page tables under both placement policies with the three model layers:
 
   * ``cache.layout.decode_page_traffic``  — exact enumerated traffic,
@@ -35,7 +35,7 @@ from repro.configs import registry
 from repro.core import cache_sim, numa, perf_model
 from repro.kernels import ops as kernel_ops
 from repro.models import transformer
-from repro.serving.engine import PagedServingEngine, Request
+from repro.serving import LLMEngine, Request
 
 PAGE_SIZE = 16
 NUM_PAGES = 160
@@ -58,19 +58,20 @@ def build_trace(cfg, rng, n_requests=12, system_len=48):
 def capture_peak_tables(engine):
     """Snapshot live page tables at the engine's fullest decode tick."""
     peak = {"pages": -1, "tables": [], "lengths": []}
+    backend = engine.backend
     orig_step = engine.step
 
     def step():
         live = [
-            (list(engine.seqs[r].pages.pages), int(engine.lengths[r]) + 1)
-            for r in range(engine.max_batch)
-            if engine.active[r] and engine.seqs[r] is not None
+            (list(backend.seqs[r].pages.pages), int(backend.lengths[r]) + 1)
+            for r in range(backend.rows)
+            if backend.active[r] and backend.seqs[r] is not None
         ]
-        total = sum(-(-ln // engine.page_size) for _, ln in live)
+        total = sum(-(-ln // backend.page_size) for _, ln in live)
         if total > peak["pages"]:
             peak.update(pages=total, tables=[t for t, _ in live],
                         lengths=[ln for _, ln in live])
-        orig_step()
+        return orig_step()
 
     engine.step = step
     return peak
@@ -91,27 +92,27 @@ def smoke():
     cfg = registry.get_smoke_config("llama3-8b")
     params = transformer.init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    engine = PagedServingEngine(
-        cfg, params, num_pages=96, page_size=PAGE_SIZE,
+    engine = LLMEngine(
+        cfg, params, kv_layout="paged", num_pages=96, page_size=PAGE_SIZE,
         max_batch=4, max_pages_per_seq=8, prompt_buckets=(16, 32, 64),
     )
     reqs = build_trace(cfg, rng, n_requests=6, system_len=32)
-    results = engine.run(reqs)
-    stats = engine.prefix_stats()
+    results = engine.generate(reqs)
+    stats = engine.backend.prefix_stats()
     assert len(results) == len(reqs), (len(results), len(reqs))
     assert stats["prefix_hit_rate"] > 0, "trace must exercise prefix sharing"
     assert stats["extend_prefills"] > 0, \
         "no request took the paged prefill kernel path"
     # The engine's extend plans must all be the kernel (no gather fallback).
-    extend_keys = [k for k in engine._prefill_p if k[1] > 0]
+    extend_keys = [k for k in engine.backend._prefill_p if k[1] > 0]
     assert extend_keys, "no extend-phase compilation recorded"
     for bucket, pages, rows in extend_keys:
         plan = plan_lib.plan_for_config(
             cfg,
             (rows, cfg.n_heads, cfg.n_kv_heads, bucket,
-             pages * engine.page_size + bucket, cfg.head_dim),
+             pages * engine.backend.page_size + bucket, cfg.head_dim),
             phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
-            page_size=engine.page_size, prefix_pages=pages,
+            page_size=engine.backend.page_size, prefix_pages=pages,
         )
         assert plan.impl == "pallas", plan
     new_tokens = sum(len(r.tokens) for r in results)
@@ -121,8 +122,9 @@ def smoke():
         f"{int(stats['extend_prefills'])} extend prefills via "
         f"paged_flash_prefill (interpret={plan.interpret}), "
         f"{int(stats['batched_prefills'])} batched launches, "
-        f"jit keys {sorted(engine._prefill_p)}"
+        f"jit keys {sorted(engine.backend._prefill_p)}"
     )
+    print(f"[smoke] {engine.stats().summary()}")
 
     # Split-K decode (PR 4): a long-context B x Hkv = 1 shape must resolve
     # to num_splits > 1 on the scoring topology, and the split kernel must
@@ -155,14 +157,15 @@ def main():
     cfg = registry.get_smoke_config("llama3-8b")
     params = transformer.init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    engine = PagedServingEngine(
-        cfg, params, num_pages=NUM_PAGES, page_size=PAGE_SIZE,
-        max_batch=6, max_pages_per_seq=8, prompt_buckets=(16, 32, 64, 96),
+    engine = LLMEngine(
+        cfg, params, kv_layout="paged", num_pages=NUM_PAGES,
+        page_size=PAGE_SIZE, max_batch=6, max_pages_per_seq=8,
+        prompt_buckets=(16, 32, 64, 96),
     )
     reqs = build_trace(cfg, rng)
     peak = capture_peak_tables(engine)
-    results = engine.run(reqs)
-    stats = engine.prefix_stats()
+    results = engine.generate(reqs)
+    stats = engine.backend.prefix_stats()
     assert len(results) == len(reqs)
     assert stats["prefix_hit_rate"] > 0, "trace must exercise prefix sharing"
 
@@ -211,7 +214,7 @@ def main():
         # dense-stripe baseline + analytic layout ranking
         batch = len(peak["tables"])
         mean_len = int(np.mean(peak["lengths"])) if peak["lengths"] else 1
-        capacity = engine.cache_len
+        capacity = engine.backend.cache_len
         dense = perf_model.estimate_dense_decode(
             batch=batch, num_q_heads=4 * hkv, num_kv_heads=hkv,
             capacity=capacity, head_dim=hd, dtype_bytes=2, topo=topo)

@@ -1,17 +1,20 @@
-"""Batched serving example: continuous batching over a mixed request stream.
+"""Batched serving example: one LLMEngine facade, both KV layouts.
 
-Demonstrates the serving half of the framework, both control planes:
+Demonstrates the PR-5 serving API over a mixed request stream:
 
-  * dense slots (``ServingEngine``): bucketed prefill, slot-based
-    continuous batching, EOS/max-token termination;
-  * paged KV (``PagedServingEngine``): page-pool admission, per-token page
-    append, and prefix sharing — the requests below share a system prompt,
-    so every request after the first reuses its pages and prefills only
-    the tail.
+  * ``kv_layout="dense"`` — slot-based continuous batching over dense
+    cache stripes;
+  * ``kv_layout="paged"`` — page-pool admission, per-token page append,
+    and prefix sharing: the requests below share a system prompt, so
+    every request after the first reuses its pages and prefills only the
+    tail;
+  * per-request ``SamplingParams`` (greedy and seeded temperature rows in
+    the same batch) sampled on device by one jitted batched sampler.
 
 Both ride the decode kernel path (one KV fetch per (batch, kv-head) grid
-cell — the paper's ACC insight applied to decode); the paged engine's page
-pool is head-major, i.e. NUMA head-aligned placement by construction.
+cell — the paper's ACC insight applied to decode); the paged pool is
+head-major, i.e. NUMA head-aligned placement by construction. The
+scheduler prices admission with the analytic NUMA decode model.
 
 Run: PYTHONPATH=src python examples/serve_batched.py
 """
@@ -23,7 +26,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.models import transformer
-from repro.serving.engine import PagedServingEngine, Request, ServingEngine
+from repro.serving import LLMEngine, Request, SamplingParams
 
 
 def make_requests(cfg, rng, n=10, shared_prefix_len=32):
@@ -32,28 +35,31 @@ def make_requests(cfg, rng, n=10, shared_prefix_len=32):
     for i in range(n):
         tail = rng.integers(1, cfg.vocab, size=(int(rng.integers(4, 28)),))
         prompt = np.concatenate([system, tail]) if i % 5 else tail
-        reqs.append(
-            Request(
-                uid=i,
-                prompt=prompt,
-                max_new_tokens=int(rng.integers(4, 12)),
+        reqs.append(Request(
+            uid=i,
+            prompt=prompt,
+            sampling=SamplingParams(
                 temperature=0.0 if i % 2 == 0 else 0.8,
-            )
-        )
+                max_tokens=int(rng.integers(4, 12)),
+                seed=i,
+            ),
+        ))
     return reqs
 
 
-def drive(name, engine, requests):
+def drive(engine, requests):
+    name = engine.kv_layout
     print(f"[{name}] serving {len(requests)} requests")
     t0 = time.time()
-    results = engine.run(requests)
+    results = engine.generate(requests)
     dt = time.time() - t0
     new_tokens = sum(len(r.tokens) for r in results)
     print(f"[{name}] completed in {dt:.1f}s — {new_tokens} new tokens "
           f"({new_tokens/dt:.1f} tok/s incl. compile)")
     for r in sorted(results, key=lambda r: r.uid):
         toks = [int(np.asarray(t).reshape(-1)[0]) for t in r.tokens]
-        print(f"  req {r.uid:2d} (prompt {r.prompt_len:2d} tok) -> {toks}")
+        print(f"  req {r.uid:2d} (prompt {r.prompt_len:2d} tok, "
+              f"{r.finish_reason}) -> {toks}")
     return results
 
 
@@ -63,21 +69,21 @@ def main():
     rng = np.random.default_rng(0)
     requests = make_requests(cfg, rng)
 
-    dense = ServingEngine(
-        cfg, params, num_slots=4, cache_len=256, prompt_buckets=(32, 64),
+    dense = LLMEngine(
+        cfg, params, kv_layout="dense", max_batch=4, cache_len=256,
+        prompt_buckets=(32, 64),
     )
-    drive("dense", dense, [Request(**vars(r)) for r in requests])
+    drive(dense, [r.clone() for r in requests])
+    print(dense.stats().summary())
 
-    paged = PagedServingEngine(
-        cfg, params, num_pages=96, page_size=16, max_batch=4,
-        max_pages_per_seq=8, prompt_buckets=(16, 32, 64),
+    paged = LLMEngine(
+        cfg, params, kv_layout="paged", max_batch=4, num_pages=96,
+        page_size=16, max_pages_per_seq=8, prompt_buckets=(16, 32, 64),
     )
-    drive("paged", paged, requests)
-    stats = paged.prefix_stats()
-    print(f"[paged] prefix hit rate {stats['prefix_hit_rate']:.2f} "
-          f"({int(stats['pages_reused'])}/{int(stats['prompt_pages'])} prompt "
-          f"pages reused), {int(stats['preemptions'])} preemptions, "
-          f"layout pick: {paged.kv_layout}")
+    drive(paged, requests)
+    print(paged.stats().summary())
+    print(f"[paged] analytic steady-state layout pick: "
+          f"{paged.backend.modeled_kv_layout()}")
 
 
 if __name__ == "__main__":

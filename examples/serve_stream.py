@@ -1,0 +1,67 @@
+"""Streaming example: consume LLMEngine.step() token deltas as they land.
+
+``generate()`` is the blocking convenience; the real serving surface is
+``add_request()`` + ``step()``: each tick returns one ``RequestOutput``
+per request that gained tokens, carrying only the *new* tokens (so a UI
+can append them immediately) and, on the final delta, a
+``finish_reason``. Requests can join mid-stream — continuous batching is
+the default, not a mode.
+
+Run: PYTHONPATH=src python examples/serve_stream.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import transformer
+from repro.serving import LLMEngine, Request, SamplingParams
+
+
+def main():
+    cfg = registry.get_smoke_config("llama3-8b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    engine = LLMEngine(
+        cfg, params, kv_layout="auto", max_batch=4, num_pages=96,
+        page_size=16, max_pages_per_seq=8, prompt_buckets=(16, 32, 64),
+    )
+    print(f"kv_layout=auto resolved to {engine.kv_layout}")
+
+    rng = np.random.default_rng(0)
+    for uid in range(2):
+        engine.add_request(Request(
+            uid=uid,
+            prompt=rng.integers(1, cfg.vocab, size=(12,)),
+            sampling=SamplingParams(temperature=0.7, max_tokens=8, seed=uid),
+        ))
+
+    streams = {}
+    tick = 0
+    late_joined = False
+    while True:
+        outputs = engine.step()
+        for out in outputs:
+            toks = [int(np.asarray(t).reshape(-1)[0]) for t in out.new_tokens]
+            streams.setdefault(out.uid, []).extend(toks)
+            tag = f" <{out.finish_reason}>" if out.finished else ""
+            print(f"tick {tick:2d} | req {out.uid}: +{toks}{tag}")
+        tick += 1
+        if tick == 3 and not late_joined:
+            # A request arriving mid-stream joins the running batch.
+            late_joined = True
+            engine.add_request(
+                prompt=rng.integers(1, cfg.vocab, size=(6,)),
+                sampling=SamplingParams(max_tokens=5),
+                uid=99,
+            )
+            print("tick  2 | req 99 joined the stream")
+        if not engine.backend.active.any() and not engine.scheduler.has_work():
+            break
+
+    for uid, toks in sorted(streams.items()):
+        print(f"req {uid}: {toks}")
+    print(engine.stats().summary())
+
+
+if __name__ == "__main__":
+    main()

@@ -66,22 +66,27 @@ class PrefixCache:
     def __len__(self) -> int:
         return len(self._entries)
 
-    def lookup(self, hashes: Sequence[bytes]) -> List[int]:
+    def lookup(self, hashes: Sequence[bytes], touch: bool = True) -> List[int]:
         """Physical pages of the longest cached prefix of ``hashes``.
 
         Does NOT take references — callers incref via
         ``pool.allocate_sequence(shared_prefix=...)`` while the entries are
-        still cache-pinned. Matched entries are refreshed to MRU.
+        still cache-pinned. Matched entries are refreshed to MRU and the
+        hit/query counters advance; ``touch=False`` is a pure peek (for
+        admission *pricing*, which may probe the same request every
+        scheduling round without distorting LRU order or the hit rate).
         """
         pages: List[int] = []
         for h in hashes:
             pid = self._entries.get(h)
             if pid is None:
                 break
-            self._entries.move_to_end(h)
+            if touch:
+                self._entries.move_to_end(h)
             pages.append(pid)
-        self.queries += len(hashes)
-        self.hits += len(pages)
+        if touch:
+            self.queries += len(hashes)
+            self.hits += len(pages)
         return pages
 
     def insert(self, hashes: Sequence[bytes], pages: Sequence[int]) -> int:

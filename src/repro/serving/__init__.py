@@ -1,1 +1,24 @@
-"""repro subpackage."""
+"""Serving package: the ``LLMEngine`` facade and its layers.
+
+Public API (PR 5): ``LLMEngine`` + ``SamplingParams`` / ``Request`` /
+``RequestOutput`` / ``SchedulerStats``. ``serving.scheduler`` owns
+admission/fairness/preemption policy, ``serving.backends`` the dense and
+paged cache mechanism, ``serving.sampling`` the on-device batched
+sampler. ``ServingEngine`` / ``PagedServingEngine`` are deprecated shims.
+"""
+
+from repro.serving.engine import (
+    LLMEngine,
+    PagedServingEngine,
+    Request,
+    RequestOutput,
+    Result,
+    SamplingParams,
+    ServingEngine,
+)
+from repro.serving.scheduler import Scheduler, SchedulerStats
+
+__all__ = [
+    "LLMEngine", "Request", "RequestOutput", "Result", "SamplingParams",
+    "Scheduler", "SchedulerStats", "ServingEngine", "PagedServingEngine",
+]

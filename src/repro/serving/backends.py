@@ -1,0 +1,894 @@
+"""Execution backends for the serving facade: mechanism, not policy.
+
+The pre-PR-5 ``ServingEngine`` / ``PagedServingEngine`` sibling classes
+each owned a full submit/step/run lifecycle with host-side sampling baked
+in. This module keeps only what actually differs between the two KV
+layouts — cache plumbing — behind one protocol the scheduler and the
+``LLMEngine`` facade drive:
+
+  * ``try_admit(req, resume_tokens, pending_hashes)`` reserves a decode
+    row (and, paged, its pages) and returns an admission record — or
+    ``None`` (does not fit) / ``scheduler.DEFERRED`` (its prefix is one
+    flush away from being shareable);
+  * ``flush(records)`` runs the reserved prefills — one launch per shared
+    jit key with the admitted rows stacked on the batch axis — and
+    returns each row's last-position logits (sampling is the engine's
+    job, on device);
+  * ``prepare_row(row)`` / ``decode(tok)`` advance one decode tick;
+    page-pool pressure inside ``prepare_row`` consults the injected
+    ``choose_victim`` policy and reports evictions through ``on_preempt``
+    — the backend executes preemption, the scheduler decides it;
+  * ``release(row)`` frees a finished row; ``quote``/``free_pages``/
+    ``evictable_pages``/``decode_time_model`` feed the scheduler's page
+    budget and NUMA-occupancy admission policy.
+
+``DenseBackend`` is the slot-per-sequence dense-stripe layout;
+``PagedBackend`` is the paged pool with hash-chain prefix sharing,
+per-token page append, COW, and head-major (NUMA head-aligned) placement
+consumed natively by the paged kernels. All kernel scheduling flows
+through ``kernels.plan``; the backends never thread schedule names or
+query offsets.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.pool import NULL_PAGE, OutOfPages, PagePool, SequencePages
+from repro.cache.prefix import PrefixCache, page_hashes
+from repro.configs.base import ModelConfig
+from repro.kernels import plan as plan_lib
+from repro.models import transformer
+from repro.serving.scheduler import DEFERRED, default_choose_victim
+
+
+class _SeqState:
+    """One active decode row."""
+
+    __slots__ = ("req", "pages", "submit_order")
+
+    def __init__(self, req, pages, submit_order):
+        self.req = req
+        self.pages = pages
+        self.submit_order = submit_order
+
+
+class _Backend:
+    """Shared row bookkeeping + policy hooks."""
+
+    kv_layout: str
+    rows: int
+
+    def _init_rows(self, rows: int):
+        self.rows = rows
+        self.lengths = np.zeros((rows,), np.int32)
+        self.active = np.zeros((rows,), bool)
+        #: Generated tokens per row (includes replayed resume tokens) —
+        #: row state, because preemption requeues them for replay.
+        self.out: List[List] = [[] for _ in range(rows)]
+        self._submit_counter = 0
+        # Policy hooks, wired by LLMEngine; standalone backends fall back
+        # to the default victim rule and collect orphaned preemptions.
+        self.preempted: List[Tuple[object, List]] = []
+        self.choose_victim: Callable = default_choose_victim
+        self.on_preempt: Callable = (
+            lambda row, req, toks: self.preempted.append((req, toks))
+        )
+        self.stats = {
+            "preemptions": 0, "prefix_evictions": 0, "pages_reused": 0,
+            "prompt_pages": 0, "cow_copies": 0, "extend_prefills": 0,
+            "resumed_tokens": 0, "prefill_launches": 0,
+            "batched_prefills": 0,
+        }
+
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.prompt_buckets:
+            if n <= b:
+                return b
+        raise ValueError(
+            f"prompt length {n} exceeds buckets {self.prompt_buckets}"
+        )
+
+    def fits_buckets(self, n: int) -> bool:
+        return any(n <= b for b in self.prompt_buckets)
+
+
+# -----------------------------------------------------------------------------
+# Dense slots
+# -----------------------------------------------------------------------------
+
+
+class DenseBackend(_Backend):
+    """Slot-based dense KV: each row owns a ``cache_len`` stripe; new
+    requests prefill into free slots (jitted per bucketed prompt length);
+    one fused decode step advances every active slot. No preemption —
+    a slot is committed until its sequence finishes."""
+
+    kv_layout = "dense"
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        rows: int = 8,
+        cache_len: int = 2048,
+        prompt_buckets=(128, 512, 2048),
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.cache_len = cache_len
+        self.prompt_buckets = tuple(b for b in prompt_buckets if b <= cache_len)
+        self._init_rows(rows)
+        self.caches = transformer.init_caches(
+            params, cfg, rows, cache_len, image_len=cfg.vision_tokens or 0,
+        )
+        self.slot_req: List[Optional[object]] = [None] * rows
+        self._decode = jax.jit(
+            lambda params, tok, caches, lengths: transformer.decode_step(
+                params, cfg, tok, caches, lengths
+            )
+        )
+        self._prefill = {}
+
+    # -- capacity ----------------------------------------------------------
+
+    def validate(self, req) -> None:
+        n = len(req.prompt)
+        if not self.fits_buckets(n):
+            raise ValueError(
+                f"prompt length {n} exceeds buckets {self.prompt_buckets}"
+            )
+        if n + req.max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {n} + max_tokens "
+                f"{req.max_new_tokens} exceeds the dense cache stripe "
+                f"({self.cache_len} tokens)"
+            )
+
+    def decode_time_model(self, batch: int) -> float:
+        from repro import compat
+        from repro.core import perf_model
+
+        return perf_model.estimate_dense_decode(
+            batch=batch, num_q_heads=self.cfg.n_heads,
+            num_kv_heads=self.cfg.n_kv_heads, capacity=self.cache_len,
+            head_dim=self.cfg.head_dim,
+            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
+            topo=plan_lib._topology_for(compat.default_backend()),
+        ).time
+
+    @property
+    def page_occupancy(self) -> float:
+        return self.num_active / self.rows if self.rows else 0.0
+
+    # -- admission / prefill ----------------------------------------------
+
+    def try_admit(self, req, resume_tokens: Sequence = (),
+                  pending_hashes=()):
+        if resume_tokens:
+            raise ValueError("dense backend does not preempt, so it "
+                             "cannot resume")
+        free = np.flatnonzero(~self.active)
+        if len(free) == 0:
+            return None
+        n = len(req.prompt)
+        bucket = self._bucket_for(n)
+        row = int(free[0])
+        self.lengths[row] = n
+        self.active[row] = True
+        self.slot_req[row] = req
+        self.out[row] = []
+        self._submit_counter += 1
+        return {"req": req, "row": row, "n": n, "bucket": bucket,
+                "prompt": np.asarray(req.prompt)}
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill:
+            cfg = self.cfg
+
+            def f(params, tokens, last_positions):
+                return transformer.prefill(
+                    params, cfg, tokens, cache_len=self.cache_len,
+                    last_positions=last_positions,
+                )
+
+            self._prefill[bucket] = jax.jit(f)
+        return self._prefill[bucket]
+
+    def _write_slot_cache(self, slot: int, new_caches):
+        """Copy a single-sequence prefilled cache into the slot stripe.
+
+        Cache leaves carry batch at axis 1 for scanned stacks
+        ((n_periods, B, ...)) and axis 0 for remainder layers.
+        """
+
+        def assign(dst, src):
+            return dst.at[:, slot : slot + 1].set(src.astype(dst.dtype))
+
+        def assign_rem(dst, src):
+            return dst.at[slot : slot + 1].set(src.astype(dst.dtype))
+
+        self.caches = {
+            "scanned": jax.tree.map(
+                assign, self.caches["scanned"], new_caches["scanned"]
+            ),
+            "rem": jax.tree.map(
+                assign_rem, self.caches["rem"], new_caches["rem"]
+            ),
+        }
+
+    def flush(self, records) -> Dict[int, np.ndarray]:
+        """Prefill each admitted record into its slot; returns per-row
+        last-position logits for the engine's first-token sample."""
+        first_logits: Dict[int, np.ndarray] = {}
+        for rec in records:
+            n, bucket, tok = rec["n"], rec["bucket"], rec["prompt"]
+            pad_width = [(0, bucket - n)] + [(0, 0)] * (tok.ndim - 1)
+            padded = np.pad(tok, pad_width)[None]
+            self.stats["prefill_launches"] += 1
+            logits, caches1 = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(padded),
+                jnp.asarray([n - 1], jnp.int32),
+            )
+            self._write_slot_cache(rec["row"], caches1)
+            first_logits[rec["row"]] = np.asarray(logits)[0]
+        return first_logits
+
+    # -- decode / teardown -------------------------------------------------
+
+    def prepare_row(self, row: int) -> None:
+        pass  # dense stripes pre-reserve every position
+
+    def decode(self, tok: np.ndarray):
+        self.lengths = self.lengths + self.active.astype(np.int32)
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(tok), self.caches,
+            jnp.asarray(self.lengths),
+        )
+        return logits
+
+    def row_req(self, row: int):
+        return self.slot_req[row]
+
+    def release(self, row: int) -> None:
+        self.active[row] = False
+        self.slot_req[row] = None
+
+    @property
+    def mapping(self):
+        """Plan-resolved steady-state prefill schedule (stats / capacity
+        planning); a pinned paper schedule passes through unchanged."""
+        return plan_lib.plan_for_config(
+            self.cfg,
+            (self.rows, self.cfg.n_heads, self.cfg.n_kv_heads,
+             self.cache_len, self.cache_len, self.cfg.head_dim),
+            phase=plan_lib.PREFILL,
+        ).mapping
+
+
+# -----------------------------------------------------------------------------
+# Paged pool
+# -----------------------------------------------------------------------------
+
+
+class PagedBackend(_Backend):
+    """Paged KV-cache backend (PR 2-4 mechanism, policy extracted).
+
+    ``rows`` is only the width of the fused decode step (a jit-static
+    shape); *capacity* is the page pool — admission succeeds when a
+    request's non-shared prompt pages fit the free list with
+    ``reserve_pages`` of decode headroom. Prefix sharing, per-token page
+    append with COW, preemption + resume-by-replay, and head-major (NUMA
+    head-aligned) placement all live here; who is admitted or evicted is
+    the scheduler's call.
+
+    Restrictions: pure self-attention stacks (``init_paged_caches``
+    enforces it) and single-codebook token streams.
+    """
+
+    kv_layout = "paged"
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        *,
+        num_pages: int = 128,
+        page_size: int = 16,
+        rows: int = 8,
+        max_pages_per_seq: int = 16,
+        prompt_buckets=(32, 64, 128),
+        prefix_sharing: bool = True,
+        reserve_pages: int = 1,
+        batch_prefills: bool = True,
+    ):
+        if cfg.num_codebooks != 1:
+            raise ValueError("paged backend supports single-codebook models")
+        for b in prompt_buckets:
+            if b % page_size:
+                raise ValueError(
+                    f"prompt bucket {b} must be a multiple of page_size "
+                    f"{page_size}"
+                )
+        if num_pages - 1 < max_pages_per_seq:
+            # A lone max-size sequence must always be able to grow to its
+            # cap (evicting idle prefix pages on the way); otherwise decode
+            # hits OutOfPages with nothing to preempt.
+            raise ValueError(
+                f"num_pages={num_pages} (usable {num_pages - 1}) cannot "
+                f"hold one max_pages_per_seq={max_pages_per_seq} sequence"
+            )
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_pages_per_seq = max_pages_per_seq
+        self.cache_len = max_pages_per_seq * page_size
+        self.prompt_buckets = tuple(
+            b for b in prompt_buckets if b <= self.cache_len
+        )
+        self.reserve_pages = reserve_pages
+        self.prefix_sharing = prefix_sharing
+        self.batch_prefills = batch_prefills
+        self._init_rows(rows)
+
+        self.pool = PagePool(num_pages, page_size)
+        self.prefix = PrefixCache(self.pool)
+        self.caches = transformer.init_paged_caches(
+            params, cfg, num_pages, page_size
+        )
+        # Inactive rows keep all-null page tables and length 0: the decode
+        # step writes their token into the reserved null page and the
+        # kernel emits zeros for them.
+        self.page_table = np.zeros((rows, max_pages_per_seq), np.int32)
+        self.seqs: List[Optional[_SeqState]] = [None] * rows
+
+        self._decode = jax.jit(
+            lambda params, tok, caches, lengths, pt: transformer.decode_step(
+                params, cfg, tok, caches, lengths, page_table=pt
+            )
+        )
+        self._prefill_p: Dict = {}
+        self._scatter_jit = jax.jit(self._scatter_tail)
+        self._copy_jit = jax.jit(self._copy_page)
+
+    # -- capacity ----------------------------------------------------------
+
+    def validate(self, req) -> None:
+        tok = np.asarray(req.prompt)
+        if tok.ndim != 1:
+            raise ValueError("paged backend expects flat token prompts")
+        n = len(tok)
+        if self.pool.pages_needed(n + req.max_new_tokens) > self.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt {n} + max_new_tokens "
+                f"{req.max_new_tokens} can outgrow max_pages_per_seq="
+                f"{self.max_pages_per_seq} ({self.cache_len} tokens) "
+                "mid-decode; reject at admission instead"
+            )
+        if not self.prefix_sharing and not self.fits_buckets(n):
+            # With sharing on, a long prompt may still be servable through
+            # a prefix match (a runtime condition, checked at admission);
+            # without it the tail is always the full prompt — reject now.
+            raise ValueError(
+                f"prompt length {n} exceeds buckets {self.prompt_buckets}"
+            )
+
+    def quote(self, req) -> Tuple[int, int]:
+        """Page-budget quote for the scheduler: (total pages the prompt
+        needs, prefix-cache pages it would reuse). A pure peek — nothing
+        is reserved, LRU order and hit-rate counters stay untouched (the
+        scheduler may price a blocked request every round)."""
+        n = len(req.prompt)
+        total = self.pool.pages_needed(n)
+        matched = 0
+        if self.prefix_sharing and n > 1:
+            hashes = req.page_hashes(self.page_size)
+            matched = len(self.prefix.lookup(
+                hashes[: (n - 1) // self.page_size], touch=False
+            ))
+        return total, matched
+
+    @property
+    def free_pages(self) -> int:
+        return self.pool.free_pages
+
+    @property
+    def evictable_pages(self) -> int:
+        return len(self.prefix)
+
+    @property
+    def page_occupancy(self) -> float:
+        return self.pool.used_pages / max(self.pool.num_pages - 1, 1)
+
+    def decode_time_model(self, batch: int) -> float:
+        from repro import compat
+        from repro.core import perf_model
+
+        return perf_model.estimate_paged_decode(
+            batch=batch, num_q_heads=self.cfg.n_heads,
+            num_kv_heads=self.cfg.n_kv_heads,
+            mean_len=max(self.cache_len // 2, self.page_size),
+            page_size=self.page_size, head_dim=self.cfg.head_dim,
+            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
+            topo=plan_lib._topology_for(compat.default_backend()),
+        ).time
+
+    # -- jitted cache plumbing ---------------------------------------------
+
+    @staticmethod
+    def _scatter_tail(caches, tail_caches, pids):
+        """Write prefilled tails' dense K/V into freshly allocated pages.
+
+        pids: (rows, bucket/ps) destinations, one row per admitted
+        sequence in the (possibly batched) prefill; entries past a tail's
+        real pages are the null page (their writes are garbage sinks by
+        design — with several rows the null page takes whichever write
+        lands last, all equally garbage).
+        """
+        flat = pids.reshape(-1)
+
+        def s(pages, dense, scanned):
+            if scanned:
+                npp, rows, hkv, bucket, hd = dense.shape
+                ps = pages.shape[3]
+                new = dense.reshape(npp, rows, hkv, bucket // ps, ps, hd)
+                new = new.transpose(0, 2, 1, 3, 4, 5).reshape(
+                    npp, hkv, rows * (bucket // ps), ps, hd
+                )
+                return pages.at[:, :, flat].set(new.astype(pages.dtype))
+            rows, hkv, bucket, hd = dense.shape
+            ps = pages.shape[2]
+            new = dense.reshape(rows, hkv, bucket // ps, ps, hd)
+            new = new.transpose(1, 0, 2, 3, 4).reshape(
+                hkv, rows * (bucket // ps), ps, hd
+            )
+            return pages.at[:, flat].set(new.astype(pages.dtype))
+
+        def layer(c, t, scanned):
+            return {"attn": {
+                "k_pages": s(c["attn"]["k_pages"], t["attn"]["k"], scanned),
+                "v_pages": s(c["attn"]["v_pages"], t["attn"]["v"], scanned),
+            }}
+
+        return {
+            "scanned": tuple(
+                layer(c, t, True)
+                for c, t in zip(caches["scanned"], tail_caches["scanned"])
+            ),
+            "rem": tuple(
+                layer(c, t, False)
+                for c, t in zip(caches["rem"], tail_caches["rem"])
+            ),
+        }
+
+    @staticmethod
+    def _copy_page(caches, src, dst):
+        """Physical page copy (copy-on-write), every layer at once."""
+
+        def cp(pages, scanned):
+            if scanned:
+                return pages.at[:, :, dst].set(pages[:, :, src])
+            return pages.at[:, dst].set(pages[:, src])
+
+        def layer(c, scanned):
+            return {"attn": {
+                "k_pages": cp(c["attn"]["k_pages"], scanned),
+                "v_pages": cp(c["attn"]["v_pages"], scanned),
+            }}
+
+        return {
+            "scanned": tuple(layer(c, True) for c in caches["scanned"]),
+            "rem": tuple(layer(c, False) for c in caches["rem"]),
+        }
+
+    # -- prefill -----------------------------------------------------------
+
+    @staticmethod
+    def _prefix_page_bucket(pages: int) -> int:
+        """Bucket a live prefix page count to the next power of two: the
+        page-table width is a jit constant, so bucketing bounds tail-
+        prefill compilations at O(log smax) under diverse prefix lengths
+        (the live length stays dynamic via ``prefix_len``)."""
+        if pages <= 0:
+            return 0
+        return 1 << (pages - 1).bit_length()
+
+    def _prefill_paged_fn(self, bucket: int, prefix_pages: int, rows: int = 1):
+        """Jitted tail prefill, keyed by (tail bucket, prefix-page bucket,
+        admitted rows) — ``rows > 1`` is the batched-admission launch: the
+        admitted sequences stack on the batch axis of one call.
+
+        The nonzero-prefix variant runs the **extend phase**: one
+        backend-resolved ``AttentionPlan`` per key drives the paged
+        prefill kernel, which reads prefix K/V straight from the page
+        table — the pool tensors ride in as arguments, never gathered to
+        dense.
+        """
+        key = (bucket, prefix_pages, rows)
+        if key not in self._prefill_p:
+            cfg = self.cfg
+
+            if prefix_pages == 0:
+                def f(params, tokens, last_positions):
+                    return transformer.prefill(
+                        params, cfg, tokens, cache_len=bucket,
+                        last_positions=last_positions,
+                    )
+            else:
+                plan = plan_lib.plan_for_config(
+                    cfg,
+                    (rows, cfg.n_heads, cfg.n_kv_heads, bucket,
+                     prefix_pages * self.page_size + bucket, cfg.head_dim),
+                    phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
+                    page_size=self.page_size, prefix_pages=prefix_pages,
+                )
+
+                def f(params, tokens, last_positions, caches, page_table,
+                      prefix_len):
+                    return transformer.prefill(
+                        params, cfg, tokens, cache_len=bucket,
+                        last_positions=last_positions,
+                        prefix_caches=caches, page_table=page_table,
+                        prefix_len=prefix_len, plan=plan,
+                    )
+
+            self._prefill_p[key] = jax.jit(f)
+        return self._prefill_p[key]
+
+    # -- admission ---------------------------------------------------------
+
+    def _make_room(self, pages_needed: int) -> bool:
+        """Free pages until ``pages_needed`` fit: evict idle prefix-cache
+        pages first (pure capacity, nothing recomputes), then report
+        whether the caller should preempt."""
+        short = pages_needed - self.pool.free_pages
+        if short > 0 and len(self.prefix):
+            self.stats["prefix_evictions"] += self.prefix.evict(short)
+            short = pages_needed - self.pool.free_pages
+        return short <= 0
+
+    def _reserve(self, num_tokens: int, matched) -> Optional[SequencePages]:
+        """Page-table reservation for one admission attempt: pin the matched
+        prefix pages (lookup takes no references, and ``_make_room``'s
+        prefix eviction would otherwise be free to recycle exactly these
+        pages — they look idle until the sequence increfs them), make room,
+        allocate. Returns None when the pool cannot satisfy it."""
+        for p in matched:
+            self.pool.incref(p)
+        try:
+            need = self.pool.pages_needed(num_tokens) - len(matched)
+            if not self._make_room(need + self.reserve_pages):
+                return None
+            try:
+                return self.pool.allocate_sequence(
+                    num_tokens, shared_prefix=matched
+                )
+            except OutOfPages:
+                return None
+        finally:
+            for p in matched:
+                self.pool.decref(p)
+
+    def try_admit(self, req, resume_tokens: Sequence = (),
+                  pending_hashes=()):
+        """Reserve a decode row and pages for a request; no prefill yet.
+
+        Prefix-cache lookup happens first: shared full pages are reused
+        (prefilled once, by whoever computed them) and only the tail is
+        prefilled — through the paged prefill kernel, which reads the
+        prefix straight from its pages. Returns an admission record for
+        :meth:`flush`; None when the pool/rows cannot hold the request;
+        or :data:`~repro.serving.scheduler.DEFERRED` when the request's
+        next unmatched prefix page is in ``pending_hashes`` (pages a
+        record admitted earlier in the *same* round will publish) —
+        admitting it now would re-prefill a prefix that is one flush away
+        from being shareable. The row is claimed here (so subsequent
+        admissions in the same round see it taken); the caller must flush
+        before the next decode tick.
+
+        ``resume_tokens``: tokens a preempted run of this request already
+        generated. They are replayed through the same extend path (they
+        are just more prompt from the cache's point of view), so decode
+        resumes mid-stream instead of restarting from scratch.
+        """
+        free_rows = np.flatnonzero(~self.active)
+        if len(free_rows) == 0:
+            return None
+        tok = np.asarray(req.prompt)
+        if tok.ndim != 1:
+            raise ValueError("paged backend expects flat token prompts")
+        orig_n = len(tok)
+        if len(resume_tokens):
+            tok = np.concatenate(
+                [tok, np.asarray([int(t) for t in resume_tokens], tok.dtype)]
+            )
+        n = len(tok)
+        ps = self.page_size
+        total_pages = self.pool.pages_needed(n)
+        if total_pages > self.max_pages_per_seq:
+            raise ValueError(
+                f"prompt needs {total_pages} pages > "
+                f"max_pages_per_seq {self.max_pages_per_seq}"
+            )
+        self.validate(req)
+
+        if not self.prefix_sharing:
+            hashes = []
+        elif len(resume_tokens):
+            hashes = page_hashes(tok, ps)  # replay extends the stream
+        else:
+            hashes = req.page_hashes(ps)   # memoized on the request
+        # Reuse at most (n-1)//ps pages: at least one tail token must be
+        # prefilled here to produce the next-token logits.
+        matched = self.prefix.lookup(hashes[: (n - 1) // ps])
+        m0 = len(matched)
+        if pending_hashes and m0 < (n - 1) // ps and hashes[m0] in pending_hashes:
+            # The next page this prompt could share is being prefilled by a
+            # record already admitted this round: wait one round and extend
+            # off the published pages instead of recomputing the prefix.
+            return DEFERRED
+
+        # Validate the prefill bucket before touching the allocator (a late
+        # ValueError must not leak pages).
+        if not self.fits_buckets(n - len(matched) * ps):
+            if len(resume_tokens):
+                # A replay tail no bucket holds: drop replayed tokens until
+                # it fits (decode regenerates them exactly — the sampler is
+                # keyed per request and stream position). The prefix match
+                # for a truncated sequence is the full match capped at its
+                # page count, so the fit is computable without re-hashing;
+                # keep the longest replay that fits.
+                m_full = len(matched)
+                for keep in range(len(resume_tokens) - 1, -1, -1):
+                    nk = orig_n + keep
+                    mk = min(m_full, (nk - 1) // ps)
+                    if self.fits_buckets(nk - mk * ps):
+                        return self.try_admit(
+                            req, list(resume_tokens)[:keep], pending_hashes
+                        )
+                # Not even the bare prompt fits (its prefix pages were
+                # evicted since first admission): fall through to the
+                # admission error below.
+            raise ValueError(
+                f"prompt tail {n - len(matched) * ps} exceeds buckets "
+                f"{self.prompt_buckets}"
+            )
+        seq = self._reserve(n, matched)
+        if seq is None and matched and self.fits_buckets(n):
+            # Reuse blocked admission (the pinned prefix pages were the only
+            # evictable capacity): fall back to prefilling from scratch so a
+            # servable request is never starved by its own cached prefix.
+            # Prompts only servable *through* reuse stay queued instead
+            # (pages free up as sequences finish).
+            matched = []
+            seq = self._reserve(n, matched)
+        if seq is None:
+            return None
+        m = len(matched)
+        tail = tok[m * ps :]
+        bucket = self._bucket_for(len(tail))
+        self.stats["pages_reused"] += m
+        self.stats["prompt_pages"] += total_pages
+
+        # Claim the decode row now — pages and row are spoken for; the
+        # prefill itself runs at flush time.
+        row = int(free_rows[0])
+        self.seqs[row] = _SeqState(
+            req=req, pages=seq, submit_order=self._submit_counter
+        )
+        self._submit_counter += 1
+        self.page_table[row] = NULL_PAGE
+        self.page_table[row, : len(seq.pages)] = seq.pages
+        self.lengths[row] = n
+        self.active[row] = True
+        self.out[row] = list(resume_tokens)
+        self.stats["resumed_tokens"] += len(resume_tokens)
+        return {
+            "req": req, "row": row, "seq": seq, "matched": matched,
+            "tail": tail, "bucket": bucket, "n": n, "hashes": hashes,
+            "mb": self._prefix_page_bucket(m) if m else 0,
+            "pending_publish": tuple(hashes[: n // ps]),
+        }
+
+    def flush(self, records) -> Dict[int, np.ndarray]:
+        """Run the admitted records' tail prefills: one launch per shared
+        (tail-bucket, prefix-page-bucket) jit key with the admitted rows
+        stacked on the batch axis (``batch_prefills=False`` launches one
+        row at a time — the bit-exactness oracle in tests). The paged
+        prefill kernel takes per-row ``prefix_len`` / ``tail_len``, so
+        rows with different live lengths share a launch; rows are
+        independent (per-row page tables, per-row online softmax), so
+        outputs are bit-exact either way. Prefix pages publish after each
+        group's scatter: a record never reads pages whose contents this
+        same flush still owes. Returns per-row last-position logits."""
+        ps = self.page_size
+        first_logits: Dict[int, np.ndarray] = {}
+        groups: Dict[Tuple[int, int], list] = {}
+        if self.batch_prefills:
+            for rec in records:
+                groups.setdefault((rec["bucket"], rec["mb"]), []).append(rec)
+        else:
+            for i, rec in enumerate(records):
+                groups[(rec["bucket"], rec["mb"], i)] = [rec]
+        for (bucket, mb, *_), grp in groups.items():
+            rows = len(grp)
+            padded = np.stack(
+                [np.pad(r["tail"], (0, bucket - len(r["tail"]))) for r in grp]
+            )
+            last = jnp.asarray(
+                [len(r["tail"]) - 1 for r in grp], jnp.int32
+            )
+            self.stats["prefill_launches"] += 1
+            self.stats["batched_prefills"] += rows > 1
+            if mb == 0:
+                logits, tail_caches = self._prefill_paged_fn(bucket, 0, rows)(
+                    self.params, jnp.asarray(padded), last
+                )
+            else:
+                # Extend phase: each page-table row is padded to the
+                # power-of-two page bucket with null pages (the kernel
+                # masks them via the dynamic prefix_len), so every prefix
+                # length in a bucket shares one compilation — and the pool
+                # is consumed in place, no gather.
+                pt = np.full((rows, mb), NULL_PAGE, np.int32)
+                for i, r in enumerate(grp):
+                    pt[i, : len(r["matched"])] = r["matched"]
+                plens = jnp.asarray(
+                    [len(r["matched"]) * ps for r in grp], jnp.int32
+                )
+                self.stats["extend_prefills"] += rows
+                logits, tail_caches = self._prefill_paged_fn(bucket, mb, rows)(
+                    self.params, jnp.asarray(padded), last, self.caches,
+                    jnp.asarray(pt), plens,
+                )
+            # Scatter every row's tail K/V into its fresh pages (buckets
+            # are page-aligned; destinations beyond a tail's real pages
+            # sink into the null page).
+            pids = np.full((rows, bucket // ps), NULL_PAGE, np.int32)
+            for i, r in enumerate(grp):
+                tail_pages = r["seq"].pages[len(r["matched"]):]
+                pids[i, : len(tail_pages)] = tail_pages
+            self.caches = self._scatter_jit(
+                self.caches, tail_caches, jnp.asarray(pids)
+            )
+            logits_np = np.asarray(logits)
+            for i, r in enumerate(grp):
+                # Publish this prompt's full pages for later requests.
+                if self.prefix_sharing:
+                    nfull = r["n"] // ps
+                    self.prefix.insert(
+                        r["hashes"][:nfull], r["seq"].pages[:nfull]
+                    )
+                first_logits[r["row"]] = logits_np[i]
+        return first_logits
+
+    # -- preemption / decode ----------------------------------------------
+
+    def _preempt_one(self, protect: int) -> bool:
+        """Evict one active sequence — which one is the injected
+        ``choose_victim`` policy's call (lowest priority, newest by
+        default) — and report it through ``on_preempt`` so the scheduler
+        requeues it with its generated-so-far tokens (replayed through the
+        extend path on re-admission); never the row ``protect``."""
+        candidates = [
+            (s.req.priority, s.submit_order, row)
+            for row, s in enumerate(self.seqs)
+            if s is not None and self.active[row] and row != protect
+        ]
+        row = self.choose_victim(candidates, protect) if candidates else None
+        if row is None:
+            return False
+        state = self.seqs[row]
+        self.stats["preemptions"] += 1
+        self.pool.release(state.pages)
+        generated = list(self.out[row])
+        self.active[row] = False
+        self.seqs[row] = None
+        self.page_table[row] = NULL_PAGE
+        self.lengths[row] = 0
+        self.out[row] = []
+        self.on_preempt(row, state.req, generated)
+        return True
+
+    def prepare_row(self, row: int) -> None:
+        """Reserve the next token's slot in row's page table, preempting
+        others if the pool is exhausted mid-decode."""
+        state = self.seqs[row]
+        while True:
+            try:
+                _, _, cow = self.pool.append_token(state.pages)
+                break
+            except OutOfPages:
+                if not (self._make_room(1) or self._preempt_one(row)):
+                    raise OutOfPages(
+                        "pool exhausted and nothing left to preempt"
+                    )
+        if cow is not None:
+            src, dst = cow
+            self.stats["cow_copies"] += 1
+            # Traced page ids: one jitted copy program serves every pair.
+            self.caches = self._copy_jit(
+                self.caches, jnp.asarray(src, jnp.int32),
+                jnp.asarray(dst, jnp.int32),
+            )
+        if state.pages.num_pages() > self.max_pages_per_seq:
+            raise ValueError(
+                f"sequence {state.req.uid} outgrew max_pages_per_seq="
+                f"{self.max_pages_per_seq}; cap prompt+max_new_tokens at "
+                f"{self.cache_len} tokens"
+            )
+        self.page_table[row] = NULL_PAGE
+        self.page_table[row, : len(state.pages.pages)] = state.pages.pages
+
+    def decode(self, tok: np.ndarray):
+        self.lengths = self.lengths + self.active.astype(np.int32)
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(tok), self.caches,
+            jnp.asarray(self.lengths), jnp.asarray(self.page_table),
+        )
+        return logits
+
+    def row_req(self, row: int):
+        return self.seqs[row].req
+
+    def release(self, row: int) -> None:
+        state = self.seqs[row]
+        # Pages the prefix cache references survive; the rest free now.
+        self.pool.release(state.pages)
+        self.active[row] = False
+        self.seqs[row] = None
+        self.page_table[row] = NULL_PAGE
+        self.lengths[row] = 0
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def mapping(self):
+        """Resolved decode-shape schedule (decode & window are part of the
+        plan key, so this differs from the prefill resolution)."""
+        return plan_lib.plan_for_config(
+            self.cfg,
+            (self.rows, self.cfg.n_heads, self.cfg.n_kv_heads,
+             1, self.cache_len, self.cfg.head_dim),
+            phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED,
+            page_size=self.page_size,
+        ).mapping
+
+    def modeled_kv_layout(self) -> str:
+        """What the analytic model would pick for this backend's steady
+        state (paged head-aligned vs interleaved vs dense stripes)."""
+        live = self.lengths[self.active]
+        mean_len = int(live.mean()) if live.size else self.cache_len // 2
+        return plan_lib.resolve_kv_layout(
+            (self.rows, self.cfg.n_heads, self.cfg.n_kv_heads,
+             max(mean_len, 1), self.cfg.head_dim),
+            capacity=self.cache_len,
+            page_size=self.page_size,
+            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
+        )
+
+    def prefix_stats(self) -> Dict[str, float]:
+        reused = self.stats["pages_reused"]
+        total = self.stats["prompt_pages"]
+        return {
+            "prefix_entries": float(len(self.prefix)),
+            "pages_reused": float(reused),
+            "prompt_pages": float(total),
+            "prefix_hit_rate": reused / total if total else 0.0,
+            "preemptions": float(self.stats["preemptions"]),
+            "resumed_tokens": float(self.stats["resumed_tokens"]),
+            "extend_prefills": float(self.stats["extend_prefills"]),
+            "prefill_launches": float(self.stats["prefill_launches"]),
+            "batched_prefills": float(self.stats["batched_prefills"]),
+            "cow_copies": float(self.stats["cow_copies"]),
+            "free_pages": float(self.pool.free_pages),
+        }

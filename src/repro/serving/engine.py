@@ -1,311 +1,88 @@
-"""Batched serving engines: continuous batching over jitted prefill/decode.
+"""``LLMEngine``: the one public serving entry point.
 
-Two control planes over the same model stack:
+Pre-PR-5 the serving API was two sibling engine classes with duplicated
+submit/step/run lifecycles, greedy-only host sampling, and a blocking
+``run()`` as the only entry point — callers picked dense vs paged by
+picking a class. The facade collapses that:
 
-``ServingEngine`` — slot-based continuous batching, dense KV cache:
-  * fixed ``num_slots`` concurrent sequences, each owning a cache stripe,
-  * new requests prefill into free slots (prefill is jitted per bucketed
-    prompt length to bound compilation),
-  * one fused decode step advances every active slot each tick; finished
-    sequences (EOS / max_tokens) free their slot immediately,
-  * deterministic greedy or temperature sampling.
+  * ``LLMEngine(cfg, params, kv_layout="auto")`` — layout is a *policy*
+    resolved through the plan layer (``kernels.plan.resolve_kv_layout``,
+    the paper's NUMA decode model), not a class choice; models the paged
+    subsystem cannot hold (multi-codebook, SSM/hybrid, cross-attention)
+    fall back to dense automatically;
+  * ``add_request(...)`` / ``step() -> list[RequestOutput]`` — continuous
+    batching with **streaming** outputs: each tick emits the tokens it
+    appended, and terminating requests carry a ``finish_reason``;
+  * ``generate(requests)`` — the blocking convenience loop over ``step``;
+  * sampling is per-request (``SamplingParams``) and runs **on device**:
+    one jitted batched sampler per tick (``serving.sampling``), keyed per
+    request so outputs are reproducible across batch compositions and
+    across preemption/resume. ``temperature=0`` is exact argmax — greedy
+    outputs bit-match the pre-refactor engines;
+  * admission / fairness / preemption policy lives in
+    ``serving.scheduler`` (page budget, priority + FCFS aging, the
+    NUMA-occupancy admission cap from ``core.perf_model``); the execution
+    backends (``serving.backends``) are pure cache mechanism.
 
-``PagedServingEngine`` — the serving-scale control plane (PR 2): KV lives
-in a pool of fixed-size pages (``cache.pool``), so
-  * admission is by free-page count, not slot count: a request enters when
-    its prompt's pages (minus any prefix-cache reuse) fit the pool,
-  * decode appends per-token: a sequence grows one page at a time instead
-    of reserving a ``cache_len`` stripe up front,
-  * common prefixes are prefilled once: ``cache.prefix`` hash-chains full
-    pages, and later requests reuse the physical pages and prefill only
-    their tail — the **extend phase**: the paged prefill kernel reads the
-    prefix K/V straight from the page table (no gather, no dense copy),
-    driven by one engine-resolved ``AttentionPlan`` per (tail-bucket,
-    prefix-page-bucket, rows) jit key; prefix page counts bucket to powers
-    of two so compilations stay O(log smax) under diverse prefix lengths,
-  * ready admissions **batch** (PR 4): ``run`` first *admits* every
-    request the pool can hold (reserving rows and pages), then launches
-    one tail prefill per shared jit key with the admitted rows stacked on
-    the batch axis — the kernel already takes ``(B,)`` prefix/tail
-    lengths, so four same-bucket admissions cost one launch instead of
-    four. Outputs are bit-exact vs one-at-a-time submission (rows are
-    independent); prefix pages publish at the flush, and a request whose
-    prefix is about to be published by the *same* flush defers one round
-    (``DEFERRED``) so it still extends off the shared pages instead of
-    re-prefilling them,
-  * pool exhaustion first evicts idle prefix-cache pages, then preempts
-    the lowest-priority active sequence — which later **resumes**: its
-    generated tokens are replayed through the same extend path instead of
-    restarting the decode from scratch,
-  * pages are head-major (``cache.layout.HEAD_ALIGNED``): a KV head's
-    pages live in that head's domain stripe, so the paged decode kernel's
-    (batch, kv-head) grid cells only touch local pages — the paper's
-    WG->XCD co-location carried into serving.
-
-All kernel scheduling flows through ``kernels.plan`` (PR 3): the engines
-never thread mapping names or query offsets — they resolve
-``AttentionPlan``s and hand them to ``transformer.prefill``; the model
-layers resolve their own plans for the other phases. Engines are
-mesh-transparent: pass sharded caches and jitted fns and they drive the
-distributed case identically.
+``ServingEngine`` / ``PagedServingEngine`` survive as deprecated shims
+over the facade; nothing outside ``repro.serving`` may construct them
+(grep-enforced in ``tests/test_serving.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+import time
+import warnings
+from typing import Dict, Iterable, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.pool import NULL_PAGE, OutOfPages, PagePool, SequencePages
-from repro.cache.prefix import PrefixCache, page_hashes
+from repro.cache.pool import OutOfPages
 from repro.configs.base import ModelConfig
 from repro.kernels import plan as plan_lib
-from repro.models import transformer
+from repro.serving import sampling as sampling_lib
+from repro.serving.backends import DenseBackend, PagedBackend
+from repro.serving.request import (
+    FINISH_LENGTH,
+    FINISH_STOP,
+    Request,
+    RequestOutput,
+    SamplingParams,
+)
+from repro.serving.scheduler import DEFERRED, Scheduler, SchedulerStats
+
+__all__ = [
+    "LLMEngine", "Request", "RequestOutput", "SamplingParams", "Result",
+    "ServingEngine", "PagedServingEngine",
+]
+
+KV_LAYOUTS = ("auto", "dense", "paged")
 
 
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # (S,) or (S, K)
-    max_new_tokens: int = 32
-    eos_id: Optional[int] = None
-    temperature: float = 0.0
-    priority: int = 0             # higher survives preemption longer
+def _paged_supported(cfg: ModelConfig) -> bool:
+    """Whether the paged subsystem can hold this model: pure self-attention
+    stacks, single-codebook streams (mirrors ``init_paged_caches``)."""
+    if cfg.num_codebooks != 1:
+        return False
+    pattern, rem = cfg.pattern_for_depth()
+    return all(
+        spec.kind == "attn" and not spec.cross_attn
+        for spec in list(pattern) + list(rem)
+    )
 
 
-@dataclasses.dataclass
-class Result:
-    uid: int
-    tokens: List
-    prompt_len: int
+class LLMEngine:
+    """Unified serving facade: one engine, scheduler-driven, both layouts.
 
-
-class ServingEngine:
-    def __init__(
-        self,
-        cfg: ModelConfig,
-        params,
-        *,
-        num_slots: int = 8,
-        cache_len: int = 2048,
-        prompt_buckets=(128, 512, 2048),
-        rng_seed: int = 0,
-        mapping: Optional[str] = None,
-    ):
-        # ``mapping`` overrides the config's kernel-schedule policy for this
-        # engine: "auto" (plan-resolved per shape) or a paper mapping name.
-        # ``with_mapping`` validates a pinned name at construction (fail
-        # fast) instead of mid-trace.
-        cfg = plan_lib.with_mapping(cfg, mapping)
-        self.cfg = cfg
-        self.params = params
-        self.num_slots = num_slots
-        self.cache_len = cache_len
-        self.prompt_buckets = tuple(b for b in prompt_buckets if b <= cache_len)
-        self.caches = transformer.init_caches(
-            params, cfg, num_slots, cache_len,
-            image_len=cfg.vision_tokens or 0,
-        )
-        self.lengths = np.zeros((num_slots,), np.int32)
-        self.active = np.zeros((num_slots,), bool)
-        self.slot_req: List[Optional[Request]] = [None] * num_slots
-        self.slot_out: List[List] = [[] for _ in range(num_slots)]
-        self.results: List[Result] = []
-        self.rng = np.random.default_rng(rng_seed)
-        self._pending_first: Dict[int, np.ndarray] = {}
-
-        self._decode = jax.jit(
-            lambda params, tok, caches, lengths: transformer.decode_step(
-                params, cfg, tok, caches, lengths
-            )
-        )
-        self._prefill = {}
-
-    # ------------------------------------------------------------------
-
-    @property
-    def mapping(self):
-        """The engine's advertised kernel schedule (stats, capacity
-        planning): what the plan layer resolves for the steady-state
-        prefill shape (all ``num_slots`` stripes attending ``cache_len``
-        keys) under the config's policy — a pinned paper mapping passes
-        through unchanged. Resolved lazily; the attention layers still
-        re-resolve per traced shape."""
-        return plan_lib.plan_for_config(
-            self.cfg,
-            (self.num_slots, self.cfg.n_heads, self.cfg.n_kv_heads,
-             self.cache_len, self.cache_len, self.cfg.head_dim),
-            phase=plan_lib.PREFILL,
-        ).mapping
-
-    def _prefill_fn(self, bucket: int):
-        if bucket not in self._prefill:
-            cfg = self.cfg
-
-            def f(params, tokens, last_positions):
-                return transformer.prefill(
-                    params, cfg, tokens, cache_len=self.cache_len,
-                    last_positions=last_positions,
-                )
-
-            self._prefill[bucket] = jax.jit(f)
-        return self._prefill[bucket]
-
-    def _bucket_for(self, n: int) -> int:
-        for b in self.prompt_buckets:
-            if n <= b:
-                return b
-        raise ValueError(f"prompt length {n} exceeds buckets {self.prompt_buckets}")
-
-    def _write_slot_cache(self, slot: int, new_caches):
-        """Copy a single-sequence prefilled cache into the slot stripe.
-
-        Cache leaves carry batch at axis 1 for scanned stacks
-        ((n_periods, B, ...)) and axis 0 for remainder layers.
-        """
-
-        def assign(dst, src):
-            return dst.at[:, slot : slot + 1].set(src.astype(dst.dtype))
-
-        def assign_rem(dst, src):
-            return dst.at[slot : slot + 1].set(src.astype(dst.dtype))
-
-        self.caches = {
-            "scanned": jax.tree.map(assign, self.caches["scanned"], new_caches["scanned"]),
-            "rem": jax.tree.map(assign_rem, self.caches["rem"], new_caches["rem"]),
-        }
-
-    def submit(self, req: Request) -> bool:
-        """Prefill a request into a free slot; False if engine is full."""
-        free = np.flatnonzero(~self.active)
-        if len(free) == 0:
-            return False
-        slot = int(free[0])
-        n = len(req.prompt)
-        bucket = self._bucket_for(n)
-        tok = np.asarray(req.prompt)
-        pad_width = [(0, bucket - n)] + [(0, 0)] * (tok.ndim - 1)
-        padded = np.pad(tok, pad_width)[None]  # (1, bucket[, K])
-        logits, caches1 = self._prefill_fn(bucket)(
-            self.params, jnp.asarray(padded), jnp.asarray([n - 1], jnp.int32)
-        )
-        self._write_slot_cache(slot, caches1)
-        self.lengths[slot] = n
-        self.active[slot] = True
-        self.slot_req[slot] = req
-        self.slot_out[slot] = []
-        first = self._sample_host(np.asarray(logits)[0], req)
-        self._pending_first[slot] = first
-        return True
-
-    def _sample_host(self, logits: np.ndarray, req: Request):
-        if req.temperature <= 0:
-            return np.argmax(logits, axis=-1)
-        p = np.exp((logits - logits.max(-1, keepdims=True)) / req.temperature)
-        p /= p.sum(-1, keepdims=True)
-        if logits.ndim == 1:
-            return self.rng.choice(len(p), p=p)
-        return np.array([self.rng.choice(p.shape[-1], p=row) for row in p])
-
-    def step(self):
-        """One decode tick for all active slots."""
-        if not self.active.any():
-            return
-        pend = self._pending_first
-        tok = np.zeros(
-            (self.num_slots,) + (() if self.cfg.num_codebooks == 1 else (self.cfg.num_codebooks,)),
-            np.int32,
-        )
-        for slot in range(self.num_slots):
-            if not self.active[slot]:
-                continue
-            if slot in pend:
-                nxt = pend.pop(slot)
-            else:
-                nxt = self.slot_out[slot][-1]
-            tok[slot] = nxt
-        self.lengths = self.lengths + self.active.astype(np.int32)
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(tok), self.caches, jnp.asarray(self.lengths)
-        )
-        self._advance_rows(tok, np.asarray(logits))
-
-    def _row_request(self, row: int) -> Request:
-        return self.slot_req[row]
-
-    def _advance_rows(self, tok, logits):
-        """Shared post-decode bookkeeping: append the token just decoded,
-        sample the next one, terminate on EOS / max_new_tokens."""
-        for row in range(len(self.active)):
-            if not self.active[row]:
-                continue
-            req = self._row_request(row)
-            self.slot_out[row].append(tok[row].copy())
-            nxt = self._sample_host(logits[row], req)
-            done = len(self.slot_out[row]) >= req.max_new_tokens
-            if req.eos_id is not None and np.ndim(nxt) == 0 and int(nxt) == req.eos_id:
-                done = True
-                if len(self.slot_out[row]) < req.max_new_tokens:
-                    self.slot_out[row].append(np.asarray(nxt))  # include EOS
-            if done:
-                self._finish(row, req)
-            else:
-                self._pending_first[row] = nxt
-
-    def _finish(self, slot: int, req: Request):
-        self.results.append(
-            Result(uid=req.uid, tokens=list(self.slot_out[slot]),
-                   prompt_len=len(req.prompt))
-        )
-        self.active[slot] = False
-        self.slot_req[slot] = None
-
-    def run(self, requests: List[Request]) -> List[Result]:
-        """Drive until all requests complete (continuous batching)."""
-        queue = deque(requests)
-        while queue or self.active.any():
-            while queue and self.submit(queue[0]):
-                queue.popleft()
-            self.step()
-        return self.results
-
-
-# -----------------------------------------------------------------------------
-# Paged engine
-# -----------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class _SeqState:
-    """One active decode row of the paged engine."""
-
-    req: Request
-    pages: SequencePages
-    submit_order: int
-
-
-#: Admission verdict: the request's prefix matches pages a record in the
-#: *current* flush is about to publish — admit it next round (as an extend)
-#: instead of prefilling the shared prefix a second time.
-DEFERRED = object()
-
-
-class PagedServingEngine(ServingEngine):
-    """Continuous batching over the paged KV-cache subsystem.
-
-    ``max_batch`` is only the width of the fused decode step (a jit-static
-    shape); *admission* is governed by the page pool — a request enters
-    when its non-shared prompt pages fit the free list with ``reserve``
-    pages of decode headroom. ``num_pages`` and ``page_size`` size the
-    pool; a sequence may grow to ``max_pages_per_seq`` pages
-    (the page-table width, also jit-static).
-
-    Restrictions: pure self-attention stacks only (``init_paged_caches``
-    enforces it) and single-codebook token streams.
+    ``kv_layout="auto"`` resolves dense vs paged through the plan layer's
+    analytic NUMA decode model for this engine's steady-state shape;
+    ``"dense"`` / ``"paged"`` pin it. Capacity knobs: ``max_batch`` decode
+    rows and a ``cache_len`` dense stripe, or ``num_pages`` x
+    ``page_size`` pool with ``max_pages_per_seq`` (default
+    ``cache_len // page_size``) for paged. ``prompt_buckets=None`` picks
+    per-layout defaults.
     """
 
     def __init__(
@@ -313,639 +90,421 @@ class PagedServingEngine(ServingEngine):
         cfg: ModelConfig,
         params,
         *,
+        kv_layout: str = "auto",
+        max_batch: int = 8,
+        cache_len: int = 2048,
+        prompt_buckets=None,
         num_pages: int = 128,
         page_size: int = 16,
-        max_batch: int = 8,
-        max_pages_per_seq: int = 16,
-        prompt_buckets=(32, 64, 128),
-        rng_seed: int = 0,
-        mapping: Optional[str] = None,
+        max_pages_per_seq: Optional[int] = None,
         prefix_sharing: bool = True,
         reserve_pages: int = 1,
-        batch_admissions: bool = True,
+        batch_prefills: bool = True,
+        mapping: Optional[str] = None,
+        scheduler: Optional[Scheduler] = None,
     ):
-        cfg = plan_lib.with_mapping(cfg, mapping)
-        if cfg.num_codebooks != 1:
-            raise ValueError("paged engine supports single-codebook models")
-        for b in prompt_buckets:
-            if b % page_size:
-                raise ValueError(
-                    f"prompt bucket {b} must be a multiple of page_size {page_size}"
-                )
-        if num_pages - 1 < max_pages_per_seq:
-            # A lone max-size sequence must always be able to grow to its
-            # cap (evicting idle prefix pages on the way); otherwise decode
-            # hits OutOfPages with nothing to preempt.
+        if kv_layout not in KV_LAYOUTS:
             raise ValueError(
-                f"num_pages={num_pages} (usable {num_pages - 1}) cannot hold "
-                f"one max_pages_per_seq={max_pages_per_seq} sequence"
+                f"kv_layout must be one of {KV_LAYOUTS}, got {kv_layout!r}"
+            )
+        # ``mapping`` overrides the config's kernel-schedule policy for
+        # this engine ("auto" or a paper schedule name); ``with_mapping``
+        # validates a pinned name at construction instead of mid-trace.
+        cfg = plan_lib.with_mapping(cfg, mapping)
+        if kv_layout == "auto":
+            if not _paged_supported(cfg):
+                kv_layout = "dense"
+            else:
+                pick = plan_lib.resolve_kv_layout(
+                    (max_batch, cfg.n_heads, cfg.n_kv_heads,
+                     max(cache_len // 2, 1), cfg.head_dim),
+                    capacity=cache_len,
+                    page_size=page_size,
+                    dtype_bytes=jnp.dtype(cfg.compute_dtype).itemsize,
+                )
+                kv_layout = "paged" if pick.startswith("paged") else "dense"
+        if kv_layout == "dense":
+            self.backend = DenseBackend(
+                cfg, params, rows=max_batch, cache_len=cache_len,
+                prompt_buckets=prompt_buckets or (128, 512, 2048),
+            )
+        else:
+            self.backend = PagedBackend(
+                cfg, params, num_pages=num_pages, page_size=page_size,
+                rows=max_batch,
+                max_pages_per_seq=(
+                    max_pages_per_seq
+                    # Default: a sequence may use the dense-equivalent
+                    # stripe, clamped to what the pool can actually hold.
+                    or max(1, min(cache_len // page_size, num_pages - 1))
+                ),
+                prompt_buckets=prompt_buckets or (32, 64, 128),
+                prefix_sharing=prefix_sharing,
+                reserve_pages=reserve_pages,
+                batch_prefills=batch_prefills,
             )
         self.cfg = cfg
-        self.params = params
-        self.page_size = page_size
-        self.max_batch = max_batch
-        self.max_pages_per_seq = max_pages_per_seq
-        self.cache_len = max_pages_per_seq * page_size
-        self.prompt_buckets = tuple(
-            b for b in prompt_buckets if b <= self.cache_len
-        )
-        self.reserve_pages = reserve_pages
-        self.prefix_sharing = prefix_sharing
-        self.batch_admissions = batch_admissions
+        self.scheduler = scheduler or Scheduler()
+        self.backend.choose_victim = self.scheduler.choose_victim
+        self.backend.on_preempt = self._on_preempt
 
-        self.pool = PagePool(num_pages, page_size)
-        self.prefix = PrefixCache(self.pool)
-        self.caches = transformer.init_paged_caches(
-            params, cfg, num_pages, page_size
-        )
-        # Per-row state. Inactive rows keep all-null page tables and
-        # length 0: the decode step writes their token into the reserved
-        # null page and the kernel emits zeros for them.
-        self.page_table = np.zeros((max_batch, max_pages_per_seq), np.int32)
-        self.lengths = np.zeros((max_batch,), np.int32)
-        self.active = np.zeros((max_batch,), bool)
-        self.seqs: List[Optional[_SeqState]] = [None] * max_batch
-        self.slot_out: List[List] = [[] for _ in range(max_batch)]
-        self.results: List[Result] = []
-        self.rng = np.random.default_rng(rng_seed)
-        self._pending_first: Dict[int, np.ndarray] = {}
-        self._submit_counter = 0
-        # Preempted work: (request, tokens already generated). On
-        # re-admission the generated tokens are replayed through the extend
-        # path so decode resumes mid-stream instead of starting over.
-        self._requeue: "deque[Tuple[Request, List]]" = deque()
-        self.stats = {"preemptions": 0, "prefix_evictions": 0,
-                      "pages_reused": 0, "prompt_pages": 0, "cow_copies": 0,
-                      "extend_prefills": 0, "resumed_tokens": 0,
-                      "prefill_launches": 0, "batched_prefills": 0}
+        self._pending: Dict[int, np.ndarray] = {}   # row -> next token
+        self._streamed: Dict[int, int] = {}         # uid -> tokens emitted
+        self._completed: List[RequestOutput] = []
+        self._next_uid = 0
+        self._tokens_generated = 0
+        self._elapsed = 0.0
 
-        self._decode = jax.jit(
-            lambda params, tok, caches, lengths, pt: transformer.decode_step(
-                params, cfg, tok, caches, lengths, page_table=pt
-            )
-        )
-        self._prefill_p: Dict = {}
-        self._scatter_jit = jax.jit(self._scatter_tail)
-        self._copy_jit = jax.jit(self._copy_page)
-
-    # -- jitted cache plumbing ---------------------------------------------
-
-    @staticmethod
-    def _scatter_tail(caches, tail_caches, pids):
-        """Write prefilled tails' dense K/V into freshly allocated pages.
-
-        pids: (rows, bucket/ps) destinations, one row per admitted
-        sequence in the (possibly batched) prefill; entries past a tail's
-        real pages are the null page (their writes are garbage sinks by
-        design — with several rows the null page takes whichever write
-        lands last, all equally garbage).
-        """
-        flat = pids.reshape(-1)
-
-        def s(pages, dense, scanned):
-            if scanned:
-                npp, rows, hkv, bucket, hd = dense.shape
-                ps = pages.shape[3]
-                new = dense.reshape(npp, rows, hkv, bucket // ps, ps, hd)
-                new = new.transpose(0, 2, 1, 3, 4, 5).reshape(
-                    npp, hkv, rows * (bucket // ps), ps, hd
-                )
-                return pages.at[:, :, flat].set(new.astype(pages.dtype))
-            rows, hkv, bucket, hd = dense.shape
-            ps = pages.shape[2]
-            new = dense.reshape(rows, hkv, bucket // ps, ps, hd)
-            new = new.transpose(1, 0, 2, 3, 4).reshape(
-                hkv, rows * (bucket // ps), ps, hd
-            )
-            return pages.at[:, flat].set(new.astype(pages.dtype))
-
-        def layer(c, t, scanned):
-            return {"attn": {
-                "k_pages": s(c["attn"]["k_pages"], t["attn"]["k"], scanned),
-                "v_pages": s(c["attn"]["v_pages"], t["attn"]["v"], scanned),
-            }}
-
-        return {
-            "scanned": tuple(
-                layer(c, t, True)
-                for c, t in zip(caches["scanned"], tail_caches["scanned"])
-            ),
-            "rem": tuple(
-                layer(c, t, False)
-                for c, t in zip(caches["rem"], tail_caches["rem"])
-            ),
-        }
-
-    @staticmethod
-    def _copy_page(caches, src, dst):
-        """Physical page copy (copy-on-write), every layer at once."""
-
-        def cp(pages, scanned):
-            if scanned:
-                return pages.at[:, :, dst].set(pages[:, :, src])
-            return pages.at[:, dst].set(pages[:, src])
-
-        def layer(c, scanned):
-            return {"attn": {
-                "k_pages": cp(c["attn"]["k_pages"], scanned),
-                "v_pages": cp(c["attn"]["v_pages"], scanned),
-            }}
-
-        return {
-            "scanned": tuple(layer(c, True) for c in caches["scanned"]),
-            "rem": tuple(layer(c, False) for c in caches["rem"]),
-        }
-
-    # -- prefill -----------------------------------------------------------
-
-    @staticmethod
-    def _prefix_page_bucket(pages: int) -> int:
-        """Bucket a live prefix page count to the next power of two: the
-        page-table width is a jit constant, so bucketing bounds tail-
-        prefill compilations at O(log smax) under diverse prefix lengths
-        (the live length stays dynamic via ``prefix_len``)."""
-        if pages <= 0:
-            return 0
-        return 1 << (pages - 1).bit_length()
-
-    def _prefill_paged_fn(self, bucket: int, prefix_pages: int, rows: int = 1):
-        """Jitted tail prefill, keyed by (tail bucket, prefix-page bucket,
-        admitted rows) — ``rows > 1`` is the batched-admission launch: the
-        admitted sequences stack on the batch axis of one call.
-
-        The nonzero-prefix variant runs the **extend phase**: one
-        engine-resolved ``AttentionPlan`` per key drives the paged prefill
-        kernel, which reads prefix K/V straight from the page table — the
-        pool tensors ride in as arguments, never gathered to dense.
-        """
-        key = (bucket, prefix_pages, rows)
-        if key not in self._prefill_p:
-            cfg = self.cfg
-
-            if prefix_pages == 0:
-                def f(params, tokens, last_positions):
-                    return transformer.prefill(
-                        params, cfg, tokens, cache_len=bucket,
-                        last_positions=last_positions,
-                    )
-            else:
-                plan = plan_lib.plan_for_config(
-                    cfg,
-                    (rows, cfg.n_heads, cfg.n_kv_heads, bucket,
-                     prefix_pages * self.page_size + bucket, cfg.head_dim),
-                    phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
-                    page_size=self.page_size, prefix_pages=prefix_pages,
-                )
-
-                def f(params, tokens, last_positions, caches, page_table,
-                      prefix_len):
-                    return transformer.prefill(
-                        params, cfg, tokens, cache_len=bucket,
-                        last_positions=last_positions,
-                        prefix_caches=caches, page_table=page_table,
-                        prefix_len=prefix_len, plan=plan,
-                    )
-
-            self._prefill_p[key] = jax.jit(f)
-        return self._prefill_p[key]
-
-    # -- admission ---------------------------------------------------------
-
-    def _make_room(self, pages_needed: int) -> bool:
-        """Free pages until ``pages_needed`` fit: evict idle prefix-cache
-        pages first (pure capacity, nothing recomputes), then report
-        whether the caller should preempt."""
-        short = pages_needed - self.pool.free_pages
-        if short > 0 and len(self.prefix):
-            self.stats["prefix_evictions"] += self.prefix.evict(short)
-            short = pages_needed - self.pool.free_pages
-        return short <= 0
-
-    def _reserve(self, num_tokens: int, matched) -> Optional[SequencePages]:
-        """Page-table reservation for one admission attempt: pin the matched
-        prefix pages (lookup takes no references, and ``_make_room``'s
-        prefix eviction would otherwise be free to recycle exactly these
-        pages — they look idle until the sequence increfs them), make room,
-        allocate. Returns None when the pool cannot satisfy it."""
-        for p in matched:
-            self.pool.incref(p)
-        try:
-            need = self.pool.pages_needed(num_tokens) - len(matched)
-            if not self._make_room(need + self.reserve_pages):
-                return None
-            try:
-                return self.pool.allocate_sequence(
-                    num_tokens, shared_prefix=matched
-                )
-            except OutOfPages:
-                return None
-        finally:
-            for p in matched:
-                self.pool.decref(p)
-
-    def submit(self, req: Request, resume_tokens: Sequence = ()) -> bool:
-        """Admit a request if a decode row and its pages are available.
-
-        One-at-a-time entry point (kept for callers driving the engine by
-        hand): admit, then launch its prefill immediately. ``run`` instead
-        admits every ready request first and flushes the launches grouped
-        by jit key (:meth:`_launch_prefills`).
-        """
-        rec = self._admit(req, resume_tokens)
-        if rec is None:
-            return False
-        self._launch_prefills([rec])
-        return True
-
-    def _admit(self, req: Request, resume_tokens: Sequence = (),
-               pending_hashes=()):
-        """Reserve a decode row and pages for a request; no prefill yet.
-
-        Prefix-cache lookup happens first: shared full pages are reused
-        (prefilled once, by whoever computed them) and only the tail is
-        prefilled — through the paged prefill kernel, which reads the
-        prefix straight from its pages. Returns an admission record for
-        :meth:`_launch_prefills`; None when the pool/rows cannot hold the
-        request; or :data:`DEFERRED` when the request's next unmatched
-        prefix page is in ``pending_hashes`` (pages a record admitted
-        earlier in the *same* flush will publish) — admitting it now would
-        re-prefill a prefix that is one flush away from being shareable.
-        The row is claimed here (so subsequent admissions in the same
-        flush see it taken); the caller must flush before the next decode
-        step.
-
-        ``resume_tokens``: tokens a preempted run of this request already
-        generated. They are replayed through the same extend path (they are
-        just more prompt from the cache's point of view), so decode resumes
-        mid-stream instead of restarting from scratch.
-        """
-        free_rows = np.flatnonzero(~self.active)
-        if len(free_rows) == 0:
-            return None
-        tok = np.asarray(req.prompt)
-        if tok.ndim != 1:
-            raise ValueError("paged engine expects flat token prompts")
-        orig_n = len(tok)
-        if len(resume_tokens):
-            tok = np.concatenate(
-                [tok, np.asarray([int(t) for t in resume_tokens], tok.dtype)]
-            )
-        n = len(tok)
-        ps = self.page_size
-        total_pages = self.pool.pages_needed(n)
-        if total_pages > self.max_pages_per_seq:
-            raise ValueError(
-                f"prompt needs {total_pages} pages > "
-                f"max_pages_per_seq {self.max_pages_per_seq}"
-            )
-
-        if self.pool.pages_needed(orig_n + req.max_new_tokens) > self.max_pages_per_seq:
-            raise ValueError(
-                f"request {req.uid}: prompt {orig_n} + max_new_tokens "
-                f"{req.max_new_tokens} can outgrow max_pages_per_seq="
-                f"{self.max_pages_per_seq} ({self.cache_len} tokens) "
-                "mid-decode; reject at admission instead"
-            )
-
-        hashes = page_hashes(tok, ps) if self.prefix_sharing else []
-        # Reuse at most (n-1)//ps pages: at least one tail token must be
-        # prefilled here to produce the next-token logits.
-        matched = self.prefix.lookup(hashes[: (n - 1) // ps])
-        m0 = len(matched)
-        if pending_hashes and m0 < (n - 1) // ps and hashes[m0] in pending_hashes:
-            # The next page this prompt could share is being prefilled by a
-            # record already admitted this flush: wait one round and extend
-            # off the published pages instead of recomputing the prefix.
-            return DEFERRED
-
-        def fits_buckets(tail_len: int) -> bool:
-            return any(tail_len <= b for b in self.prompt_buckets)
-
-        # Validate the prefill bucket before touching the allocator (a late
-        # ValueError must not leak pages).
-        if not fits_buckets(n - len(matched) * ps):
-            if len(resume_tokens):
-                # A replay tail no bucket holds: drop replayed tokens until
-                # it fits (greedy decode regenerates them exactly). The
-                # prefix match for a truncated sequence is the full match
-                # capped at its page count, so the fit is computable without
-                # re-hashing; keep the longest replay that fits.
-                m_full = len(matched)
-                for keep in range(len(resume_tokens) - 1, -1, -1):
-                    nk = orig_n + keep
-                    mk = min(m_full, (nk - 1) // ps)
-                    if fits_buckets(nk - mk * ps):
-                        return self._admit(
-                            req, list(resume_tokens)[:keep], pending_hashes
-                        )
-                # Not even the bare prompt fits (its prefix pages were
-                # evicted since first admission): fall through to the
-                # admission error below.
-            raise ValueError(
-                f"prompt tail {n - len(matched) * ps} exceeds buckets "
-                f"{self.prompt_buckets}"
-            )
-        seq = self._reserve(n, matched)
-        if seq is None and matched and fits_buckets(n):
-            # Reuse blocked admission (the pinned prefix pages were the only
-            # evictable capacity): fall back to prefilling from scratch so a
-            # servable request is never starved by its own cached prefix.
-            # Prompts only servable *through* reuse stay queued instead
-            # (pages free up as sequences finish).
-            matched = []
-            seq = self._reserve(n, matched)
-        if seq is None:
-            return None
-        m = len(matched)
-        tail = tok[m * ps :]
-        bucket = self._bucket_for(len(tail))
-        self.stats["pages_reused"] += m
-        self.stats["prompt_pages"] += total_pages
-
-        # Claim the decode row now — pages and row are spoken for; the
-        # prefill itself runs at flush time (_launch_prefills).
-        row = int(free_rows[0])
-        self.seqs[row] = _SeqState(
-            req=req, pages=seq, submit_order=self._submit_counter
-        )
-        self._submit_counter += 1
-        self.page_table[row] = NULL_PAGE
-        self.page_table[row, : len(seq.pages)] = seq.pages
-        self.lengths[row] = n
-        self.active[row] = True
-        self.slot_out[row] = list(resume_tokens)
-        self.stats["resumed_tokens"] += len(resume_tokens)
-        return {
-            "req": req, "row": row, "seq": seq, "matched": matched,
-            "tail": tail, "bucket": bucket, "n": n, "hashes": hashes,
-            "mb": self._prefix_page_bucket(m) if m else 0,
-        }
-
-    def _launch_prefills(self, records) -> None:
-        """Flush admitted records: one tail-prefill launch per shared
-        (tail-bucket, prefix-page-bucket) jit key, admitted rows stacked on
-        the batch axis — the paged prefill kernel takes per-row
-        ``prefix_len`` / ``tail_len``, so rows with different live lengths
-        share a launch. Rows are independent (per-row page tables, per-row
-        online softmax), so outputs are bit-exact vs one launch per
-        request. Prefix pages publish after each group's scatter: a record
-        never reads pages whose contents this same flush still owes.
-        """
-        ps = self.page_size
-        groups: Dict[Tuple[int, int], list] = {}
-        for rec in records:
-            groups.setdefault((rec["bucket"], rec["mb"]), []).append(rec)
-        for (bucket, mb), grp in groups.items():
-            rows = len(grp)
-            padded = np.stack(
-                [np.pad(r["tail"], (0, bucket - len(r["tail"]))) for r in grp]
-            )
-            last = jnp.asarray(
-                [len(r["tail"]) - 1 for r in grp], jnp.int32
-            )
-            self.stats["prefill_launches"] += 1
-            self.stats["batched_prefills"] += rows > 1
-            if mb == 0:
-                logits, tail_caches = self._prefill_paged_fn(bucket, 0, rows)(
-                    self.params, jnp.asarray(padded), last
-                )
-            else:
-                # Extend phase: each page-table row is padded to the
-                # power-of-two page bucket with null pages (the kernel
-                # masks them via the dynamic prefix_len), so every prefix
-                # length in a bucket shares one compilation — and the pool
-                # is consumed in place, no gather.
-                pt = np.full((rows, mb), NULL_PAGE, np.int32)
-                for i, r in enumerate(grp):
-                    pt[i, : len(r["matched"])] = r["matched"]
-                plens = jnp.asarray(
-                    [len(r["matched"]) * ps for r in grp], jnp.int32
-                )
-                self.stats["extend_prefills"] += rows
-                logits, tail_caches = self._prefill_paged_fn(bucket, mb, rows)(
-                    self.params, jnp.asarray(padded), last, self.caches,
-                    jnp.asarray(pt), plens,
-                )
-            # Scatter every row's tail K/V into its fresh pages (buckets
-            # are page-aligned; destinations beyond a tail's real pages
-            # sink into the null page).
-            pids = np.full((rows, bucket // ps), NULL_PAGE, np.int32)
-            for i, r in enumerate(grp):
-                tail_pages = r["seq"].pages[len(r["matched"]):]
-                pids[i, : len(tail_pages)] = tail_pages
-            self.caches = self._scatter_jit(
-                self.caches, tail_caches, jnp.asarray(pids)
-            )
-            logits_np = np.asarray(logits)
-            for i, r in enumerate(grp):
-                # Publish this prompt's full pages for later requests.
-                if self.prefix_sharing:
-                    nfull = r["n"] // ps
-                    self.prefix.insert(
-                        r["hashes"][:nfull], r["seq"].pages[:nfull]
-                    )
-                self._pending_first[r["row"]] = self._sample_host(
-                    logits_np[i], r["req"]
-                )
-
-    # -- preemption / decode ----------------------------------------------
-
-    def _preempt_one(self, protect: int) -> bool:
-        """Evict the weakest active sequence (lowest priority, then newest)
-        and requeue it with its generated-so-far tokens (replayed through
-        the extend path on re-admission); never the row ``protect``."""
-        victims = [
-            (s.req.priority, -s.submit_order, row)
-            for row, s in enumerate(self.seqs)
-            if s is not None and self.active[row] and row != protect
-        ]
-        if not victims:
-            return False
-        _, _, row = min(victims)
-        state = self.seqs[row]
-        self.stats["preemptions"] += 1
-        self.pool.release(state.pages)
-        self._requeue.appendleft((state.req, list(self.slot_out[row])))
-        self.active[row] = False
-        self.seqs[row] = None
-        self.page_table[row] = NULL_PAGE
-        self.lengths[row] = 0
-        self._pending_first.pop(row, None)
-        self.slot_out[row] = []
-        return True
-
-    def _append_token_slot(self, row: int) -> None:
-        """Reserve the next token's slot in row's page table, preempting
-        others if the pool is exhausted mid-decode."""
-        state = self.seqs[row]
-        while True:
-            try:
-                _, _, cow = self.pool.append_token(state.pages)
-                break
-            except OutOfPages:
-                if not (self._make_room(1) or self._preempt_one(row)):
-                    raise OutOfPages(
-                        "pool exhausted and nothing left to preempt"
-                    )
-        if cow is not None:
-            src, dst = cow
-            self.stats["cow_copies"] += 1
-            # Traced page ids: one jitted copy program serves every pair.
-            self.caches = self._copy_jit(
-                self.caches, jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)
-            )
-        if state.pages.num_pages() > self.max_pages_per_seq:
-            raise ValueError(
-                f"sequence {state.req.uid} outgrew max_pages_per_seq="
-                f"{self.max_pages_per_seq}; cap prompt+max_new_tokens at "
-                f"{self.cache_len} tokens"
-            )
-        self.page_table[row] = NULL_PAGE
-        self.page_table[row, : len(state.pages.pages)] = state.pages.pages
-
-    def step(self):
-        """One decode tick for all active rows."""
-        if not self.active.any():
-            return
-        tok = np.zeros((self.max_batch,), np.int32)
-        for row in range(self.max_batch):
-            if not self.active[row]:
-                continue
-            if row in self._pending_first:
-                nxt = self._pending_first.pop(row)
-            else:
-                nxt = self.slot_out[row][-1]
-            tok[row] = nxt
-            self._append_token_slot(row)
-        self.lengths = self.lengths + self.active.astype(np.int32)
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(tok), self.caches,
-            jnp.asarray(self.lengths), jnp.asarray(self.page_table),
-        )
-        self._advance_rows(tok, np.asarray(logits))
-
-    def _row_request(self, row: int) -> Request:
-        return self.seqs[row].req
-
-    def _finish(self, row: int, req: Request):
-        state = self.seqs[row]
-        self.results.append(
-            Result(uid=req.uid, tokens=list(self.slot_out[row]),
-                   prompt_len=len(req.prompt))
-        )
-        # Pages the prefix cache references survive; the rest free now.
-        self.pool.release(state.pages)
-        self.active[row] = False
-        self.seqs[row] = None
-        self.page_table[row] = NULL_PAGE
-        self.lengths[row] = 0
-
-    def run(self, requests: List[Request]) -> List[Result]:
-        """Drive until every request (including preempted ones) completes.
-
-        With ``batch_admissions`` (the default) each scheduling round
-        admits every ready request first (rows and pages reserved, in
-        arrival order) and then flushes the tail prefills grouped by jit
-        key — one launch per (tail-bucket, prefix-page-bucket) instead of
-        one per request. ``batch_admissions=False`` keeps the legacy
-        submit-one-launch-one loop (the bit-exactness oracle in tests)."""
-        queue = deque(requests)
-        while queue or self._requeue or self.active.any():
-            if self.batch_admissions:
-                records = []
-                # Pages this flush will publish: a later request matching
-                # one defers a round (DEFERRED) and extends off it instead
-                # of re-prefilling the shared prefix.
-                pending = set()
-
-                def take(rec):
-                    records.append(rec)
-                    pending.update(rec["hashes"][: rec["n"] // self.page_size])
-
-                try:
-                    while self._requeue:
-                        rec = self._admit(
-                            self._requeue[0][0],
-                            resume_tokens=self._requeue[0][1],
-                            pending_hashes=pending,
-                        )
-                        if rec is None or rec is DEFERRED:
-                            break
-                        self._requeue.popleft()
-                        take(rec)
-                    if not self._requeue:
-                        while queue:
-                            rec = self._admit(queue[0], pending_hashes=pending)
-                            if rec is None or rec is DEFERRED:
-                                break
-                            queue.popleft()
-                            take(rec)
-                finally:
-                    # Flush even when a later _admit raises (oversized
-                    # prompt, bucket overflow): rows admitted this round
-                    # are already claimed and must not reach a decode step
-                    # — or a caller that catches the error — unprefilled.
-                    if records:
-                        self._launch_prefills(records)
-            else:
-                while self._requeue and self.submit(
-                    self._requeue[0][0], resume_tokens=self._requeue[0][1]
-                ):
-                    self._requeue.popleft()
-                if not self._requeue:
-                    while queue and self.submit(queue[0]):
-                        queue.popleft()
-            if not self.active.any():
-                if queue or self._requeue:
-                    raise OutOfPages(
-                        "pool too small for any queued request; grow "
-                        "num_pages or shrink prompts"
-                    )
-                break
-            self.step()
-        return self.results
-
-    # -- introspection -----------------------------------------------------
-
-    @property
-    def mapping(self):
-        """Resolved decode-shape schedule (decode & window are part of the
-        plan key, so this differs from the prefill resolution)."""
-        return plan_lib.plan_for_config(
-            self.cfg,
-            (self.max_batch, self.cfg.n_heads, self.cfg.n_kv_heads,
-             1, self.cache_len, self.cfg.head_dim),
-            phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED,
-            page_size=self.page_size,
-        ).mapping
+    # -- public surface ----------------------------------------------------
 
     @property
     def kv_layout(self) -> str:
-        """What the analytic model would pick for this engine's steady
-        state (paged head-aligned vs interleaved vs dense stripes)."""
-        live = self.lengths[self.active]
-        mean_len = int(live.mean()) if live.size else self.cache_len // 2
-        return plan_lib.resolve_kv_layout(
-            (self.max_batch, self.cfg.n_heads, self.cfg.n_kv_heads,
-             max(mean_len, 1), self.cfg.head_dim),
-            capacity=self.cache_len,
-            page_size=self.page_size,
-            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
+        return self.backend.kv_layout
+
+    @property
+    def mapping(self):
+        """The plan-resolved kernel schedule for the backend's steady
+        state (a pinned paper schedule passes through unchanged)."""
+        return self.backend.mapping
+
+    def add_request(
+        self,
+        request=None,
+        *,
+        prompt=None,
+        sampling: Optional[SamplingParams] = None,
+        uid: Optional[int] = None,
+        priority: Optional[int] = None,
+    ) -> int:
+        """Queue one request; returns its uid. Pass a :class:`Request` or
+        a raw ``prompt`` (+ optional ``sampling`` / ``priority``).
+        Requests that can never be served (outgrow the cache; overflow
+        every prefill bucket with prefix sharing off) are rejected
+        *here*, not mid-decode."""
+        if request is None:
+            if prompt is None:
+                raise ValueError("pass a Request or a prompt")
+            if uid is None:
+                uid = self._next_uid
+            request = Request(uid, prompt, sampling,
+                              0 if priority is None else priority)
+        elif (prompt is not None or sampling is not None or uid is not None
+              or priority is not None):
+            raise ValueError("pass either a Request or prompt/... keywords")
+        self._next_uid = max(self._next_uid, request.uid + 1)
+        self.backend.validate(request)
+        self.scheduler.add(request)
+        return request.uid
+
+    def step(self) -> List[RequestOutput]:
+        """One serving tick: admit + flush prefills, then one fused decode
+        over every active row, sampled on device with per-request params.
+        Returns the streamed increments — one :class:`RequestOutput` per
+        request that gained tokens or finished this tick."""
+        t0 = time.perf_counter()
+        records: List = []
+        try:
+            self.scheduler.schedule(self.backend, records)
+        finally:
+            # Flush even when a late admission raises (oversized prompt,
+            # bucket overflow): rows admitted this round are already
+            # claimed and must not reach a decode tick — or a caller that
+            # catches the error — unprefilled.
+            if records:
+                self._flush(records)
+        outputs: List[RequestOutput] = []
+        if self.backend.active.any():
+            outputs = self._decode_tick()
+        self._elapsed += time.perf_counter() - t0
+        return outputs
+
+    def generate(self, requests: Iterable = ()) -> List[RequestOutput]:
+        """Blocking convenience: queue ``requests``, drive :meth:`step`
+        until every queued request (including preempted ones) finishes,
+        and return their final outputs in completion order. If a queued
+        request can never be admitted, raises ``OutOfPages`` with the
+        outputs that *did* finish this call on its ``completed``
+        attribute (they also remain in the engine's history)."""
+        for r in requests:
+            self.add_request(r)
+        done: List[RequestOutput] = []
+        while self.backend.active.any() or self.scheduler.has_work():
+            idle_before = not self.backend.active.any()
+            outs = self.step()
+            done.extend(o for o in outs if o.finished)
+            if idle_before and not outs and not self.backend.active.any():
+                # The scheduler saw an empty engine and still admitted
+                # nothing: no queued request can ever fit.
+                err = OutOfPages(
+                    "pool too small for any queued request; grow "
+                    "num_pages or shrink prompts"
+                )
+                err.completed = done  # don't lose finished work
+                raise err
+        return done
+
+    def stats(self) -> SchedulerStats:
+        b = self.backend
+        prefix = b.prefix_stats() if hasattr(b, "prefix_stats") else {}
+        nb = max(b.num_active, 1)
+        t = b.decode_time_model(nb)
+        return SchedulerStats(
+            kv_layout=b.kv_layout,
+            running=b.num_active,
+            waiting=self.scheduler.num_waiting,
+            completed=len(self._completed),
+            tokens_generated=self._tokens_generated,
+            elapsed_s=self._elapsed,
+            tokens_per_s=(
+                self._tokens_generated / self._elapsed if self._elapsed else 0.0
+            ),
+            prefix_hit_rate=prefix.get("prefix_hit_rate", 0.0),
+            page_occupancy=b.page_occupancy,
+            preemptions=b.stats["preemptions"],
+            resumed_tokens=b.stats["resumed_tokens"],
+            prefill_launches=b.stats["prefill_launches"],
+            batched_prefills=b.stats["batched_prefills"],
+            occupancy_cap=self.scheduler.occupancy_cap(b),
+            modeled_tok_s=nb / t if t > 0 else 0.0,
         )
 
-    def prefix_stats(self) -> Dict[str, float]:
-        reused = self.stats["pages_reused"]
-        total = self.stats["prompt_pages"]
-        return {
-            "prefix_entries": float(len(self.prefix)),
-            "pages_reused": float(reused),
-            "prompt_pages": float(total),
-            "prefix_hit_rate": reused / total if total else 0.0,
-            "preemptions": float(self.stats["preemptions"]),
-            "resumed_tokens": float(self.stats["resumed_tokens"]),
-            "extend_prefills": float(self.stats["extend_prefills"]),
-            "prefill_launches": float(self.stats["prefill_launches"]),
-            "batched_prefills": float(self.stats["batched_prefills"]),
-            "cow_copies": float(self.stats["cow_copies"]),
-            "free_pages": float(self.pool.free_pages),
-        }
+    # -- internals ---------------------------------------------------------
+
+    def _on_preempt(self, row: int, req, generated: List) -> None:
+        self._pending.pop(row, None)
+        self.scheduler.requeue(req, generated)
+
+    def _seed_for(self, req) -> int:
+        seed = req.sampling.seed
+        return (req.uid if seed is None else seed) & 0x7FFFFFFF
+
+    def _sampling_arrays(self, size, slots_rows):
+        """``(size,)``-shaped per-slot sampling-param arrays for one
+        device call. ``slots_rows``: (array slot, backend row) pairs —
+        slots may be sparse (inactive rows keep inert defaults); the
+        stream position is the row's generated-token count at call
+        time."""
+        temps = np.zeros((size,), np.float32)
+        top_k = np.zeros((size,), np.int32)
+        top_p = np.ones((size,), np.float32)
+        seeds = np.zeros((size,), np.int32)
+        pos = np.zeros((size,), np.int32)
+        for slot, row in slots_rows:
+            req = self.backend.row_req(row)
+            sp = req.sampling
+            temps[slot], top_k[slot], top_p[slot] = (
+                sp.temperature, sp.top_k, sp.top_p
+            )
+            seeds[slot] = self._seed_for(req)
+            pos[slot] = len(self.backend.out[row])
+        return temps, top_k, top_p, seeds, pos
+
+    def _flush(self, records: List) -> None:
+        """Run the admitted prefills and sample each row's first token on
+        device (stream position = tokens generated so far, so a resumed
+        request continues its sample stream exactly)."""
+        first = self.backend.flush(records)
+        rows = sorted(first)
+        if not rows:
+            return
+        logits = np.stack([first[r] for r in rows])
+        params = self._sampling_arrays(len(rows), list(enumerate(rows)))
+        toks = np.asarray(sampling_lib.sample_tokens(logits, *params))
+        for i, r in enumerate(rows):
+            self._pending[r] = toks[i]
+
+    def _decode_tick(self) -> List[RequestOutput]:
+        b = self.backend
+        shape = (b.rows,) if self.cfg.num_codebooks == 1 else (
+            b.rows, self.cfg.num_codebooks)
+        tok = np.zeros(shape, np.int32)
+        for row in range(b.rows):
+            if not b.active[row]:
+                continue
+            if row in self._pending:
+                nxt = self._pending.pop(row)
+            else:
+                nxt = b.out[row][-1]
+            tok[row] = nxt
+            # May preempt *other* rows under page pressure; a preempted
+            # row's token writes into the null page and is ignored below.
+            b.prepare_row(row)
+        logits = b.decode(tok)
+        return self._advance(tok, logits)
+
+    def _advance(self, tok, logits) -> List[RequestOutput]:
+        """Post-decode bookkeeping: append the token just decoded, sample
+        every row's next token in one device call, terminate on stop
+        tokens / max_tokens, and emit the streamed increments."""
+        b = self.backend
+        rows = [r for r in range(b.rows) if b.active[r]]
+        for r in rows:
+            b.out[r].append(tok[r].copy())
+            self._tokens_generated += 1
+        params = self._sampling_arrays(b.rows, [(r, r) for r in rows])
+        nxt_all = np.asarray(sampling_lib.sample_tokens(logits, *params))
+        outputs: List[RequestOutput] = []
+        for r in rows:
+            req = b.row_req(r)
+            sp = req.sampling
+            nxt = nxt_all[r]
+            # The token just appended was sampled either from prefill
+            # logits (never stop-checked yet) or as a previous tick's nxt
+            # (which passed the check below) — so this catches exactly the
+            # first-generated-token-is-a-stop-token case.
+            stop_on_fed = (sp.stop_token_ids and np.ndim(tok[r]) == 0
+                           and int(tok[r]) in sp.stop_token_ids)
+            done = stop_on_fed or len(b.out[r]) >= sp.max_tokens
+            if stop_on_fed:
+                reason = FINISH_STOP
+            else:
+                reason = FINISH_LENGTH if done else None
+            if (not done and sp.stop_token_ids and np.ndim(nxt) == 0
+                    and int(nxt) in sp.stop_token_ids):
+                done = True
+                reason = FINISH_STOP
+                b.out[r].append(np.asarray(nxt))  # include the stop token
+                self._tokens_generated += 1
+            if done:
+                outputs.append(self._finish(r, req, reason))
+            else:
+                self._pending[r] = nxt
+                delta = self._delta(req.uid, b.out[r])
+                if delta:
+                    outputs.append(RequestOutput(
+                        uid=req.uid, prompt_len=len(req.prompt),
+                        new_tokens=delta, tokens=list(b.out[r]),
+                    ))
+        return outputs
+
+    def _delta(self, uid: int, out: List) -> List:
+        """Tokens not yet streamed for ``uid`` (replayed resume tokens
+        were already emitted before the preemption — never re-streamed)."""
+        emitted = self._streamed.get(uid, 0)
+        if len(out) <= emitted:
+            return []
+        self._streamed[uid] = len(out)
+        return list(out[emitted:])
+
+    def _finish(self, row: int, req, reason: str) -> RequestOutput:
+        toks = list(self.backend.out[row])
+        delta = self._delta(req.uid, toks)
+        self._streamed.pop(req.uid, None)
+        self._pending.pop(row, None)
+        self.backend.release(row)
+        out = RequestOutput(
+            uid=req.uid, prompt_len=len(req.prompt), new_tokens=delta,
+            tokens=toks, finished=True, finish_reason=reason,
+        )
+        self._completed.append(out)
+        return out
+
+
+# -----------------------------------------------------------------------------
+# Deprecated shims (kept importable; construction outside repro.serving is
+# grep-enforced away in tests/test_serving.py)
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Result:
+    """Legacy blocking-run result (pre-PR-5); prefer RequestOutput."""
+
+    uid: int
+    tokens: List
+    prompt_len: int
+
+
+class _EngineShim:
+    """Thin adapter: legacy constructor surface -> ``LLMEngine``.
+
+    ``rng_seed`` is accepted and ignored — sampling is now on-device and
+    keyed per request (``SamplingParams.seed``), not by a shared host RNG.
+    Unknown attributes delegate to the facade's backend (``pool``,
+    ``prefix``, ``stats``, ``_prefill_p``, ...), then the facade.
+    """
+
+    def __init__(self, engine: LLMEngine):
+        self._engine = engine
+        self.results: List[Result] = []
+        self._synced = 0
+
+    def _sync_results(self) -> None:
+        """Mirror the facade's completion history into the legacy
+        ``results`` list — kept current by both run() and step(), so
+        hand-driven submit()+step() loops see their finishes too."""
+        done = self._engine._completed
+        for o in done[self._synced:]:
+            self.results.append(
+                Result(uid=o.uid, tokens=list(o.tokens),
+                       prompt_len=o.prompt_len)
+            )
+        self._synced = len(done)
+
+    def run(self, requests) -> List[Result]:
+        try:
+            self._engine.generate(requests)
+        finally:
+            self._sync_results()
+        return self.results
+
+    def submit(self, req, resume_tokens=()) -> bool:
+        """Legacy one-at-a-time admission: admit + flush immediately."""
+        rec = self._engine.backend.try_admit(req, resume_tokens=resume_tokens)
+        if rec is None or rec is DEFERRED:
+            return False
+        self._engine._flush([rec])
+        return True
+
+    def step(self) -> None:
+        self._engine.step()
+        self._sync_results()
+
+    @property
+    def mapping(self):
+        return self._engine.mapping
+
+    def __getattr__(self, name):
+        engine = self.__dict__["_engine"]
+        try:
+            return getattr(engine.backend, name)
+        except AttributeError:
+            return getattr(engine, name)
+
+
+class ServingEngine(_EngineShim):
+    """DEPRECATED: use ``LLMEngine(cfg, params, kv_layout="dense")``."""
+
+    def __init__(self, cfg, params, *, num_slots=8, cache_len=2048,
+                 prompt_buckets=(128, 512, 2048), rng_seed=0, mapping=None):
+        warnings.warn(
+            "ServingEngine is deprecated; use LLMEngine(kv_layout='dense')",
+            DeprecationWarning, stacklevel=2,
+        )
+        super().__init__(LLMEngine(
+            cfg, params, kv_layout="dense", max_batch=num_slots,
+            cache_len=cache_len, prompt_buckets=prompt_buckets,
+            mapping=mapping,
+        ))
+
+
+class PagedServingEngine(_EngineShim):
+    """DEPRECATED: use ``LLMEngine(cfg, params, kv_layout="paged")``."""
+
+    def __init__(self, cfg, params, *, num_pages=128, page_size=16,
+                 max_batch=8, max_pages_per_seq=16,
+                 prompt_buckets=(32, 64, 128), rng_seed=0, mapping=None,
+                 prefix_sharing=True, reserve_pages=1, batch_admissions=True):
+        warnings.warn(
+            "PagedServingEngine is deprecated; use "
+            "LLMEngine(kv_layout='paged')",
+            DeprecationWarning, stacklevel=2,
+        )
+        super().__init__(LLMEngine(
+            cfg, params, kv_layout="paged", max_batch=max_batch,
+            num_pages=num_pages, page_size=page_size,
+            max_pages_per_seq=max_pages_per_seq,
+            prompt_buckets=prompt_buckets, prefix_sharing=prefix_sharing,
+            reserve_pages=reserve_pages, batch_prefills=batch_admissions,
+            mapping=mapping,
+        ))

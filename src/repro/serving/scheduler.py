@@ -1,0 +1,257 @@
+"""Serving scheduler: admission, fairness, and preemption *policy*.
+
+Everything the pre-PR-5 engines decided inline — who enters the batch,
+in what order, who gets evicted under page pressure — lives here, behind
+a backend-agnostic protocol, so the dense and paged execution backends
+are pure mechanism:
+
+  * **Admission** walks the ready queue in (effective-priority, arrival)
+    order with head-of-line blocking: the first request the backend
+    cannot hold ends the round (skipping it forever would starve large
+    requests). Preempted requests re-enter first — their pages were taken
+    from them, they do not re-queue behind new arrivals.
+  * **Fairness** is priority + FCFS with aging: a request's effective
+    priority grows by one per ``aging_rounds`` scheduling rounds it waits,
+    so any fixed-priority stream is eventually outranked — no starvation
+    (property-tested in ``tests/test_scheduler.py``).
+  * **Page budget / prefix-match scoring**: before touching the backend's
+    allocator, the scheduler prices the request — pages needed minus
+    prefix-cache matches (``backend.quote``) plus decode headroom — and
+    declines it when the budget cannot fit free + evictable capacity.
+    The backend's ``try_admit`` stays authoritative (it may still return
+    None), but the *decision* is policy, not mechanism.
+  * **NUMA/occupancy awareness**: growing the decode batch only helps
+    until the (batch x kv-head) grid covers the topology's NUMA domains
+    with full waves; past that point the analytic decode model
+    (``core.perf_model.estimate_dense_decode`` / ``estimate_paged_decode``
+    via ``backend.decode_time_model``) shows marginal tokens/s gains
+    collapsing. The scheduler computes the smallest batch whose modeled
+    aggregate throughput stops improving and refuses to admit beyond it
+    (``occupancy_cap``) — admission is throughput-aware, not just
+    capacity-aware. The model is injectable for tests.
+  * **Preemption policy**: ``choose_victim`` picks the lowest-priority,
+    newest active row — the backend only executes the eviction.
+
+``SchedulerStats`` is the observable summary ``LLMEngine.step`` keeps
+up to date: tokens/s, prefix hit rate, preemptions, page occupancy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional, Sequence, Tuple
+
+#: Admission verdict distinct from "does not fit": the request's prefix
+#: matches pages the *current* flush is about to publish — admit it next
+#: round (as an extend) instead of prefilling the shared prefix twice.
+DEFERRED = object()
+
+
+def default_choose_victim(candidates: Sequence[Tuple[int, int, int]],
+                          protect: int = -1) -> Optional[int]:
+    """The preemption rule, shared by the scheduler and standalone
+    backends: among active ``(priority, submit_order, row)`` rows, evict
+    the lowest priority, newest among ties; never ``protect`` (the row
+    whose decode triggered the pressure)."""
+    pool = [
+        (prio, -order, row)
+        for prio, order, row in candidates
+        if row != protect
+    ]
+    if not pool:
+        return None
+    return min(pool)[2]
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Serving counters surfaced by ``LLMEngine.stats()`` / ``step()``."""
+
+    kv_layout: str = "dense"
+    running: int = 0
+    waiting: int = 0
+    completed: int = 0
+    tokens_generated: int = 0
+    elapsed_s: float = 0.0
+    tokens_per_s: float = 0.0
+    prefix_hit_rate: float = 0.0
+    page_occupancy: float = 0.0    # used / total pages (dense: used slots)
+    preemptions: int = 0
+    resumed_tokens: int = 0
+    prefill_launches: int = 0
+    batched_prefills: int = 0
+    occupancy_cap: int = 0         # scheduler's modeled max useful batch
+    modeled_tok_s: float = 0.0     # perf_model tokens/s at current batch
+
+    def summary(self) -> str:
+        return (
+            f"[{self.kv_layout}] {self.completed} done / {self.running} "
+            f"running / {self.waiting} waiting | "
+            f"{self.tokens_generated} tokens in {self.elapsed_s:.2f}s "
+            f"({self.tokens_per_s:.1f} tok/s, modeled "
+            f"{self.modeled_tok_s:.0f}) | prefix hit "
+            f"{self.prefix_hit_rate:.2f} | occupancy "
+            f"{self.page_occupancy:.2f} (cap {self.occupancy_cap}) | "
+            f"{self.preemptions} preemptions "
+            f"({self.resumed_tokens} tokens resumed) | "
+            f"{self.prefill_launches} prefill launches "
+            f"({self.batched_prefills} batched)"
+        )
+
+
+@dataclasses.dataclass
+class _Waiting:
+    req: object
+    arrival: int
+    rounds_waited: int = 0
+
+
+class Scheduler:
+    """Admission / fairness / preemption policy over an execution backend.
+
+    The backend protocol (``serving.backends`` implements it; tests drive
+    fakes): ``rows``, ``num_active``, ``try_admit(req, resume_tokens,
+    pending_hashes) -> record | None | DEFERRED``, optional ``quote(req)
+    -> (total_pages, matched_pages)`` + ``free_pages`` / ``evictable_pages``
+    / ``reserve_pages`` for the page budget, optional
+    ``decode_time_model(batch) -> seconds`` for the occupancy cap.
+    """
+
+    def __init__(self, *, aging_rounds: int = 4, decode_time_model=None):
+        if aging_rounds < 1:
+            raise ValueError("aging_rounds must be >= 1")
+        self.aging_rounds = aging_rounds
+        self._decode_time_model = decode_time_model
+        self._waiting: List[_Waiting] = []
+        self._requeue: "deque[Tuple[object, List]]" = deque()
+        self._arrival = 0
+        self._occupancy_cap: Optional[int] = None
+
+    # -- queue state -------------------------------------------------------
+
+    def add(self, req) -> None:
+        self._waiting.append(_Waiting(req, self._arrival))
+        self._arrival += 1
+
+    def requeue(self, req, generated: Sequence) -> None:
+        """Re-enter a preempted request at the front (its generated tokens
+        replay through the extend path on re-admission)."""
+        self._requeue.appendleft((req, list(generated)))
+
+    @property
+    def num_waiting(self) -> int:
+        return len(self._waiting) + len(self._requeue)
+
+    def has_work(self) -> bool:
+        return bool(self._waiting or self._requeue)
+
+    # -- policy ------------------------------------------------------------
+
+    def _effective_priority(self, w: _Waiting) -> int:
+        return w.req.priority + w.rounds_waited // self.aging_rounds
+
+    def _ranked(self) -> List[_Waiting]:
+        return sorted(
+            self._waiting,
+            key=lambda w: (-self._effective_priority(w), w.arrival),
+        )
+
+    def page_budget_ok(self, backend, req) -> bool:
+        """Price an admission before touching the allocator: fresh pages
+        (prefix-cache matches deducted) plus decode headroom must fit the
+        backend's free + evictable capacity. Backends without a page pool
+        (dense slots) always pass — their row check is in try_admit."""
+        quote = getattr(backend, "quote", None)
+        if quote is None:
+            return True
+        total, matched = quote(req)
+        fresh = total - matched
+        budget = backend.free_pages + backend.evictable_pages
+        return fresh + getattr(backend, "reserve_pages", 0) <= budget
+
+    def occupancy_cap(self, backend) -> int:
+        """Largest decode batch before modeled aggregate tokens/s starts
+        *declining* — the NUMA-occupancy point past which another row
+        costs more (tail-domain contention, combine overhead) than its
+        token is worth. A bandwidth-bound linear model (time ~ batch)
+        keeps tokens/s flat, so the cap stays at ``backend.rows`` — the
+        gate only binds when the model says occupancy actually hurts.
+        Computed once from ``backend.decode_time_model``
+        (``core.perf_model``'s dense/paged decode estimates); backends
+        without a model fall back to their row count."""
+        if self._occupancy_cap is not None:
+            return self._occupancy_cap
+        model = self._decode_time_model or getattr(
+            backend, "decode_time_model", None
+        )
+        cap = backend.rows
+        if model is not None:
+            best = 0.0
+            for b in range(1, backend.rows + 1):
+                t = model(b)
+                tok_s = b / t if t > 0 else float("inf")
+                if tok_s < best * (1.0 - 1e-9):
+                    cap = b - 1
+                    break
+                best = max(best, tok_s)
+        self._occupancy_cap = max(cap, 1)
+        return self._occupancy_cap
+
+    def _admission_ok(self, backend, req) -> bool:
+        if backend.num_active >= self.occupancy_cap(backend):
+            return False
+        return self.page_budget_ok(backend, req)
+
+    def schedule(self, backend, records: List) -> List:
+        """One admission round: drain preempted work first, then the ready
+        queue in (effective-priority, arrival) order, head-of-line
+        blocking, stopping at the occupancy cap. Admission *records* are
+        appended to ``records`` (caller-owned so a mid-round backend error
+        still leaves the already-claimed rows visible for flushing) and
+        must be flushed by the caller before the next decode tick."""
+        pending = set()
+
+        def take(rec):
+            records.append(rec)
+            pending.update(rec.get("pending_publish", ()))
+
+        while self._requeue:
+            req, toks = self._requeue[0]
+            if not self._admission_ok(backend, req):
+                break
+            try:
+                rec = backend.try_admit(
+                    req, resume_tokens=toks, pending_hashes=pending
+                )
+            except ValueError:
+                # Poison request: eject it so one bad entry cannot wedge
+                # the queue head forever, then surface the error.
+                self._requeue.popleft()
+                raise
+            if rec is None or rec is DEFERRED:
+                break
+            self._requeue.popleft()
+            take(rec)
+        if not self._requeue:
+            for w in self._ranked():
+                if not self._admission_ok(backend, w.req):
+                    break
+                try:
+                    rec = backend.try_admit(w.req, pending_hashes=pending)
+                except ValueError:
+                    self._waiting.remove(w)
+                    raise
+                if rec is None or rec is DEFERRED:
+                    break
+                self._waiting.remove(w)
+                take(rec)
+        for w in self._waiting:
+            w.rounds_waited += 1
+        return records
+
+    def choose_victim(
+        self, candidates: Sequence[Tuple[int, int, int]], protect: int = -1
+    ) -> Optional[int]:
+        """Preemption policy (see :func:`default_choose_victim`)."""
+        return default_choose_victim(candidates, protect)

@@ -303,6 +303,14 @@ def test_no_out_of_band_schedule_threading():
             "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
             "MappingConfig",
         ),
+        "serving/backends.py": (
+            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
+            "MappingConfig",
+        ),
+        "serving/scheduler.py": (
+            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
+            "MappingConfig",
+        ),
         # ops dispatches plans; the scoring bodies must live in plan.py.
         "kernels/ops.py": (
             "_resolve_mapping_cached", "_resolve_kv_layout_cached",
@@ -319,29 +327,28 @@ def test_no_out_of_band_schedule_threading():
 
 
 def test_engine_resolves_schedules_through_plans():
-    """Both engines' advertised mapping comes from the plan layer and
-    honors a pinned override."""
-    import numpy as np
-
+    """Both facade backends' advertised mapping comes from the plan layer
+    and honors a pinned override."""
     from repro.models import transformer
-    from repro.serving.engine import PagedServingEngine, ServingEngine
+    from repro.serving import LLMEngine
 
     cfg = registry.get_smoke_config("llama3-8b")
     params = transformer.init_model(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(cfg, params, num_slots=2, cache_len=64,
-                        prompt_buckets=(16,))
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=2,
+                    cache_len=64, prompt_buckets=(16,))
     assert eng.mapping is plan_lib.plan_for_config(
         cfg, (2, cfg.n_heads, cfg.n_kv_heads, 64, 64, cfg.head_dim)
     ).mapping
-    pinned = ServingEngine(cfg, params, num_slots=2, cache_len=64,
-                           prompt_buckets=(16,), mapping="naive_head_first")
+    pinned = LLMEngine(cfg, params, kv_layout="dense", max_batch=2,
+                       cache_len=64, prompt_buckets=(16,),
+                       mapping="naive_head_first")
     assert pinned.mapping is PAPER_MAPPINGS["naive_head_first"]
     with pytest.raises(KeyError):
-        ServingEngine(cfg, params, num_slots=2, cache_len=64,
-                      prompt_buckets=(16,), mapping="bogus")
-    paged = PagedServingEngine(cfg, params, num_pages=32, page_size=16,
-                               max_batch=2, max_pages_per_seq=4,
-                               prompt_buckets=(16, 32))
+        LLMEngine(cfg, params, kv_layout="dense", max_batch=2, cache_len=64,
+                  prompt_buckets=(16,), mapping="bogus")
+    paged = LLMEngine(cfg, params, kv_layout="paged", num_pages=32,
+                      page_size=16, max_batch=2, max_pages_per_seq=4,
+                      prompt_buckets=(16, 32))
     assert paged.mapping is plan_lib.plan_for_config(
         cfg, (2, cfg.n_heads, cfg.n_kv_heads, 1, 64, cfg.head_dim),
         phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED, page_size=16,

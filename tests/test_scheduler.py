@@ -1,0 +1,346 @@
+"""Scheduler policy tests in isolation: no models, no jax — fake
+backends over the real ``PagePool`` accounting.
+
+Property targets (PR-5 satellites):
+  * no starvation under a continuous high-priority mix (aging),
+  * the page-accounting invariant (used pages never exceed the pool; the
+    scheduler never over-admits what the allocator cannot hold),
+  * preemption always frees enough pages, never the protected row, and
+    picks the lowest-priority / newest victim,
+  * the NUMA-occupancy cap: a declining modeled tokens/s curve bounds
+    admission; a linear (bandwidth-bound) curve never does.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cache.pool import OutOfPages, PagePool
+from repro.serving.request import Request, SamplingParams
+from repro.serving.scheduler import DEFERRED, Scheduler
+
+
+def make_req(uid, n_tokens=4, priority=0, max_tokens=4):
+    return Request(uid, np.arange(1, n_tokens + 1),
+                   SamplingParams(max_tokens=max_tokens), priority)
+
+
+class FakeBackend:
+    """Row + page mechanism with the real allocator, none of the model."""
+
+    def __init__(self, rows=4, num_pages=32, page_size=1, reserve_pages=0,
+                 decode_time_model=None):
+        self.rows = rows
+        self.pool = PagePool(num_pages, page_size)
+        self.seqs = {}          # row -> (req, SequencePages, submit_order)
+        self.reserve_pages = reserve_pages
+        self._order = 0
+        self._model = decode_time_model
+        self.evictable_pages = 0
+
+    @property
+    def num_active(self):
+        return len(self.seqs)
+
+    @property
+    def free_pages(self):
+        return self.pool.free_pages
+
+    def decode_time_model(self, batch):
+        if self._model is None:
+            return batch * 1e-6  # linear: bandwidth-bound, cap never binds
+        return self._model(batch)
+
+    def quote(self, req):
+        return self.pool.pages_needed(len(req.prompt)), 0
+
+    def try_admit(self, req, resume_tokens=(), pending_hashes=()):
+        if len(self.seqs) >= self.rows:
+            return None
+        n = len(req.prompt) + len(resume_tokens)
+        if not self.pool.can_allocate(n, reserve=self.reserve_pages):
+            return None
+        try:
+            seq = self.pool.allocate_sequence(n)
+        except OutOfPages:
+            return None
+        row = next(r for r in range(self.rows) if r not in self.seqs)
+        self.seqs[row] = (req, seq, self._order)
+        self._order += 1
+        return {"req": req, "row": row}
+
+    def release(self, row):
+        _, seq, _ = self.seqs.pop(row)
+        self.pool.release(seq)
+
+    def victim_candidates(self, protect=-1):
+        return [(req.priority, order, row)
+                for row, (req, _, order) in self.seqs.items()]
+
+
+def drain(records, backend):
+    for rec in records:
+        backend.release(rec["row"])
+
+
+# --- fairness -----------------------------------------------------------------
+
+
+def test_no_starvation_under_priority_mix():
+    """A low-priority request facing an endless stream of fresh
+    high-priority arrivals must still be admitted within the aging bound
+    ((delta_priority + 1) * aging_rounds rounds)."""
+    sched = Scheduler(aging_rounds=3)
+    backend = FakeBackend(rows=1, num_pages=64)
+    low = make_req(0, priority=0)
+    sched.add(low)
+    bound = (5 - 0 + 1) * sched.aging_rounds + 2
+    admitted_round = None
+    for rnd in range(bound + 5):
+        sched.add(make_req(100 + rnd, priority=5))  # fresh high-prio rival
+        records = []
+        sched.schedule(backend, records)
+        assert len(records) == 1  # one row -> one admission per round
+        if records[0]["req"].uid == 0:
+            admitted_round = rnd
+            break
+        drain(records, backend)   # rival finishes, row frees
+    assert admitted_round is not None and admitted_round <= bound, \
+        (admitted_round, bound)
+
+
+def test_priority_order_with_fcfs_ties():
+    sched = Scheduler()
+    backend = FakeBackend(rows=3, num_pages=64)
+    for uid, prio in ((0, 0), (1, 2), (2, 2)):
+        sched.add(make_req(uid, priority=prio))
+    records = []
+    sched.schedule(backend, records)
+    # Highest priority first; FCFS within a priority class; the
+    # low-priority request still fits the third row this round.
+    assert [r["req"].uid for r in records] == [1, 2, 0]
+
+
+def test_requeued_preempted_requests_enter_first():
+    sched = Scheduler()
+    backend = FakeBackend(rows=2, num_pages=64)
+    sched.add(make_req(0, priority=9))
+    sched.requeue(make_req(7, priority=0), generated=[1, 2, 3])
+    records = []
+    sched.schedule(backend, records)
+    # The preempted request re-enters before even a higher-priority
+    # arrival, and carries its resume tokens.
+    assert [r["req"].uid for r in records] == [7, 0]
+
+
+def test_head_of_line_blocking_stops_the_round():
+    """The first request that cannot fit ends the round: later (smaller)
+    requests must not leapfrog it forever."""
+    sched = Scheduler()
+    backend = FakeBackend(rows=4, num_pages=8)  # 7 usable pages
+    sched.add(make_req(0, n_tokens=6))   # 6 pages
+    sched.add(make_req(1, n_tokens=6))   # does not fit alongside 0
+    sched.add(make_req(2, n_tokens=1))   # would fit, but queues behind 1
+    records = []
+    sched.schedule(backend, records)
+    assert [r["req"].uid for r in records] == [0]
+    assert sched.num_waiting == 2
+
+
+# --- page accounting ----------------------------------------------------------
+
+
+def test_page_accounting_invariant_random_trace():
+    """Random admission/finish trace: used pages never exceed the pool,
+    free counts never go negative, and a drained system returns every
+    page."""
+    rng = np.random.default_rng(0)
+    sched = Scheduler()
+    backend = FakeBackend(rows=6, num_pages=24, reserve_pages=1)
+    live = {}
+    uid = 0
+    for _ in range(300):
+        for _ in range(int(rng.integers(0, 3))):
+            sched.add(make_req(uid, n_tokens=int(rng.integers(1, 9))))
+            uid += 1
+        records = []
+        sched.schedule(backend, records)
+        for rec in records:
+            live[rec["row"]] = rec["req"]
+        assert 0 <= backend.pool.free_pages <= backend.pool.num_pages - 1
+        assert backend.pool.used_pages <= backend.pool.num_pages - 1
+        assert backend.num_active <= sched.occupancy_cap(backend)
+        for row in list(live):
+            if rng.random() < 0.4:
+                backend.release(row)
+                del live[row]
+    for row in list(live):
+        backend.release(row)
+    assert backend.pool.used_pages == 0
+
+
+@pytest.mark.slow
+def test_page_accounting_invariant_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.tuples(st.integers(1, 10), st.booleans()),
+                    min_size=1, max_size=60))
+    def run(trace):
+        sched = Scheduler()
+        backend = FakeBackend(rows=4, num_pages=12)
+        uid = 0
+        for n_tokens, release_one in trace:
+            sched.add(make_req(uid, n_tokens=min(n_tokens, 11)))
+            uid += 1
+            records = []
+            sched.schedule(backend, records)
+            assert backend.pool.used_pages <= backend.pool.num_pages - 1
+            if release_one and backend.seqs:
+                backend.release(next(iter(backend.seqs)))
+
+    run()
+
+
+# --- preemption ---------------------------------------------------------------
+
+
+def test_choose_victim_lowest_priority_newest_never_protected():
+    sched = Scheduler()
+    cands = [(2, 0, 0), (0, 1, 1), (0, 2, 2), (5, 3, 3)]
+    assert sched.choose_victim(cands) == 2        # prio 0, newest
+    assert sched.choose_victim(cands, protect=2) == 1
+    assert sched.choose_victim([(1, 0, 4)], protect=4) is None
+
+
+def test_preemption_frees_enough_pages_and_terminates():
+    """Simulated decode growth: when the pool runs dry, repeatedly
+    preempting scheduler-chosen victims must free enough pages for the
+    protected row to append, never evict the protected row, and
+    terminate."""
+    sched = Scheduler()
+    backend = FakeBackend(rows=4, num_pages=9, page_size=1)
+    records = []
+    for uid, prio in ((0, 1), (1, 0), (2, 2), (3, 0)):
+        sched.add(make_req(uid, n_tokens=2, priority=prio))
+    sched.schedule(backend, records)
+    assert backend.num_active == 4  # 8 of 8 usable pages in use
+    row_of = {rec["req"].uid: rec["row"] for rec in records}
+    protect = row_of[0]  # grow the priority-1 request's row
+    preempted = []
+    _, seq0, _ = backend.seqs[protect]
+    for _ in range(6):  # grow the protected row by 6 tokens
+        while True:
+            try:
+                backend.pool.append_token(seq0)
+                break
+            except OutOfPages:
+                victim = sched.choose_victim(
+                    backend.victim_candidates(), protect=protect
+                )
+                assert victim is not None and victim != protect
+                preempted.append(victim)
+                backend.release(victim)
+        assert backend.pool.free_pages >= 0
+    # Victims: the prio-0 rows first (newest of them first), the prio-2
+    # row only after every weaker row is gone; the protected row never.
+    assert preempted == [row_of[3], row_of[1], row_of[2]]
+
+
+# --- occupancy cap ------------------------------------------------------------
+
+
+def test_occupancy_cap_binds_on_declining_throughput_model():
+    """A modeled tokens/s curve that peaks at batch 3 must cap admission
+    at 3 rows even with 8 rows and pages to spare — NUMA occupancy as
+    admission policy."""
+
+    def concave(batch):  # tok/s: 1, 1.25, 1.33, 1.14... peak at 3
+        times = {1: 1.0, 2: 1.6, 3: 2.25, 4: 3.5, 5: 5.0, 6: 7.0, 7: 9.0,
+                 8: 12.0}
+        return times[batch]
+
+    sched = Scheduler(decode_time_model=concave)
+    backend = FakeBackend(rows=8, num_pages=64)
+    assert sched.occupancy_cap(backend) == 3
+    for uid in range(6):
+        sched.add(make_req(uid))
+    records = []
+    sched.schedule(backend, records)
+    assert len(records) == 3
+    assert sched.num_waiting == 3
+
+
+def test_occupancy_cap_open_under_linear_model():
+    """The default bandwidth-bound linear model keeps aggregate tokens/s
+    flat: the cap must stay at the row count (continuous batching intact)."""
+    sched = Scheduler()
+    backend = FakeBackend(rows=8, num_pages=64)
+    assert sched.occupancy_cap(backend) == 8
+    for uid in range(8):
+        sched.add(make_req(uid, n_tokens=2))
+    records = []
+    sched.schedule(backend, records)
+    assert len(records) == 8
+
+
+def test_real_backends_expose_monotone_models():
+    """The perf_model-backed decode_time_model hooks the real backends
+    expose are positive and non-decreasing in batch (sanity for the cap)."""
+    from repro.core import perf_model
+    from repro.core.numa import MI300X
+
+    for fn in (
+        lambda b: perf_model.estimate_dense_decode(
+            batch=b, num_q_heads=8, num_kv_heads=4, capacity=2048,
+            head_dim=64, dtype_bytes=2, topo=MI300X).time,
+        lambda b: perf_model.estimate_paged_decode(
+            batch=b, num_q_heads=8, num_kv_heads=4, mean_len=1024,
+            page_size=16, head_dim=64, dtype_bytes=2, topo=MI300X).time,
+    ):
+        times = [fn(b) for b in range(1, 9)]
+        assert all(t > 0 for t in times)
+        assert all(b <= a * (1 + 1e-9) for a, b in zip(times[1:], times))
+
+
+# --- misc ---------------------------------------------------------------------
+
+
+def test_deferred_sentinel_stops_round_without_consuming():
+    class DeferringBackend(FakeBackend):
+        def try_admit(self, req, resume_tokens=(), pending_hashes=()):
+            if req.uid == 1:
+                return DEFERRED
+            return super().try_admit(req, resume_tokens, pending_hashes)
+
+    sched = Scheduler()
+    backend = DeferringBackend(rows=4, num_pages=64)
+    for uid in range(3):
+        sched.add(make_req(uid))
+    records = []
+    sched.schedule(backend, records)
+    assert [r["req"].uid for r in records] == [0]
+    assert sched.num_waiting == 2  # the deferred request stays queued
+    records = []
+    sched.schedule(backend, records)  # uid 1 still deferred next round
+    assert [r["req"].uid for r in records] == []
+
+
+def test_poison_request_is_ejected_and_raises():
+    class RaisingBackend(FakeBackend):
+        def try_admit(self, req, resume_tokens=(), pending_hashes=()):
+            if req.uid == 0:
+                raise ValueError("bad prompt")
+            return super().try_admit(req, resume_tokens, pending_hashes)
+
+    sched = Scheduler()
+    backend = RaisingBackend(rows=2, num_pages=16)
+    sched.add(make_req(0))
+    sched.add(make_req(1))
+    records = []
+    with pytest.raises(ValueError, match="bad prompt"):
+        sched.schedule(backend, records)
+    assert sched.num_waiting == 1  # the poison request is gone
+    records = []
+    sched.schedule(backend, records)
+    assert [r["req"].uid for r in records] == [1]

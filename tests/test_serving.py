@@ -1,13 +1,31 @@
-"""Serving-engine tests: continuous batching == direct greedy decode."""
+"""Serving facade tests: LLMEngine == direct greedy decode, both layouts.
+
+PR-5 acceptance criteria covered here:
+  * one public entry point (``LLMEngine(cfg, params, kv_layout=...)``)
+    serves mixed batches through both backends with greedy outputs
+    bit-matching the pre-refactor engines' oracle (direct greedy decode),
+    including across preemption/resume;
+  * ``step()`` streams incremental ``RequestOutput``s with correct
+    ``finish_reason``s;
+  * ``kv_layout="auto"`` resolves through the plan layer and falls back
+    to dense for models the paged subsystem cannot hold;
+  * the deprecated ``ServingEngine`` / ``PagedServingEngine`` shims stay
+    drop-in, and nothing outside ``src/repro/serving/`` constructs them
+    (grep-enforced, pattern of ``tests/test_attention_plan.py``).
+"""
+
+import pathlib
+import re
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.cache.pool import OutOfPages
 from repro.configs import registry
 from repro.models import transformer
-from repro.serving.engine import PagedServingEngine, Request, ServingEngine
+from repro.serving import LLMEngine, Request, RequestOutput, SamplingParams
 
 
 @pytest.fixture(scope="module")
@@ -33,43 +51,166 @@ def direct_greedy(cfg, params, prompt, n_new, cache_len=256):
     return toks
 
 
+def toks_of(out: RequestOutput):
+    return [int(t) for t in out.tokens]
+
+
+# --- dense backend ------------------------------------------------------------
+
+
 def test_continuous_batching_matches_direct(llama):
     cfg, params = llama
-    eng = ServingEngine(cfg, params, num_slots=3, cache_len=256,
-                        prompt_buckets=(32, 64))
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=3,
+                    cache_len=256, prompt_buckets=(32, 64))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(1, 400, size=(L,)) for L in (8, 20, 33, 11, 40)]
-    reqs = [Request(uid=i, prompt=p, max_new_tokens=5) for i, p in enumerate(prompts)]
-    results = eng.run(reqs)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=5)
+            for i, p in enumerate(prompts)]
+    results = eng.generate(reqs)
     assert len(results) == len(reqs)
     for r in results:
-        want = direct_greedy(cfg, params, prompts[r.uid], 5)
-        assert [int(t) for t in r.tokens] == want, r.uid
+        assert r.finished and r.finish_reason == "length"
+        assert toks_of(r) == direct_greedy(cfg, params, prompts[r.uid], 5), r.uid
 
 
 def test_slot_reuse(llama):
     cfg, params = llama
-    eng = ServingEngine(cfg, params, num_slots=1, cache_len=128,
-                        prompt_buckets=(16,))
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=1,
+                    cache_len=128, prompt_buckets=(16,))
     rng = np.random.default_rng(1)
     reqs = [Request(uid=i, prompt=rng.integers(1, 400, size=(10,)),
                     max_new_tokens=3) for i in range(4)]
-    results = eng.run(reqs)
+    results = eng.generate(reqs)
     assert sorted(r.uid for r in results) == [0, 1, 2, 3]
 
 
-def test_eos_terminates(llama):
+def test_stop_token_terminates_with_reason(llama):
     cfg, params = llama
     prompt = np.random.default_rng(2).integers(1, 400, size=(12,))
     ref_toks = direct_greedy(cfg, params, prompt, 8, cache_len=128)
-    eos = ref_toks[2]
-    eng = ServingEngine(cfg, params, num_slots=1, cache_len=128,
-                        prompt_buckets=(16,))
-    res = eng.run([Request(uid=0, prompt=prompt, max_new_tokens=8, eos_id=int(eos))])
-    assert len(res[0].tokens) == 3  # stopped right after emitting EOS
+    # A stop token that first appears at position i > 0 (greedy decode may
+    # repeat tokens, so pick one with no earlier occurrence).
+    i = next(k for k in range(1, 8) if ref_toks[k] not in ref_toks[:k])
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=1,
+                    cache_len=128, prompt_buckets=(16,))
+    res = eng.generate([Request(uid=0, prompt=prompt, max_new_tokens=8,
+                                eos_id=int(ref_toks[i]))])
+    # Stopped right after emitting the stop token (which is included).
+    assert [int(t) for t in res[0].tokens] == ref_toks[: i + 1]
+    assert res[0].finish_reason == "stop"
+    # A stop token as the very FIRST generated token must terminate too
+    # (the pre-facade engines only checked decode-sampled tokens).
+    res0 = eng.generate([Request(uid=1, prompt=prompt, max_new_tokens=8,
+                                 eos_id=int(ref_toks[0]))])
+    assert [int(t) for t in res0[0].tokens] == [ref_toks[0]]
+    assert res0[0].finish_reason == "stop"
 
 
-# --- paged engine (PR 2) -----------------------------------------------------
+def test_streaming_deltas_reassemble(llama):
+    """step() emits disjoint new_tokens whose concatenation equals the
+    final output, and the last delta carries the finish_reason."""
+    cfg, params = llama
+    rng = np.random.default_rng(20)
+    prompts = [rng.integers(1, 400, size=(L,)) for L in (8, 14)]
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=2,
+                    cache_len=128, prompt_buckets=(16,))
+    for i, p in enumerate(prompts):
+        eng.add_request(Request(uid=i, prompt=p, max_new_tokens=4))
+    streams = {0: [], 1: []}
+    finals = {}
+    for _ in range(20):
+        for out in eng.step():
+            streams[out.uid].extend(int(t) for t in out.new_tokens)
+            if out.finished:
+                finals[out.uid] = out
+        if not eng.backend.active.any() and not eng.scheduler.has_work():
+            break
+    assert sorted(finals) == [0, 1]
+    for uid, out in finals.items():
+        assert out.finish_reason == "length"
+        assert streams[uid] == toks_of(out)  # deltas reassemble exactly
+        assert streams[uid] == direct_greedy(cfg, params, prompts[uid], 4)
+
+
+def test_mixed_sampling_batch_one_engine(llama):
+    """The acceptance-criteria batch: different sampling params,
+    priorities and lengths in one engine — greedy rows bit-match the
+    oracle, stochastic rows are reproducible solo (per-request keys)."""
+    cfg, params = llama
+    rng = np.random.default_rng(21)
+    prompts = [rng.integers(1, 400, size=(L,)) for L in (8, 20, 13, 30)]
+    mk = [
+        SamplingParams(max_tokens=5),
+        SamplingParams(temperature=0.9, top_k=25, max_tokens=4, seed=3),
+        SamplingParams(temperature=1.1, top_p=0.8, max_tokens=6, seed=4),
+        SamplingParams(max_tokens=3, seed=9),
+    ]
+    reqs = [Request(uid=i, prompt=p, sampling=s, priority=i % 2)
+            for i, (p, s) in enumerate(zip(prompts, mk))]
+    for layout, kw in (
+        ("dense", dict(cache_len=256, prompt_buckets=(32, 64))),
+        ("paged", dict(num_pages=96, page_size=16, max_pages_per_seq=8,
+                       prompt_buckets=(16, 32, 64))),
+    ):
+        eng = LLMEngine(cfg, params, kv_layout=layout, max_batch=3, **kw)
+        results = {r.uid: r for r in eng.generate([r.clone() for r in reqs])}
+        assert sorted(results) == [0, 1, 2, 3]
+        for uid in (0, 3):  # greedy rows == oracle regardless of batchmates
+            want = direct_greedy(cfg, params, prompts[uid],
+                                 mk[uid].max_tokens)
+            assert toks_of(results[uid]) == want, (layout, uid)
+        for uid in (1, 2):  # stochastic rows reproduce solo (same seed)
+            solo = LLMEngine(cfg, params, kv_layout=layout, max_batch=1, **kw)
+            (ref,) = solo.generate([reqs[uid].clone()])
+            assert toks_of(results[uid]) == toks_of(ref), (layout, uid)
+
+
+def test_kv_layout_auto_resolves_through_plan_layer(llama):
+    cfg, params = llama
+    eng = LLMEngine(cfg, params, max_batch=2, num_pages=32, page_size=16,
+                    max_pages_per_seq=4, prompt_buckets=(16, 32))
+    # The analytic NUMA decode model prefers the paged pool over streaming
+    # full dense stripes for an attention-only model.
+    assert eng.kv_layout == "paged"
+    # The zero-knob constructor (the README example) must be valid: the
+    # default per-sequence page cap clamps to what the pool can hold.
+    eng_default = LLMEngine(cfg, params)
+    assert eng_default.kv_layout == "paged"
+    assert eng_default.backend.max_pages_per_seq <= \
+        eng_default.backend.pool.num_pages - 1
+    # Models the paged subsystem cannot hold fall back to dense.
+    mcfg = registry.get_smoke_config("musicgen-medium")
+    mparams = transformer.init_model(jax.random.PRNGKey(0), mcfg)
+    meng = LLMEngine(mcfg, mparams, max_batch=2, cache_len=64,
+                     prompt_buckets=(16,))
+    assert meng.kv_layout == "dense"
+    with pytest.raises(ValueError, match="single-codebook"):
+        LLMEngine(mcfg, mparams, kv_layout="paged", max_batch=2)
+    with pytest.raises(ValueError, match="kv_layout"):
+        LLMEngine(cfg, params, kv_layout="sparse")
+
+
+def test_multi_codebook_serving(llama):
+    """MusicGen-style (S, K) prompts serve through the facade (dense
+    fallback) with (K,) token outputs."""
+    mcfg = registry.get_smoke_config("musicgen-medium")
+    mparams = transformer.init_model(jax.random.PRNGKey(0), mcfg)
+    rng = np.random.default_rng(22)
+    eng = LLMEngine(mcfg, mparams, max_batch=2, cache_len=64,
+                    prompt_buckets=(16,))
+    res = eng.generate([
+        Request(uid=0, prompt=rng.integers(1, 200, size=(8, 4)),
+                max_new_tokens=3),
+        Request(uid=1, prompt=rng.integers(1, 200, size=(6, 4)),
+                sampling=SamplingParams(temperature=0.7, max_tokens=3,
+                                        seed=1)),
+    ])
+    assert sorted(r.uid for r in res) == [0, 1]
+    for r in res:
+        assert all(np.asarray(t).shape == (4,) for t in r.tokens), r.uid
+
+
+# --- paged backend ------------------------------------------------------------
 
 
 def test_paged_matches_direct_with_prefix_sharing(llama):
@@ -82,41 +223,53 @@ def test_paged_matches_direct_with_prefix_sharing(llama):
     prompts = [np.concatenate([system, rng.integers(1, 400, size=(L,))])
                for L in (5, 18, 2)]
     prompts.append(rng.integers(1, 400, size=(9,)))  # unshared
-    eng = PagedServingEngine(cfg, params, num_pages=64, page_size=16,
-                             max_batch=3, max_pages_per_seq=8,
-                             prompt_buckets=(16, 32, 64))
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=64,
+                    page_size=16, max_batch=3, max_pages_per_seq=8,
+                    prompt_buckets=(16, 32, 64))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
             for i, p in enumerate(prompts)]
-    results = eng.run(reqs)
+    results = eng.generate(reqs)
     assert len(results) == len(reqs)
     for r in results:
         want = direct_greedy(cfg, params, prompts[r.uid], 4)
-        assert [int(t) for t in r.tokens] == want, r.uid
-    stats = eng.prefix_stats()
-    assert stats["prefix_hit_rate"] > 0
-    assert stats["pages_reused"] >= 2 * 2  # 32-token prefix = 2 pages, 2 reusers
+        assert toks_of(r) == want, r.uid
+    stats = eng.stats()
+    assert stats.prefix_hit_rate > 0
+    assert eng.backend.stats["pages_reused"] >= 2 * 2  # 2-page prefix, 2 reusers
     # all sequence pages released; only prefix-cache pages remain in use
-    assert eng.pool.used_pages == len(eng.prefix)
+    assert eng.backend.pool.used_pages == len(eng.backend.prefix)
+    # Admission pricing (quote) is a pure peek: no LRU refresh, no
+    # phantom hit-rate queries, however often the scheduler re-prices.
+    before = eng.backend.prefix.stats()
+    for _ in range(3):
+        eng.backend.quote(Request(uid=99, prompt=prompts[0],
+                                  max_new_tokens=2))
+    assert eng.backend.prefix.stats() == before
 
 
 def test_paged_preemption_under_page_pressure(llama):
     """A pool too small for all concurrent sequences preempts the lowest
-    priority one, requeues it, and still completes everything exactly."""
+    priority one, requeues it, and still completes everything exactly —
+    the bit-match-across-preemption acceptance check."""
     cfg, params = llama
     rng = np.random.default_rng(4)
     prompts = [rng.integers(1, 400, size=(20,)) for _ in range(3)]
     # 9 usable pages; each sequence grows to 4 pages (20 + 30 tokens).
-    eng = PagedServingEngine(cfg, params, num_pages=10, page_size=16,
-                             max_batch=3, max_pages_per_seq=4,
-                             prompt_buckets=(16, 32))
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=10,
+                    page_size=16, max_batch=3, max_pages_per_seq=4,
+                    prompt_buckets=(16, 32))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=30, priority=i)
             for i, p in enumerate(prompts)]
-    results = eng.run(reqs)
+    results = eng.generate(reqs)
     assert sorted(r.uid for r in results) == [0, 1, 2]
-    assert eng.prefix_stats()["preemptions"] >= 1
+    stats = eng.stats()
+    assert stats.preemptions >= 1
+    # The victim had decoded tokens before eviction and they were replayed
+    # (restart-from-scratch would leave this at 0).
+    assert stats.resumed_tokens > 0
     for r in results:
         want = direct_greedy(cfg, params, prompts[r.uid], 30)
-        assert [int(t) for t in r.tokens] == want, r.uid
+        assert toks_of(r) == want, r.uid
 
 
 def test_paged_prefix_reuse_survives_eviction_pressure(llama):
@@ -128,22 +281,18 @@ def test_paged_prefix_reuse_survives_eviction_pressure(llama):
     rng = np.random.default_rng(6)
     prompt_a = rng.integers(1, 400, size=(48,))
     prompt_b = np.concatenate([prompt_a[:16], rng.integers(1, 400, size=(48,))])
-    # 5 usable pages: A peaks at 4 and leaves 3 in the prefix cache; B
-    # (sharing one page) needs 3 fresh + 1 reserve => 2 cached pages must
-    # be evicted while the matched one is in flight.
-    eng = PagedServingEngine(cfg, params, num_pages=6, page_size=16,
-                             max_batch=1, max_pages_per_seq=5,
-                             prompt_buckets=(16, 32, 48, 64))
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=6,
+                    page_size=16, max_batch=1, max_pages_per_seq=5,
+                    prompt_buckets=(16, 32, 48, 64))
     reqs = [Request(uid=0, prompt=prompt_a, max_new_tokens=16),
             Request(uid=1, prompt=prompt_b, max_new_tokens=16)]
-    results = eng.run(reqs)
+    results = eng.generate(reqs)
     assert sorted(r.uid for r in results) == [0, 1]
-    stats = eng.prefix_stats()
-    assert stats["pages_reused"] >= 1
-    assert eng.stats["prefix_evictions"] >= 2
+    assert eng.backend.stats["pages_reused"] >= 1
+    assert eng.backend.stats["prefix_evictions"] >= 2
     for r in results:
         want = direct_greedy(cfg, params, reqs[r.uid].prompt, 16)
-        assert [int(t) for t in r.tokens] == want, r.uid
+        assert toks_of(r) == want, r.uid
 
 
 def test_paged_prefill_compile_cache_is_log_bounded(llama):
@@ -153,55 +302,29 @@ def test_paged_prefill_compile_cache_is_log_bounded(llama):
     cfg, params = llama
     rng = np.random.default_rng(7)
     base = rng.integers(1, 400, size=(96,))  # 6 full pages once published
-    eng = PagedServingEngine(cfg, params, num_pages=64, page_size=16,
-                             max_batch=2, max_pages_per_seq=10,
-                             prompt_buckets=(16, 32, 64, 96))
-    prompts = [base]  # publishes all 6 full pages into the prefix cache
-    # Prefixes of 1..6 shared pages, each with a short unique tail.
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=64,
+                    page_size=16, max_batch=2, max_pages_per_seq=10,
+                    prompt_buckets=(16, 32, 64, 96))
+    prompts = [base]
     for i in range(1, 7):
         prompts.append(
             np.concatenate([base[: 16 * i], rng.integers(1, 400, size=(8,))])
         )
     reqs = [Request(uid=i, prompt=p, max_new_tokens=3)
             for i, p in enumerate(prompts)]
-    results = eng.run(reqs)
+    results = eng.generate(reqs)
     assert len(results) == len(reqs)
     for r in results:
         want = direct_greedy(cfg, params, prompts[r.uid], 3)
-        assert [int(t) for t in r.tokens] == want, r.uid
-    assert eng.stats["extend_prefills"] >= 5  # the sweep hit the extend path
-    prefix_keys = {k[1] for k in eng._prefill_p if k[1] > 0}
-    # Powers of two only, and logarithmically many despite 6 distinct
-    # matched prefix lengths.
+        assert toks_of(r) == want, r.uid
+    backend = eng.backend
+    assert backend.stats["extend_prefills"] >= 5
+    prefix_keys = {k[1] for k in backend._prefill_p if k[1] > 0}
     assert all(p & (p - 1) == 0 for p in prefix_keys), prefix_keys
     import math
 
-    assert len(prefix_keys) <= math.ceil(math.log2(eng.max_pages_per_seq)) + 1, \
-        prefix_keys
-
-
-def test_paged_preemption_resumes_generated_tokens(llama):
-    """A preempted sequence must resume by replaying its generated tokens
-    through the extend path — not restart decode from scratch — and still
-    bit-match the direct greedy decode."""
-    cfg, params = llama
-    rng = np.random.default_rng(8)
-    prompts = [rng.integers(1, 400, size=(20,)) for _ in range(3)]
-    eng = PagedServingEngine(cfg, params, num_pages=10, page_size=16,
-                             max_batch=3, max_pages_per_seq=4,
-                             prompt_buckets=(16, 32, 64))
-    reqs = [Request(uid=i, prompt=p, max_new_tokens=30, priority=i)
-            for i, p in enumerate(prompts)]
-    results = eng.run(reqs)
-    assert sorted(r.uid for r in results) == [0, 1, 2]
-    stats = eng.prefix_stats()
-    assert stats["preemptions"] >= 1
-    # The victim had decoded tokens before eviction and they were replayed
-    # (restart-from-scratch would leave this at 0).
-    assert stats["resumed_tokens"] > 0
-    for r in results:
-        want = direct_greedy(cfg, params, prompts[r.uid], 30)
-        assert [int(t) for t in r.tokens] == want, r.uid
+    assert len(prefix_keys) <= \
+        math.ceil(math.log2(backend.max_pages_per_seq)) + 1, prefix_keys
 
 
 def test_paged_resume_truncates_oversized_replay(llama):
@@ -211,29 +334,34 @@ def test_paged_resume_truncates_oversized_replay(llama):
     cfg, params = llama
     rng = np.random.default_rng(9)
     prompt = rng.integers(1, 400, size=(30,))
-    eng = PagedServingEngine(cfg, params, num_pages=32, page_size=16,
-                             max_batch=2, max_pages_per_seq=5,
-                             prompt_buckets=(16, 32))
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=32,
+                    page_size=16, max_batch=2, max_pages_per_seq=5,
+                    prompt_buckets=(16, 32))
+    backend = eng.backend
     req = Request(uid=0, prompt=prompt, max_new_tokens=45)
     # Seed the prefix cache with the prompt's full page, as a prior
     # admission would have.
-    assert eng.submit(req)
-    eng._preempt_one(protect=-1)
+    rec = backend.try_admit(req)
+    assert rec is not None
+    eng._flush([rec])
+    assert backend._preempt_one(protect=-1)
+    assert eng.scheduler.num_waiting == 1  # requeued for resume
     # Resume with a 40-token replay: tail 30+40-16 = 54 exceeds bucket 32,
     # so the engine must keep only the 18 replayed tokens that fit
     # (30+18-16 = 32) and re-decode the rest.
     fake = [int(t) for t in rng.integers(1, 400, size=(40,))]
-    assert eng.submit(req, resume_tokens=fake)
-    row = int(np.flatnonzero(eng.active)[0])
-    assert eng.slot_out[row] == fake[:18]
-    assert eng.lengths[row] == 30 + 18
-    assert eng.stats["resumed_tokens"] == 18
+    rec = backend.try_admit(req, resume_tokens=fake)
+    assert rec is not None
+    row = rec["row"]
+    assert backend.out[row] == fake[:18]
+    assert backend.lengths[row] == 30 + 18
+    assert backend.stats["resumed_tokens"] == 18
 
 
-def test_paged_batched_admissions_bit_exact(llama):
-    """Batched admission (PR 4): ready requests sharing a jit bucket ride
+def test_paged_batched_prefills_bit_exact(llama):
+    """Batched prefill flushing: ready requests sharing a jit bucket ride
     one tail-prefill launch — fewer launches, identical tokens vs the
-    legacy one-launch-per-request loop, and still equal to direct greedy."""
+    one-launch-per-request oracle, and still equal to direct greedy."""
     cfg, params = llama
     rng = np.random.default_rng(10)
     system = rng.integers(1, 400, size=(32,))
@@ -243,23 +371,23 @@ def test_paged_batched_admissions_bit_exact(llama):
         prompts.append(np.concatenate([system, tail]) if i % 3 else tail)
     reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
             for i, p in enumerate(prompts)]
-    kw = dict(num_pages=96, page_size=16, max_batch=4, max_pages_per_seq=8,
-              prompt_buckets=(16, 32, 64))
+    kw = dict(kv_layout="paged", num_pages=96, page_size=16, max_batch=4,
+              max_pages_per_seq=8, prompt_buckets=(16, 32, 64))
 
-    batched = PagedServingEngine(cfg, params, batch_admissions=True, **kw)
-    res_b = batched.run([Request(**vars(r)) for r in reqs])
-    serial = PagedServingEngine(cfg, params, batch_admissions=False, **kw)
-    res_s = serial.run([Request(**vars(r)) for r in reqs])
+    batched = LLMEngine(cfg, params, batch_prefills=True, **kw)
+    res_b = batched.generate([r.clone() for r in reqs])
+    serial = LLMEngine(cfg, params, batch_prefills=False, **kw)
+    res_s = serial.generate([r.clone() for r in reqs])
 
-    toks_b = {r.uid: [int(t) for t in r.tokens] for r in res_b}
-    toks_s = {r.uid: [int(t) for t in r.tokens] for r in res_s}
-    assert toks_b == toks_s  # bit-exact across the two admission modes
+    toks_b = {r.uid: toks_of(r) for r in res_b}
+    toks_s = {r.uid: toks_of(r) for r in res_s}
+    assert toks_b == toks_s  # bit-exact across the two flush modes
     for uid, toks in toks_b.items():
         assert toks == direct_greedy(cfg, params, prompts[uid], 4), uid
-    # The batched engine actually coalesced launches; the serial one never.
-    assert batched.stats["batched_prefills"] > 0
-    assert batched.stats["prefill_launches"] < serial.stats["prefill_launches"]
-    assert serial.stats["batched_prefills"] == 0
+    assert batched.backend.stats["batched_prefills"] > 0
+    assert batched.backend.stats["prefill_launches"] < \
+        serial.backend.stats["prefill_launches"]
+    assert serial.backend.stats["batched_prefills"] == 0
 
 
 def test_paged_batched_extend_rows_share_one_launch(llama):
@@ -269,66 +397,81 @@ def test_paged_batched_extend_rows_share_one_launch(llama):
     cfg, params = llama
     rng = np.random.default_rng(11)
     base = rng.integers(1, 400, size=(32,))
-    eng = PagedServingEngine(cfg, params, num_pages=96, page_size=16,
-                             max_batch=4, max_pages_per_seq=8,
-                             prompt_buckets=(16, 32, 64))
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=96,
+                    page_size=16, max_batch=4, max_pages_per_seq=8,
+                    prompt_buckets=(16, 32, 64))
     # Publish the prefix first (its own flush), then three same-bucket
     # extenders arrive together.
-    warm = [Request(uid=0, prompt=base, max_new_tokens=2)]
-    eng.run(warm)
-    launches_before = eng.stats["prefill_launches"]
+    eng.generate([Request(uid=0, prompt=base, max_new_tokens=2)])
+    backend = eng.backend
+    launches_before = backend.stats["prefill_launches"]
     tails = [rng.integers(1, 400, size=(6 + i,)) for i in range(3)]
     reqs = [Request(uid=10 + i, prompt=np.concatenate([base, t]),
                     max_new_tokens=3) for i, t in enumerate(tails)]
-    results = [r for r in eng.run(reqs) if r.uid >= 10]  # results accumulate
+    results = eng.generate(reqs)
     assert len(results) == 3
-    assert eng.stats["extend_prefills"] >= 3
-    assert eng.stats["prefill_launches"] == launches_before + 1  # one flush
-    assert eng.stats["batched_prefills"] >= 1
+    assert backend.stats["extend_prefills"] >= 3
+    assert backend.stats["prefill_launches"] == launches_before + 1
+    assert backend.stats["batched_prefills"] >= 1
     # A (bucket, pages, rows=3) jit key exists — the kernel consumed (B,)
     # prefix/tail lengths in one call.
-    assert any(k[2] == 3 and k[1] > 0 for k in eng._prefill_p), \
-        sorted(eng._prefill_p)
+    assert any(k[2] == 3 and k[1] > 0 for k in backend._prefill_p), \
+        sorted(backend._prefill_p)
     for r in results:
         want = direct_greedy(
             cfg, params, np.concatenate([base, tails[r.uid - 10]]), 3
         )
-        assert [int(t) for t in r.tokens] == want, r.uid
+        assert toks_of(r) == want, r.uid
 
 
-def test_paged_rejects_unservable_request_at_admission(llama):
-    """prompt + max_new_tokens that cannot fit max_pages_per_seq must fail
-    at submit, not crash mid-decode."""
+def test_paged_rejects_unservable_request_at_add(llama):
+    """prompt + max_tokens that cannot fit max_pages_per_seq must fail at
+    add_request, not crash mid-decode."""
     cfg, params = llama
-    eng = PagedServingEngine(cfg, params, num_pages=16, page_size=16,
-                             max_batch=2, max_pages_per_seq=4,
-                             prompt_buckets=(16, 32))
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=16,
+                    page_size=16, max_batch=2, max_pages_per_seq=4,
+                    prompt_buckets=(16, 32))
     bad = Request(uid=0, prompt=np.arange(1, 17), max_new_tokens=60)
     with pytest.raises(ValueError, match="outgrow"):
-        eng.submit(bad)
-    assert eng.pool.used_pages == 0  # nothing leaked
+        eng.add_request(bad)
+    assert eng.backend.pool.used_pages == 0  # nothing leaked
+    assert eng.scheduler.num_waiting == 0    # nothing queued
+    # Without prefix sharing, a prompt no bucket holds can never be
+    # served either: rejected at add_request, not mid-run.
+    eng2 = LLMEngine(cfg, params, kv_layout="paged", num_pages=16,
+                     page_size=16, max_batch=2, max_pages_per_seq=8,
+                     prompt_buckets=(16, 32), prefix_sharing=False)
+    with pytest.raises(ValueError, match="exceeds buckets"):
+        eng2.add_request(Request(uid=0, prompt=np.arange(1, 49),
+                                 max_new_tokens=3))
+    # Passing both a Request and loose keywords (incl. priority) errors.
+    with pytest.raises(ValueError, match="either"):
+        eng2.add_request(Request(uid=1, prompt=np.arange(1, 9),
+                                 max_new_tokens=2), priority=5)
 
 
-def test_paged_batched_flushes_before_raising(llama):
-    """A bad request admitted *after* good ones in the same batched round
-    must not strand the good rows unprefilled: the flush runs before the
-    ValueError propagates, so a caller that catches it can keep driving
-    the engine."""
+def test_poison_request_flushes_good_rows_and_is_ejected(llama):
+    """A request whose tail overflows every prefill bucket only surfaces
+    at admission time. It must (a) not strand same-round good rows
+    unprefilled — the flush runs before the error propagates — and (b) be
+    ejected from the queue so later steps are not wedged."""
     cfg, params = llama
     rng = np.random.default_rng(12)
     good = Request(uid=0, prompt=rng.integers(1, 400, size=(10,)),
                    max_new_tokens=3)
-    bad = Request(uid=1, prompt=np.arange(1, 17), max_new_tokens=60)
-    eng = PagedServingEngine(cfg, params, num_pages=64, page_size=16,
-                             max_batch=2, max_pages_per_seq=4,
-                             prompt_buckets=(16, 32))
-    with pytest.raises(ValueError, match="outgrow"):
-        eng.run([good, bad])
-    row = int(np.flatnonzero(eng.active)[0])
-    assert row in eng._pending_first  # good row's prefill was flushed
-    res = eng.run([])  # drain the good request to completion
-    assert [int(t) for t in res[0].tokens] == \
-        direct_greedy(cfg, params, good.prompt, 3)
+    # Fits pages (48 + 3 tokens < 5 pages) but no 48-token tail bucket.
+    bad = Request(uid=1, prompt=rng.integers(1, 400, size=(48,)),
+                  max_new_tokens=3)
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=64,
+                    page_size=16, max_batch=2, max_pages_per_seq=5,
+                    prompt_buckets=(16, 32))
+    with pytest.raises(ValueError, match="exceeds buckets"):
+        eng.generate([good, bad])
+    row = int(np.flatnonzero(eng.backend.active)[0])
+    assert row in eng._pending  # good row's prefill was flushed + sampled
+    assert eng.scheduler.num_waiting == 0  # poison request ejected
+    res = eng.generate([])  # drain the good request to completion
+    assert toks_of(res[0]) == direct_greedy(cfg, params, good.prompt, 3)
 
 
 def test_paged_pool_must_hold_one_max_sequence(llama):
@@ -336,27 +479,111 @@ def test_paged_pool_must_hold_one_max_sequence(llama):
     mid-decode with nothing to preempt; reject at construction."""
     cfg, params = llama
     with pytest.raises(ValueError, match="cannot hold"):
-        PagedServingEngine(cfg, params, num_pages=4, page_size=16,
-                           max_batch=1, max_pages_per_seq=4,
-                           prompt_buckets=(16,))
+        LLMEngine(cfg, params, kv_layout="paged", num_pages=4, page_size=16,
+                  max_batch=1, max_pages_per_seq=4, prompt_buckets=(16,))
 
 
 def test_paged_admission_is_page_governed(llama):
     """With rows to spare but pages for only one sequence at a time, the
-    engine serializes admission instead of overcommitting."""
+    scheduler serializes admission instead of overcommitting."""
     cfg, params = llama
     rng = np.random.default_rng(5)
     prompts = [rng.integers(1, 400, size=(30,)) for _ in range(2)]
-    # 5 usable pages; a 30-token prompt + 14 new tokens needs 3 pages, so
-    # two concurrent sequences (6 pages) never fit -> one at a time.
-    eng = PagedServingEngine(cfg, params, num_pages=6, page_size=16,
-                             max_batch=4, max_pages_per_seq=3,
-                             prompt_buckets=(16, 32), prefix_sharing=False,
-                             reserve_pages=1)
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=6,
+                    page_size=16, max_batch=4, max_pages_per_seq=3,
+                    prompt_buckets=(16, 32), prefix_sharing=False,
+                    reserve_pages=1)
     reqs = [Request(uid=i, prompt=p, max_new_tokens=14)
             for i, p in enumerate(prompts)]
-    results = eng.run(reqs)
+    results = eng.generate(reqs)
     assert sorted(r.uid for r in results) == [0, 1]
     for r in results:
         want = direct_greedy(cfg, params, prompts[r.uid], 14)
-        assert [int(t) for t in r.tokens] == want, r.uid
+        assert toks_of(r) == want, r.uid
+
+
+def test_generate_raises_when_nothing_can_fit(llama):
+    """A request that passes per-request validation but can never be
+    admitted (pages + decode headroom exceed the whole pool) must raise
+    OutOfPages from generate — carrying the outputs that already finished
+    this call, not discarding them."""
+    cfg, params = llama
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=10,
+                    page_size=16, max_batch=2, max_pages_per_seq=8,
+                    prompt_buckets=(16, 32, 64), reserve_pages=6)
+    good = Request(uid=0, prompt=np.arange(1, 11) % 400, max_new_tokens=3)
+    # 4 prompt pages + 6 reserve > 9 usable: the scheduler's page budget
+    # can never clear it.
+    big = Request(uid=1, prompt=np.arange(1, 65) % 400, max_new_tokens=3)
+    with pytest.raises(OutOfPages) as ei:
+        eng.generate([good, big])
+    (done,) = ei.value.completed  # the finished request survives the error
+    assert done.uid == 0 and done.finish_reason == "length"
+    assert toks_of(done) == direct_greedy(cfg, params, good.prompt, 3)
+
+
+# --- deprecated shims ---------------------------------------------------------
+
+
+def test_deprecated_shims_are_drop_in(llama):
+    """Old constructor surface + run() still work (with a
+    DeprecationWarning) and produce exactly the facade's outputs."""
+    from repro.serving import PagedServingEngine, Result, ServingEngine
+
+    cfg, params = llama
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(1, 400, size=(L,)) for L in (8, 20)]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=4, temperature=0.0)
+            for i, p in enumerate(prompts)]
+
+    with pytest.warns(DeprecationWarning):
+        dense = ServingEngine(cfg, params, num_slots=2, cache_len=128,
+                              prompt_buckets=(32,))
+    res = dense.run([r.clone() for r in reqs])
+    assert all(isinstance(r, Result) for r in res)
+    for r in res:
+        assert [int(t) for t in r.tokens] == \
+            direct_greedy(cfg, params, prompts[r.uid], 4), r.uid
+
+    with pytest.warns(DeprecationWarning):
+        paged = PagedServingEngine(cfg, params, num_pages=32, page_size=16,
+                                   max_batch=2, max_pages_per_seq=4,
+                                   prompt_buckets=(16, 32))
+    res_p = paged.run([r.clone() for r in reqs])
+    for r in res_p:
+        assert [int(t) for t in r.tokens] == \
+            direct_greedy(cfg, params, prompts[r.uid], 4), r.uid
+    # Thin delegation: legacy introspection still reachable.
+    assert paged.pool.used_pages == len(paged.prefix)
+    assert paged.prefix_stats()["prefill_launches"] >= 2
+    # Hand-driven submit()+step() loops still populate .results.
+    manual = Request(uid=9, prompt=prompts[0], max_new_tokens=2)
+    assert paged.submit(manual)
+    for _ in range(5):
+        paged.step()
+    assert any(r.uid == 9 for r in paged.results)
+    with pytest.raises(KeyError), pytest.warns(DeprecationWarning):
+        ServingEngine(cfg, params, num_slots=1, cache_len=64,
+                      prompt_buckets=(16,), mapping="bogus")
+
+
+def test_no_legacy_engine_construction_outside_serving():
+    """Grep enforcement (pattern of test_attention_plan): the deprecated
+    engine classes may only be constructed inside ``src/repro/serving/``
+    — and this test file, which tests the shims themselves. Everything
+    else goes through ``LLMEngine``."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    pattern = re.compile(r"\b(?:Paged)?ServingEngine\(")
+    allowed = {
+        root / "src" / "repro" / "serving",
+        root / "tests" / "test_serving.py",
+    }
+    offenders = []
+    for sub in ("src", "examples", "benchmarks", "tests"):
+        for path in (root / sub).rglob("*.py"):
+            if any(a in (path, *path.parents) for a in allowed):
+                continue
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if pattern.search(line):
+                    offenders.append(f"{path.relative_to(root)}:{i}: {line.strip()}")
+    assert not offenders, offenders
