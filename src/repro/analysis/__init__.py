@@ -1,0 +1,35 @@
+"""Static analysis & sanitizers for the repo's NUMA contracts.
+
+The paper's modeled wins rest on invariants the code can only promise:
+head-first mappings stay inside a NUMA domain, split-K ranges are
+domain-pure under the head-major pool, every kernel routes through the one
+versioned-API shim, and the page pool's refcount/COW discipline is never
+violated. This package turns those promises into checked contracts, three
+layers deep:
+
+  * :mod:`repro.analysis.lint` — AST-based NUMA-contract linter. A rule
+    registry of AST visitors subsumes (and extends) the grep scans that
+    used to live copy-pasted inside three test files. Runnable as
+    ``python -m repro.analysis [--strict]``; CI runs it ahead of tier-1.
+  * :mod:`repro.analysis.pool_sanitizer` — a shadow state machine
+    (FREE/OWNED/SHARED) over :class:`repro.cache.pool.PagePool` that
+    detects double-free, use-after-release, writes through the reserved
+    null page, COW violations, and refcount leaks. Attached as an autouse
+    pytest fixture across the scheduler/serving/paged-cache suites.
+  * :mod:`repro.analysis.access_trace` — domain-purity access tracer: it
+    replays the *same* BlockSpec index maps the Pallas kernels hand to
+    ``pallas_call`` over a concrete page table and asserts, per grid
+    cell, the domain-purity/locality claims that
+    ``cache.layout.split_ranges_domain_aligned`` and the perf model
+    assume analytically. Wired into the ``--smoke`` CI path so a
+    cross-domain straddle fails CI instead of silently invalidating the
+    modeled speedups.
+"""
+
+from repro.analysis.lint import (  # noqa: F401
+    RULES,
+    Violation,
+    lint_source,
+    repo_root,
+    run_rules,
+)

@@ -1,0 +1,347 @@
+"""Domain-purity access tracer for the paged / split-K attention kernels.
+
+The perf model's NUMA claims are *analytic*: ``cache.layout`` proves that
+``decode_split_ranges`` boundaries are domain-pure under the head-major
+pool by reasoning over logical page indices. The kernels, however, touch
+whatever their **BlockSpec index maps** say — a refactor that changes a
+``lambda`` inside ``pallas_call`` could silently break the co-location
+story while every numeric test still passes (attention output does not
+depend on where a page lives).
+
+This module closes that gap: it replays the *exact* index-map functions
+the kernels export (``paged_kv_index_map`` / ``split_kv_index_map`` /
+``prefix_page_index_map`` / ``split_chunk_index_map`` — module-level in
+the kernel files precisely so tracer and ``pallas_call`` cannot diverge)
+over a concrete page table, records which physical page every grid cell
+DMAs, and asserts:
+
+  * **domain purity** — each cell's *live* fetches (the ones whose compute
+    actually runs; clamped tail-overhang DMAs are recorded but skipped by
+    ``decode_common.chunk_relevant``, same as in the kernel) stay inside
+    one memory domain;
+  * **domain locality** — under ``HEAD_ALIGNED`` each live fetch lands in
+    the very domain that executes the cell (``domain_of_head``);
+  * **range consistency** — the split-K cells' live logical pages are
+    exactly the ``decode_split_ranges`` partition the plan layer reasons
+    about, so model and kernel agree on who reads what.
+
+Runs everywhere the interpret path runs (pure host arithmetic — no Pallas
+launch needed); the ``--smoke`` CI step traces a ``num_splits > 1`` paged
+plan on every push.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cache import layout as layout_lib
+from repro.kernels import decode_common
+from repro.kernels.decode_attention import split_chunk_index_map
+from repro.kernels.paged_decode_attention import (
+    paged_kv_index_map,
+    split_kv_index_map,
+)
+from repro.kernels.paged_prefill_attention import prefix_page_index_map
+
+__all__ = [
+    "AccessTrace",
+    "CellTrace",
+    "DomainPurityError",
+    "trace_dense_split_decode",
+    "trace_paged_decode",
+    "trace_paged_prefill",
+    "trace_plan",
+]
+
+
+class DomainPurityError(AssertionError):
+    """A grid cell's live page fetches straddle NUMA domains (or miss the
+    cell's own domain) — the co-location claim the perf model banks on
+    does not hold for this (plan, page table)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CellTrace:
+    """What one grid cell touches."""
+
+    cell: Tuple[int, ...]        # grid coordinates: (b, h) or (b, h, s)
+    head: int
+    cell_domain: int             # domain executing the cell (head-first grid)
+    touched: Tuple[int, ...]     # every physical page the index map DMAs
+    live: Tuple[int, ...]        # the subset whose compute actually runs
+    live_logical: Tuple[int, ...]  # logical page/chunk indices of `live`
+
+    def live_domains(
+        self, policy: str, num_kv_heads: int, num_domains: int
+    ) -> Tuple[int, ...]:
+        return tuple(sorted({
+            layout_lib.domain_of_page(
+                pid, self.head, policy, num_kv_heads, num_domains)
+            for pid in self.live
+        }))
+
+
+@dataclasses.dataclass
+class AccessTrace:
+    kernel: str
+    policy: str
+    num_kv_heads: int
+    num_domains: int
+    cells: List[CellTrace]
+
+    @property
+    def touched_pages(self) -> int:
+        return sum(len(c.touched) for c in self.cells)
+
+    @property
+    def live_pages(self) -> int:
+        return sum(len(c.live) for c in self.cells)
+
+    def assert_domain_pure(self) -> "AccessTrace":
+        """Every cell's live fetches read from at most one domain."""
+        for c in self.cells:
+            doms = c.live_domains(
+                self.policy, self.num_kv_heads, self.num_domains)
+            if len(doms) > 1:
+                raise DomainPurityError(
+                    f"{self.kernel}: cell {c.cell} (head {c.head}) reads "
+                    f"pages {c.live} from domains {doms} under "
+                    f"{self.policy!r} — a split straddles the fabric"
+                )
+        return self
+
+    def assert_domain_local(self) -> "AccessTrace":
+        """Every cell's live fetches read the cell's *own* domain — the
+        stronger property HEAD_ALIGNED promises (purity plus locality)."""
+        self.assert_domain_pure()
+        for c in self.cells:
+            doms = c.live_domains(
+                self.policy, self.num_kv_heads, self.num_domains)
+            if doms and doms != (c.cell_domain,):
+                raise DomainPurityError(
+                    f"{self.kernel}: cell {c.cell} (domain "
+                    f"{c.cell_domain}) reads pages {c.live} homed in "
+                    f"domain {doms[0]} under {self.policy!r} — pure but "
+                    "not local"
+                )
+        return self
+
+
+def _pt_lookup(pt: np.ndarray, idx) -> int:
+    # Index maps return jnp scalars (jnp.minimum); concretize for numpy.
+    return int(np.asarray(idx))
+
+
+def trace_paged_decode(
+    page_table: np.ndarray,
+    lengths: Sequence[int],
+    *,
+    num_kv_heads: int,
+    page_size: int,
+    num_splits: int = 1,
+    window: Optional[int] = None,
+    policy: str = layout_lib.HEAD_ALIGNED,
+    num_domains: int = 2,
+) -> AccessTrace:
+    """Replay the paged decode kernel's K/V index map (one-pass or
+    split-K) over ``page_table``/``lengths`` and return the per-cell
+    access trace. ``num_splits > 1`` additionally cross-checks every
+    cell's live logical pages against ``decode_split_ranges`` — the same
+    partition ``split_ranges_domain_aligned`` certifies analytically."""
+    pt = np.asarray(page_table, dtype=np.int64)
+    lens = np.asarray(lengths, dtype=np.int64)
+    b, max_pages = pt.shape
+    ranges = layout_lib.decode_split_ranges(max_pages, num_splits)
+    cells: List[CellTrace] = []
+
+    def live_at(batch: int, p_logical: int) -> bool:
+        return bool(decode_common.chunk_relevant(
+            p_logical * page_size, page_size, int(lens[batch]), window))
+
+    if len(ranges) == 1:
+        kernel = "paged_flash_decode"
+        for b_ in range(b):
+            for h_ in range(num_kv_heads):
+                touched, live, logical = [], [], []
+                for p_ in range(max_pages):
+                    _, pid, _, _ = paged_kv_index_map(b_, h_, p_, pt, lens)
+                    pid = _pt_lookup(pt, pid)
+                    touched.append(pid)
+                    if live_at(b_, p_):
+                        live.append(pid)
+                        logical.append(p_)
+                cells.append(CellTrace(
+                    cell=(b_, h_), head=h_,
+                    cell_domain=layout_lib.domain_of_head(
+                        h_, num_kv_heads, num_domains),
+                    touched=tuple(touched), live=tuple(live),
+                    live_logical=tuple(logical),
+                ))
+    else:
+        kernel = "paged_flash_decode_split"
+        pps = ranges[0][1] - ranges[0][0]
+        kv_index = split_kv_index_map(pps, max_pages)
+        for b_ in range(b):
+            for h_ in range(num_kv_heads):
+                for s_, (start, end) in enumerate(ranges):
+                    touched, live, logical = [], [], []
+                    for j_ in range(pps):
+                        _, pid, _, _ = kv_index(b_, h_, s_, j_, pt, lens)
+                        pid = _pt_lookup(pt, pid)
+                        touched.append(pid)
+                        p_global = s_ * pps + j_
+                        if p_global < max_pages and live_at(b_, p_global):
+                            live.append(pid)
+                            logical.append(p_global)
+                    # The kernel's live walk must be exactly this split's
+                    # slice of the plan-layer partition, truncated to the
+                    # sequence's live pages (the relevance predicate).
+                    live_pages = -(-int(lens[b_]) // page_size)
+                    expect = tuple(
+                        p for p in range(start, min(end, max_pages))
+                        if live_at(b_, p)
+                    )
+                    if tuple(logical) != expect:
+                        raise DomainPurityError(
+                            f"{kernel}: cell {(b_, h_, s_)} walks logical "
+                            f"pages {tuple(logical)}; decode_split_ranges "
+                            f"says {expect} (live={live_pages})"
+                        )
+                    cells.append(CellTrace(
+                        cell=(b_, h_, s_), head=h_,
+                        cell_domain=layout_lib.domain_of_head(
+                            h_, num_kv_heads, num_domains),
+                        touched=tuple(touched), live=tuple(live),
+                        live_logical=tuple(logical),
+                    ))
+    return AccessTrace(
+        kernel=kernel, policy=policy, num_kv_heads=num_kv_heads,
+        num_domains=num_domains, cells=cells,
+    )
+
+
+def trace_paged_prefill(
+    page_table: np.ndarray,
+    prefix_lens: Sequence[int],
+    *,
+    num_kv_heads: int,
+    page_size: int,
+    num_tail: int = 1,
+    policy: str = layout_lib.HEAD_ALIGNED,
+    num_domains: int = 2,
+) -> AccessTrace:
+    """Replay the paged prefill kernel's prefix-page index map: grid
+    (b, hkv, mp + num_tail). Steps past the prefix (the dense-tail sweep)
+    clamp to the last table slot — recorded as touched, never live."""
+    pt = np.asarray(page_table, dtype=np.int64)
+    plens = np.asarray(prefix_lens, dtype=np.int64)
+    b, mp = pt.shape
+    page_idx = prefix_page_index_map(mp)
+    cells: List[CellTrace] = []
+    for b_ in range(b):
+        live_prefix = -(-int(plens[b_]) // page_size)
+        for h_ in range(num_kv_heads):
+            touched, live, logical = [], [], []
+            for s_ in range(mp + num_tail):
+                _, pid, _, _ = page_idx(b_, h_, s_, pt, plens, None)
+                pid = _pt_lookup(pt, pid)
+                touched.append(pid)
+                if s_ < live_prefix:
+                    live.append(pid)
+                    logical.append(s_)
+            cells.append(CellTrace(
+                cell=(b_, h_), head=h_,
+                cell_domain=layout_lib.domain_of_head(
+                    h_, num_kv_heads, num_domains),
+                touched=tuple(touched), live=tuple(live),
+                live_logical=tuple(logical),
+            ))
+    return AccessTrace(
+        kernel="paged_prefill", policy=policy, num_kv_heads=num_kv_heads,
+        num_domains=num_domains, cells=cells,
+    )
+
+
+def trace_dense_split_decode(
+    lengths: Sequence[int],
+    *,
+    capacity: int,
+    chunk: int,
+    num_kv_heads: int,
+    num_splits: int,
+    window: Optional[int] = None,
+    num_domains: int = 2,
+) -> AccessTrace:
+    """Dense split-K analogue: the KV stripe has no page table (logical
+    chunk == physical chunk), so the trace proves the index map walks
+    exactly the ``decode_split_ranges`` partition with the tail overhang
+    clamped. Domains follow the head-first grid (dense stripes are sharded
+    by head), so the HEAD_ALIGNED checks apply unchanged."""
+    lens = np.asarray(lengths, dtype=np.int64)
+    num_chunks = -(-capacity // chunk)
+    ranges = layout_lib.decode_split_ranges(num_chunks, num_splits)
+    if len(ranges) < 2:
+        raise ValueError("dense split trace needs an effective split > 1")
+    cps = ranges[0][1] - ranges[0][0]
+    kv_index = split_chunk_index_map(cps, num_chunks)
+    cells: List[CellTrace] = []
+    for b_ in range(len(lens)):
+        for h_ in range(num_kv_heads):
+            for s_, (start, end) in enumerate(ranges):
+                touched, live, logical = [], [], []
+                for j_ in range(cps):
+                    _, _, c_idx, _ = kv_index(b_, h_, s_, j_)
+                    c_idx = int(np.asarray(c_idx))
+                    touched.append(c_idx)
+                    c_global = s_ * cps + j_
+                    if c_global < num_chunks and bool(
+                        decode_common.chunk_relevant(
+                            c_global * chunk, chunk, int(lens[b_]), window)
+                    ):
+                        live.append(c_idx)
+                        logical.append(c_global)
+                if logical and not (
+                    start <= logical[0] and logical[-1] < end
+                ):
+                    raise DomainPurityError(
+                        f"flash_decode_split: cell {(b_, h_, s_)} walked "
+                        f"chunks {logical} outside its range {(start, end)}"
+                    )
+                cells.append(CellTrace(
+                    cell=(b_, h_, s_), head=h_,
+                    cell_domain=layout_lib.domain_of_head(
+                        h_, num_kv_heads, num_domains),
+                    touched=tuple(touched), live=tuple(live),
+                    live_logical=tuple(logical),
+                ))
+    return AccessTrace(
+        kernel="flash_decode_split", policy=layout_lib.HEAD_ALIGNED,
+        num_kv_heads=num_kv_heads, num_domains=num_domains, cells=cells,
+    )
+
+
+def trace_plan(
+    plan,
+    page_table: np.ndarray,
+    lengths: Sequence[int],
+    *,
+    num_kv_heads: int,
+    num_domains: int = 2,
+    window: Optional[int] = None,
+) -> AccessTrace:
+    """Trace whatever kernel an :class:`repro.kernels.plan.AttentionPlan`
+    would launch for this page table (paged one-pass or split-K decode),
+    using the plan's own ``page_size``/``num_splits``/``placement``."""
+    policy = getattr(plan, "placement", None) or layout_lib.HEAD_ALIGNED
+    return trace_paged_decode(
+        page_table, lengths,
+        num_kv_heads=num_kv_heads,
+        page_size=plan.page_size,
+        num_splits=max(1, int(plan.num_splits or 1)),
+        window=window if window is not None else plan.window,
+        policy=policy,
+        num_domains=num_domains,
+    )

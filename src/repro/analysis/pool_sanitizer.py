@@ -1,0 +1,237 @@
+"""Shadow state machine over :class:`repro.cache.pool.PagePool`.
+
+ASan for the paged KV cache: a :class:`ShadowPool` attaches to a live pool
+instance and mirrors every page's lifecycle through an independent
+FREE → OWNED → SHARED state machine, checking each transition *before* the
+real pool mutates and cross-checking the shadow refcounts against the
+pool's after every operation. It catches the misuse classes the pool's own
+asserts cannot see from inside one call:
+
+  * **double free** — a ``decref``/``release`` on a page the shadow already
+    holds at refcount zero,
+  * **use-after-release** — appending to / forking / increffing a released
+    sequence or freed page, or (via :meth:`check_tables`) a live engine
+    page table still pointing at a freed page,
+  * **null-page writes** — a token append that would land data in the
+    reserved page 0 (the unconditional-scatter sink; writing real data
+    there corrupts every inactive row),
+  * **COW violations** — an append into a ``refcount > 1`` (SHARED) tail
+    that does not come back with the ``(src, dst)`` copy instruction,
+  * **refcount desync / leaks** — the shadow and the pool disagreeing, or
+    :meth:`check_leaks` finding references nobody claims at teardown.
+
+Attachment patches *instance* attributes only (the class is untouched), so
+the pool's own compound operations (``allocate_sequence``, ``fork``,
+``release``) route their internal ``self.alloc``/``incref``/``decref``
+calls through the shadow automatically. ``tests/conftest.py`` attaches a
+shadow to every pool constructed in the scheduler/serving/paged-cache
+suites, so the whole tier-1 serving surface runs sanitized.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.cache.pool import (
+    NULL_PAGE,
+    PagePool,
+    PoolError,
+    SequencePages,
+)
+
+__all__ = [
+    "CowViolationError",
+    "DoubleFreeError",
+    "NullPageWriteError",
+    "PoolSanitizerError",
+    "ShadowDesyncError",
+    "ShadowPool",
+    "UseAfterReleaseError",
+    "attach",
+]
+
+# Shadow page states (derived: FREE rc==0, OWNED rc==1, SHARED rc>1).
+FREE = "FREE"
+OWNED = "OWNED"
+SHARED = "SHARED"
+
+
+class PoolSanitizerError(PoolError):
+    """Base class: the shadow machine observed an illegal transition."""
+
+
+class DoubleFreeError(PoolSanitizerError):
+    pass
+
+
+class UseAfterReleaseError(PoolSanitizerError):
+    pass
+
+
+class NullPageWriteError(PoolSanitizerError):
+    pass
+
+
+class CowViolationError(PoolSanitizerError):
+    pass
+
+
+class ShadowDesyncError(PoolSanitizerError):
+    """Shadow and pool refcounts disagree — some path mutated refcounts
+    without going through the instrumented primitives."""
+
+
+class ShadowPool:
+    """Attach with :func:`attach` (or construct directly); detach with
+    :meth:`detach`. While attached, every pool operation is validated."""
+
+    def __init__(self, pool: PagePool):
+        self.pool = pool
+        # Mirror whatever state the pool is in at attach time.
+        self._shadow: List[int] = list(pool._refcount)
+        self.ops = 0  # transitions observed (for test assertions)
+        self._orig = {
+            "alloc": pool.alloc,
+            "incref": pool.incref,
+            "decref": pool.decref,
+            "append_token": pool.append_token,
+        }
+        pool.alloc = self._alloc
+        pool.incref = self._incref
+        pool.decref = self._decref
+        pool.append_token = self._append_token
+        self._attached = True
+
+    # -- state queries ------------------------------------------------------
+
+    def state(self, pid: int) -> str:
+        rc = self._shadow[pid]
+        if pid == NULL_PAGE:
+            return SHARED  # permanently pinned, never writable
+        return FREE if rc == 0 else (OWNED if rc == 1 else SHARED)
+
+    # -- instrumented primitives -------------------------------------------
+
+    def _alloc(self) -> int:
+        pid = self._orig["alloc"]()  # may raise OutOfPages: no shadow change
+        if self._shadow[pid] != 0:
+            raise ShadowDesyncError(
+                f"pool allocated page {pid} the shadow holds at "
+                f"rc={self._shadow[pid]}"
+            )
+        self._shadow[pid] = 1
+        self._after()
+        return pid
+
+    def _incref(self, pid: int) -> None:
+        if pid != NULL_PAGE and self._shadow[pid] <= 0:
+            raise UseAfterReleaseError(f"incref on FREE page {pid}")
+        self._orig["incref"](pid)
+        if pid != NULL_PAGE:
+            self._shadow[pid] += 1
+        self._after()
+
+    def _decref(self, pid: int) -> bool:
+        if pid != NULL_PAGE and self._shadow[pid] <= 0:
+            raise DoubleFreeError(f"decref on FREE page {pid}")
+        freed = self._orig["decref"](pid)
+        if pid != NULL_PAGE:
+            self._shadow[pid] -= 1
+        self._after()
+        return freed
+
+    def _append_token(
+        self, seq: SequencePages
+    ) -> Tuple[int, int, Optional[Tuple[int, int]]]:
+        if seq.released:
+            raise UseAfterReleaseError(
+                "append_token on a released sequence"
+            )
+        for pid in seq.pages:
+            if pid != NULL_PAGE and self._shadow[pid] <= 0:
+                raise UseAfterReleaseError(
+                    f"append_token on a sequence holding FREE page {pid}"
+                )
+        opens_page = seq.length % self.pool.page_size == 0
+        tail = None if opens_page else seq.tail_page()
+        if tail == NULL_PAGE:
+            raise NullPageWriteError(
+                "append would write a token into the reserved null page"
+            )
+        shared_tail = tail is not None and self.state(tail) == SHARED
+        pid, off, cow = self._orig["append_token"](seq)
+        if pid == NULL_PAGE:
+            raise NullPageWriteError(
+                "append_token landed in the reserved null page"
+            )
+        if shared_tail and cow != (tail, pid):
+            raise CowViolationError(
+                f"append into SHARED page {tail} returned cow={cow}; "
+                f"expected ({tail}, {pid}) copy instruction"
+            )
+        if not shared_tail and cow is not None:
+            raise CowViolationError(
+                f"spurious COW {cow} on exclusive/new page append"
+            )
+        self._after()
+        return pid, off, cow
+
+    # -- cross-checks -------------------------------------------------------
+
+    def _after(self) -> None:
+        self.ops += 1
+        self.assert_sync()
+
+    def assert_sync(self) -> None:
+        """Raise :class:`ShadowDesyncError` unless shadow and pool agree
+        on every refcount. Cheap (one list compare) — runs after every
+        instrumented op and again at fixture teardown."""
+        if self._shadow != self.pool._refcount:
+            bad = {
+                pid: (self.pool._refcount[pid], self._shadow[pid])
+                for pid in range(self.pool.num_pages)
+                if self.pool._refcount[pid] != self._shadow[pid]
+            }
+            raise ShadowDesyncError(
+                f"shadow/pool refcount mismatch (pool, shadow): {bad}"
+            )
+
+    def check_tables(self, tables: Iterable[Sequence[int]]) -> None:
+        """Use-after-release sweep: every page id a live table references
+        must be allocated in the shadow (the null page is the sanctioned
+        placeholder for inactive rows)."""
+        for table in tables:
+            for pid in table:
+                pid = int(pid)
+                if pid != NULL_PAGE and self._shadow[pid] <= 0:
+                    raise UseAfterReleaseError(
+                        f"live page table references FREE page {pid}"
+                    )
+
+    def check_leaks(
+        self, live_refs: Optional[Dict[int, int]] = None
+    ) -> None:
+        """Shadow-side leak audit: sync with the pool, then delegate to
+        :meth:`PagePool.check_leaks`."""
+        if self._shadow != self.pool._refcount:
+            self._after()  # raises ShadowDesyncError with detail
+        self.pool.check_leaks(live_refs)
+
+    def detach(self) -> None:
+        """Restore the pool's unwrapped methods (idempotent)."""
+        if not self._attached:
+            return
+        for name in self._orig:
+            # The originals are bound methods; deleting the instance attr
+            # falls back to the class implementation, which is identical.
+            try:
+                delattr(self.pool, name)
+            except AttributeError:
+                pass
+        self._attached = False
+
+
+def attach(pool: PagePool) -> ShadowPool:
+    """Instrument ``pool`` in place; returns the shadow for queries and
+    teardown checks."""
+    return ShadowPool(pool)

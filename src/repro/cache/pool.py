@@ -28,14 +28,40 @@ needs.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 NULL_PAGE = 0
 
 
-class OutOfPages(RuntimeError):
+class PoolError(RuntimeError):
+    """Base class for page-pool misuse; every typed pool error derives
+    from it so callers (and the sanitizer) can catch the family."""
+
+
+class OutOfPages(PoolError):
     """Raised when an allocation cannot be satisfied; the serving engine
     reacts by evicting prefix-cache pages and/or preempting sequences."""
+
+
+class SequenceReleasedError(PoolError):
+    """An operation (release/append/fork) hit a sequence whose pages were
+    already returned to the pool. Double releases used to be silent no-ops
+    — which is exactly how refcount desyncs hide — so they are typed
+    errors now."""
+
+
+class RefcountLeakError(PoolError):
+    """:meth:`PagePool.check_leaks` found pages whose refcounts do not
+    match the live references the caller claims exist (engine teardown
+    left sequences or prefix entries holding pages)."""
+
+    def __init__(self, leaks: Dict[int, Tuple[int, int]]):
+        self.leaks = leaks
+        detail = ", ".join(
+            f"page {pid}: rc={actual} expected={expected}"
+            for pid, (actual, expected) in sorted(leaks.items())
+        )
+        super().__init__(f"refcount leaks: {detail}")
 
 
 @dataclasses.dataclass
@@ -44,6 +70,7 @@ class SequencePages:
 
     pages: List[int]
     length: int = 0  # tokens currently stored
+    released: bool = False
 
     def num_pages(self) -> int:
         return len(self.pages)
@@ -154,6 +181,8 @@ class PagePool:
         emitted when the token lands in a shared page (copy-on-write). A new
         page is allocated when the token starts a fresh page boundary.
         """
+        if seq.released:
+            raise SequenceReleasedError("append_token on a released sequence")
         pos = seq.length
         cow = None
         if pos % self.page_size == 0:
@@ -172,16 +201,65 @@ class PagePool:
         """A new sequence sharing every page of ``seq`` (beam/parallel
         sampling). All pages — including the partial tail — are shared;
         the first divergent append triggers COW on the tail."""
+        if seq.released:
+            raise SequenceReleasedError("fork of a released sequence")
         for pid in seq.pages:
             self.incref(pid)
         return SequencePages(pages=list(seq.pages), length=seq.length)
 
     def release(self, seq: SequencePages) -> int:
         """Drop the sequence's references; returns #pages actually freed
-        (shared pages survive under their remaining references)."""
+        (shared pages survive under their remaining references).
+
+        Releasing an already-released sequence raises
+        :class:`SequenceReleasedError` — a silent no-op here is how a
+        double-decref elsewhere stays hidden until pages alias."""
+        if seq.released:
+            raise SequenceReleasedError(
+                "release of an already-released sequence"
+            )
         freed = 0
         for pid in seq.pages:
             freed += bool(self.decref(pid))
         seq.pages = []
         seq.length = 0
+        seq.released = True
         return freed
+
+    # -- invariants ---------------------------------------------------------
+
+    def check_leaks(
+        self,
+        live_refs: Optional[Dict[int, int]] = None,
+        raise_on_leak: bool = True,
+    ) -> Dict[int, Tuple[int, int]]:
+        """Verify every page's refcount against the caller's claimed live
+        references.
+
+        ``live_refs`` maps page id -> number of references the caller still
+        legitimately holds (live sequences' page tables, prefix-cache
+        entries). Omitted pages are expected free. The null page's
+        permanent pin is accounted for automatically. Returns
+        ``{pid: (actual_rc, expected_rc)}`` for every mismatch; raises
+        :class:`RefcountLeakError` on mismatch unless ``raise_on_leak`` is
+        False. Also validates free-list consistency (a freed page must have
+        rc == 0 and appear exactly once)."""
+        expected = dict(live_refs or {})
+        expected[NULL_PAGE] = expected.get(NULL_PAGE, 0) + 1
+        leaks: Dict[int, Tuple[int, int]] = {}
+        for pid in range(self.num_pages):
+            want = expected.get(pid, 0)
+            have = self._refcount[pid]
+            if have != want:
+                leaks[pid] = (have, want)
+        free_set = set(self._free)
+        if len(free_set) != len(self._free):  # duplicate free-list entry
+            dupes = sorted(p for p in free_set if self._free.count(p) > 1)
+            for pid in dupes:
+                leaks[pid] = (self._refcount[pid], -self._free.count(pid))
+        for pid in free_set:
+            if self._refcount[pid] != 0:
+                leaks.setdefault(pid, (self._refcount[pid], 0))
+        if leaks and raise_on_leak:
+            raise RefcountLeakError(leaks)
+        return leaks

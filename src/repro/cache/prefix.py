@@ -123,6 +123,23 @@ class PrefixCache:
                 break
         return freed
 
+    def pages(self) -> List[int]:
+        """Physical pages currently pinned by cache entries (one list item
+        per entry — a page cached under several chain hashes appears once
+        per entry, matching the references held)."""
+        return list(self._entries.values())
+
+    def drain(self) -> int:
+        """Teardown: drop every entry and its pool reference regardless of
+        sharing (unlike :meth:`evict`, which skips live pages). Returns
+        pages actually freed. After this the cache holds no references, so
+        ``pool.check_leaks`` sees only the live sequences'."""
+        freed = 0
+        for h in list(self._entries):
+            pid = self._entries.pop(h)
+            freed += bool(self.pool.decref(pid))
+        return freed
+
     @property
     def hit_rate(self) -> float:
         return self.hits / self.queries if self.queries else 0.0

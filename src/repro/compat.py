@@ -21,7 +21,9 @@ Supported-JAX policy (see ROADMAP.md): oldest supported is 0.4.37 (the
 container's pinned toolchain); the shims are written against the 0.5-0.7
 renames so a newer host works unmodified. No other module may reference
 ``CompilerParams`` / ``TPUCompilerParams`` / ``AxisType`` directly —
-``tests/test_mapping_resolver.py`` greps the tree to enforce this.
+the ``compat-only-versioned-jax`` linter rule (``repro.analysis.lint``,
+run by CI as ``python -m repro.analysis --strict`` and by tier-1 via
+``tests/test_mapping_resolver.py``) enforces this over the AST.
 """
 
 from __future__ import annotations

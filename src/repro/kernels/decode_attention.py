@@ -43,6 +43,19 @@ from repro.kernels import decode_common
 NEG_INF = decode_common.NEG_INF
 
 
+def split_chunk_index_map(cps, num_chunks):
+    """K/V BlockSpec index map of the dense split-K kernel for ``cps``
+    chunks per split over ``num_chunks`` total. The tail split's overhang
+    clamps to the last real chunk — the DMA must name a valid block; the
+    kernel's range test skips its compute. Module-level so the access
+    tracer replays the exact function handed to ``pallas_call``."""
+
+    def kv_index(b_, h_, s_, j_):
+        return (b_, h_, jnp.minimum(s_ * cps + j_, num_chunks - 1), 0)
+
+    return kv_index
+
+
 def _decode_kernel(
     len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
     *, scale, softcap, window, chunk, num_chunks, group_padded,
@@ -209,10 +222,7 @@ def _flash_decode_split(
     num_splits = len(ranges)
     cps = ranges[0][1] - ranges[0][0]  # chunks per split (tail may be short)
 
-    def kv_index(b_, h_, s_, j_):
-        # Clamp the tail split's overhang to the last real chunk — the DMA
-        # must name a valid block; the kernel's range test skips its compute.
-        return (b_, h_, jnp.minimum(s_ * cps + j_, num_chunks - 1), 0)
+    kv_index = split_chunk_index_map(cps, num_chunks)
 
     fn = pl.pallas_call(
         functools.partial(

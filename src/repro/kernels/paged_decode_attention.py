@@ -59,6 +59,27 @@ from repro.kernels import decode_common
 NEG_INF = decode_common.NEG_INF
 
 
+def paged_kv_index_map(b_, h_, p_, pt, ln):
+    """K/V BlockSpec index map of the one-pass paged kernel: grid cell
+    (batch, kv-head, logical page) DMAs physical page ``pt[b, p]`` of head
+    ``h``. Module-level (not a closure) so the domain-purity access tracer
+    (``repro.analysis.access_trace``) replays the *same* function the
+    kernel hands to ``pallas_call``."""
+    return (h_, pt[b_, p_], 0, 0)
+
+
+def split_kv_index_map(pps, max_pages):
+    """K/V index map of the split-K paged kernel for ``pps`` pages per
+    split over a ``max_pages``-wide table. The tail split's overhang is
+    clamped to the last table slot — the DMA must name a valid page; the
+    kernel's range test skips its compute."""
+
+    def kv_index(b_, h_, s_, j_, pt, ln):
+        return (h_, pt[b_, jnp.minimum(s_ * pps + j_, max_pages - 1)], 0, 0)
+
+    return kv_index
+
+
 def _paged_decode_kernel(
     pt_ref, len_ref,            # scalar-prefetch: (B, max_pages), (B,)
     q_ref, k_ref, v_ref, o_ref,
@@ -194,14 +215,8 @@ def paged_flash_decode(
             grid=(b, hkv, max_pages),
             in_specs=[
                 pl.BlockSpec((1, 1, gp, d), lambda b_, h_, p_, pt, ln: (b_, h_, 0, 0)),
-                pl.BlockSpec(
-                    (1, 1, page_size, d),
-                    lambda b_, h_, p_, pt, ln: (h_, pt[b_, p_], 0, 0),
-                ),
-                pl.BlockSpec(
-                    (1, 1, page_size, d),
-                    lambda b_, h_, p_, pt, ln: (h_, pt[b_, p_], 0, 0),
-                ),
+                pl.BlockSpec((1, 1, page_size, d), paged_kv_index_map),
+                pl.BlockSpec((1, 1, page_size, d), paged_kv_index_map),
             ],
             out_specs=pl.BlockSpec(
                 (1, 1, gp, d), lambda b_, h_, p_, pt, ln: (b_, h_, 0, 0)
@@ -245,10 +260,7 @@ def _paged_flash_decode_split(
     num_splits = len(ranges)
     pps = ranges[0][1] - ranges[0][0]  # pages per split (tail may be short)
 
-    def kv_index(b_, h_, s_, j_, pt, ln):
-        # Clamp the tail split's overhang to the last table slot — the DMA
-        # must name a valid page; the kernel's range test skips its compute.
-        return (h_, pt[b_, jnp.minimum(s_ * pps + j_, max_pages - 1)], 0, 0)
+    kv_index = split_kv_index_map(pps, max_pages)
 
     fn = pl.pallas_call(
         functools.partial(

@@ -48,6 +48,21 @@ from repro import compat
 NEG_INF = -1e30
 
 
+def prefix_page_index_map(mp):
+    """K/V prefix-page BlockSpec index map for an ``mp``-column page table:
+    grid cell (batch, kv-head, step) DMAs physical page ``pt[b, s]`` of
+    head ``h``. Tail-sweep steps (``s >= mp``) clamp to the last table
+    entry — the copy still issues (a valid physical page; the engine
+    null-pads) but compute is gated off by the phase predicate.
+    Module-level so the domain-purity access tracer replays the exact
+    function handed to ``pallas_call``."""
+
+    def page_idx(b_, h_, s_, pt, plen, tlen):
+        return (h_, pt[b_, jnp.minimum(s_, mp - 1)], 0, 0)
+
+    return page_idx
+
+
 def _paged_prefill_kernel(
     pt_ref, plen_ref, tlen_ref,   # scalar-prefetch: (B, mp), (B,), (B,)
     q_ref, kp_ref, vp_ref, kt_ref, vt_ref, o_ref,
@@ -213,11 +228,7 @@ def paged_flash_prefill(
         page_size=page_size, num_prefix=mp, num_tail=num_tail, seq_tail=st_p,
     )
 
-    def page_idx(b_, h_, s_, pt, plen, tlen):
-        # Tail steps clamp to the last table entry: the copy still issues
-        # (a valid physical page — the engine null-pads) but compute is
-        # gated off by the phase predicate.
-        return (h_, pt[b_, jnp.minimum(s_, mp - 1)], 0, 0)
+    page_idx = prefix_page_index_map(mp)
 
     def tail_idx(b_, h_, s_, pt, plen, tlen):
         return (b_, h_, jnp.clip(s_ - mp, 0, num_tail - 1), 0)

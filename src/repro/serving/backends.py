@@ -38,7 +38,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.pool import NULL_PAGE, OutOfPages, PagePool, SequencePages
+from repro.cache.pool import (
+    NULL_PAGE,
+    OutOfPages,
+    PagePool,
+    SequencePages,
+    SequenceReleasedError,
+)
 from repro.cache.prefix import PrefixCache, page_hashes
 from repro.configs.base import ModelConfig
 from repro.kernels import plan as plan_lib
@@ -262,6 +268,14 @@ class DenseBackend(_Backend):
     def release(self, row: int) -> None:
         self.active[row] = False
         self.slot_req[row] = None
+
+    def shutdown(self) -> None:
+        """Teardown: mark every slot free. Dense rows own no pool pages,
+        so there is nothing to leak-check — this exists so LLMEngine.close
+        is backend-agnostic."""
+        for row in range(self.rows):
+            self.active[row] = False
+            self.slot_req[row] = None
 
     @property
     def mapping(self):
@@ -842,12 +856,53 @@ class PagedBackend(_Backend):
 
     def release(self, row: int) -> None:
         state = self.seqs[row]
+        if state is None:
+            # Double release used to AttributeError (or, worse, silently
+            # pass once pool.release no-op'd); surface it as the typed
+            # pool error so the sanitizer and callers see one family.
+            raise SequenceReleasedError(
+                f"release of row {row}, which holds no sequence"
+            )
         # Pages the prefix cache references survive; the rest free now.
         self.pool.release(state.pages)
         self.active[row] = False
         self.seqs[row] = None
         self.page_table[row] = NULL_PAGE
         self.lengths[row] = 0
+
+    # -- teardown / invariants ---------------------------------------------
+
+    def live_page_refs(self) -> Dict[int, int]:
+        """Pool references this backend can account for: one per live
+        sequence page-table entry plus one per prefix-cache entry. The
+        pool's refcounts must equal exactly this at any quiescent point."""
+        refs: Dict[int, int] = {}
+        for state in self.seqs:
+            if state is None:
+                continue
+            for pid in state.pages.pages:
+                refs[pid] = refs.get(pid, 0) + 1
+        for pid in self.prefix.pages():
+            refs[pid] = refs.get(pid, 0) + 1
+        return refs
+
+    def check_leaks(self, raise_on_leak: bool = True):
+        """Audit the pool against :meth:`live_page_refs`; raises
+        :class:`repro.cache.pool.RefcountLeakError` on any page whose
+        refcount the live rows + prefix cache cannot explain."""
+        return self.pool.check_leaks(
+            self.live_page_refs(), raise_on_leak=raise_on_leak
+        )
+
+    def shutdown(self) -> None:
+        """Teardown: release every live row, drain the prefix cache, then
+        prove the pool is fully free. A leak here means some path dropped
+        a SequencePages without releasing it."""
+        for row in range(self.rows):
+            if self.seqs[row] is not None:
+                self.release(row)
+        self.prefix.drain()
+        self.pool.check_leaks()
 
     # -- introspection -----------------------------------------------------
 

@@ -243,6 +243,14 @@ class LLMEngine:
                 raise err
         return done
 
+    def close(self) -> None:
+        """Teardown: release every live row and (for the paged backend)
+        prove the page pool is fully free again. Raises
+        :class:`repro.cache.pool.RefcountLeakError` if any path dropped a
+        sequence without releasing its pages — serving tests call this so
+        leaks fail loudly instead of surviving to the next admission."""
+        self.backend.shutdown()
+
     def stats(self) -> SchedulerStats:
         b = self.backend
         prefix = b.prefix_stats() if hasattr(b, "prefix_stats") else {}

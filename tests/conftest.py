@@ -1,0 +1,45 @@
+"""Shared fixtures: page-pool sanitizer instrumentation.
+
+Every :class:`PagePool` constructed inside the scheduler / serving /
+paged-cache suites gets a :class:`repro.analysis.pool_sanitizer.ShadowPool`
+attached at construction, so the whole serving surface runs with
+double-free / use-after-release / COW / desync checking on — the pool
+misuse classes that are invisible to output-comparison tests. Teardown
+re-verifies shadow/pool agreement (a desync there means some code path
+mutated refcounts around the instrumented primitives).
+
+``test_pool_sanitizer`` is deliberately *not* in the list: it constructs
+pools with intentional violations and manages its own shadows.
+"""
+
+import pytest
+
+SANITIZED_MODULES = {"test_scheduler", "test_serving", "test_paged_cache"}
+
+
+@pytest.fixture(autouse=True)
+def _page_pool_sanitizer(request, monkeypatch):
+    module = getattr(request.node, "module", None)
+    name = getattr(module, "__name__", "").rpartition(".")[2]
+    if name not in SANITIZED_MODULES:
+        yield
+        return
+
+    from repro.analysis.pool_sanitizer import attach
+    from repro.cache.pool import PagePool
+
+    shadows = []
+    orig_init = PagePool.__init__
+
+    def instrumented_init(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        shadows.append(attach(self))
+
+    monkeypatch.setattr(PagePool, "__init__", instrumented_init)
+    yield
+    # Live engines at test end legitimately still hold pages, so this is
+    # a consistency check, not a zero-leak check — tests that want the
+    # leak proof call engine.close() / backend.check_leaks() themselves.
+    for shadow in shadows:
+        shadow.assert_sync()
+        shadow.detach()

@@ -1,0 +1,172 @@
+"""Rule coverage for the NUMA-contract linter (repro.analysis.lint).
+
+Two halves per the PR-6 acceptance bar:
+  * every registered rule demonstrably *fires* on a known-bad fixture
+    snippet (linted via ``lint_source`` at a virtual path, so no bad file
+    ever exists in the tree), and
+  * the live tree is *clean*: ``python -m repro.analysis --strict``
+    exits 0.
+"""
+
+import pytest
+
+from repro.analysis import RULES, lint_source, run_rules
+from repro.analysis.lint import main
+
+
+def _fires(source, path, rule):
+    vs = lint_source(source, path, rules=[rule])
+    assert vs, f"rule {rule} did not fire on its bad fixture"
+    assert all(v.rule == rule for v in vs)
+    return vs
+
+
+# --- each rule fires on its bad fixture --------------------------------------
+
+
+def test_versioned_jax_rule_fires():
+    bad = "from jax.experimental.pallas import tpu\np = tpu.TPUCompilerParams()\n"
+    vs = _fires(bad, "src/repro/kernels/evil.py", "compat-only-versioned-jax")
+    assert "TPUCompilerParams" in vs[0].message
+
+
+def test_versioned_jax_rule_ignores_strings_and_compat():
+    # The old text grep would have flagged the docstring; the AST rule
+    # only sees real identifiers.
+    doc = '"""mentions TPUCompilerParams in prose only"""\nx = 1\n'
+    assert lint_source(doc, "src/repro/kernels/doc.py",
+                       rules=["compat-only-versioned-jax"]) == []
+    inside = "import jax\np = jax.AxisType\n"
+    assert lint_source(inside, "src/repro/compat.py",
+                       rules=["compat-only-versioned-jax"]) == []
+
+
+def test_plan_dispatch_rule_fires():
+    bad = "from repro.kernels.ops import resolve_mapping\n" \
+          "mc = resolve_mapping((1, 8, 8, 128, 128, 64))\n"
+    _fires(bad, "src/repro/serving/engine.py", "plan-dispatch-only")
+    # the same source at a non-dispatch path is fine
+    assert lint_source(bad, "src/repro/kernels/plan.py",
+                       rules=["plan-dispatch-only"]) == []
+
+
+def test_plan_dispatch_rule_catches_keywords():
+    bad = "def f(attn):\n    return attn(x, q_offset=3)\n"
+    _fires(bad, "src/repro/models/attention.py", "plan-dispatch-only")
+
+
+def test_legacy_engine_rule_fires():
+    bad = "from repro.serving import ServingEngine\n" \
+          "e = ServingEngine(cfg, params)\n"
+    _fires(bad, "examples/quickstart.py", "no-legacy-engine-construction")
+    # construction inside serving/ (the shims' own home) is allowed
+    assert lint_source(bad, "src/repro/serving/engine.py",
+                       rules=["no-legacy-engine-construction"]) == []
+    # naming the class without calling it (e.g. isinstance) is allowed
+    ref = "from repro.serving import ServingEngine\n" \
+          "ok = isinstance(x, ServingEngine)\n"
+    assert lint_source(ref, "examples/quickstart.py",
+                       rules=["no-legacy-engine-construction"]) == []
+
+
+def test_decode_relevance_rule_fires_on_missing_predicate():
+    bad = "def kernel(length, window):\n" \
+          "    lo = length - window\n" \
+          "    return lo\n"
+    vs = _fires(bad, "src/repro/kernels/decode_attention.py",
+                "decode-relevance-shared")
+    kinds = "\n".join(v.message for v in vs)
+    assert "chunk_relevant" in kinds
+    assert "combine_split_states" in kinds
+    assert "window-edge" in kinds
+
+
+def test_decode_relevance_rule_ignores_other_files():
+    bad = "lo = length - window\n"
+    assert lint_source(bad, "src/repro/kernels/decode_common.py",
+                       rules=["decode-relevance-shared"]) == []
+
+
+def test_pallas_compat_rule_fires_outside_kernels():
+    bad = "import jax.experimental.pallas as pl\n" \
+          "fn = pl.pallas_call(k, out_shape=o)\n"
+    vs = _fires(bad, "src/repro/serving/backends.py",
+                "pallas-call-via-compat")
+    assert "outside src/repro/kernels/" in vs[0].message
+
+
+def test_pallas_compat_rule_fires_on_missing_compiler_params():
+    bad = "import jax.experimental.pallas as pl\n" \
+          "fn = pl.pallas_call(k, out_shape=o)\n"
+    _fires(bad, "src/repro/kernels/newkernel.py", "pallas-call-via-compat")
+    good = (
+        "import jax.experimental.pallas as pl\n"
+        "from repro import compat\n"
+        "fn = pl.pallas_call(k, out_shape=o,\n"
+        "    compiler_params=compat.tpu_compiler_params())\n"
+    )
+    assert lint_source(good, "src/repro/kernels/newkernel.py",
+                       rules=["pallas-call-via-compat"]) == []
+
+
+def test_host_sync_rule_fires():
+    bad = (
+        "import numpy as np\n"
+        "class B:\n"
+        "    def decode(self, tok):\n"
+        "        x = np.asarray(tok)\n"
+        "        n = self.lengths.item()\n"
+        "        self.caches.block_until_ready()\n"
+        "        return x, n\n"
+    )
+    vs = _fires(bad, "src/repro/serving/backends.py",
+                "no-host-sync-in-decode-hot-loop")
+    assert len(vs) == 3  # asarray + item + block_until_ready
+
+
+def test_host_sync_rule_scoped_to_hot_loop():
+    # _advance is the sanctioned sync point: same calls, no violation.
+    ok = (
+        "import numpy as np\n"
+        "class E:\n"
+        "    def _advance(self, tok, logits):\n"
+        "        return np.asarray(logits).item()\n"
+    )
+    assert lint_source(ok, "src/repro/serving/engine.py",
+                       rules=["no-host-sync-in-decode-hot-loop"]) == []
+    # and jnp.asarray in the hot loop is fine (device-side, no sync)
+    ok2 = (
+        "import jax.numpy as jnp\n"
+        "class B:\n"
+        "    def decode(self, tok):\n"
+        "        return jnp.asarray(tok)\n"
+    )
+    assert lint_source(ok2, "src/repro/serving/backends.py",
+                       rules=["no-host-sync-in-decode-hot-loop"]) == []
+
+
+# --- registry / CLI / live tree ----------------------------------------------
+
+
+def test_every_registered_rule_has_a_bad_fixture_test():
+    """Adding a rule without a firing fixture above must fail loudly."""
+    covered = {
+        "compat-only-versioned-jax", "plan-dispatch-only",
+        "no-legacy-engine-construction", "decode-relevance-shared",
+        "pallas-call-via-compat", "no-host-sync-in-decode-hot-loop",
+    }
+    assert set(RULES) == covered
+
+
+def test_live_tree_is_clean():
+    assert run_rules() == []
+
+
+def test_cli_strict_exits_zero(capsys):
+    assert main(["--strict"]) == 0
+    assert "clean" in capsys.readouterr().out
+
+
+def test_cli_rejects_unknown_rule():
+    with pytest.raises(KeyError):
+        run_rules(rules=["no-such-rule"])

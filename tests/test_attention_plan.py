@@ -12,8 +12,6 @@ Covers the PR-3 acceptance criteria directly:
     plan layer.
 """
 
-import pathlib
-
 import jax
 import jax.numpy as jnp
 import pytest
@@ -288,42 +286,11 @@ def test_no_out_of_band_schedule_threading():
     ``PAPER_MAPPINGS``, or hand-roll a ``MappingConfig`` past the plan
     layer. (kernels/ops.py keeps ``q_offset`` only as the oracle/fallback
     argument of ``flash_attention``; the plan layer itself is the one
-    reader of the config policy.)"""
-    root = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
-    forbidden = {
-        "models/attention.py": (
-            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
-            "MappingConfig",
-        ),
-        "models/transformer.py": (
-            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
-            "MappingConfig",
-        ),
-        "serving/engine.py": (
-            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
-            "MappingConfig",
-        ),
-        "serving/backends.py": (
-            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
-            "MappingConfig",
-        ),
-        "serving/scheduler.py": (
-            "q_offset", "mapping_name", "PAPER_MAPPINGS", "resolve_mapping",
-            "MappingConfig",
-        ),
-        # ops dispatches plans; the scoring bodies must live in plan.py.
-        "kernels/ops.py": (
-            "_resolve_mapping_cached", "_resolve_kv_layout_cached",
-            "PAPER_MAPPINGS", "use_interpret",
-        ),
-    }
-    offenders = []
-    for rel, names in forbidden.items():
-        text = (root / rel).read_text()
-        for name in names:
-            if name in text:
-                offenders.append(f"src/repro/{rel}: {name}")
-    assert not offenders, offenders
+    reader of the config policy.) Single implementation: the linter's
+    ``plan-dispatch-only`` rule."""
+    from repro.analysis import run_rules
+
+    assert run_rules(rules=["plan-dispatch-only"]) == []
 
 
 def test_engine_resolves_schedules_through_plans():

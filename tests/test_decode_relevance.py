@@ -10,8 +10,6 @@ smaller than / equal to / straddling the unit, plus the length-0 and
 full-cache edges.
 """
 
-import pathlib
-
 import numpy as np
 import pytest
 
@@ -94,17 +92,10 @@ def test_length_zero_admits_nothing():
 
 
 def test_both_decode_kernels_share_the_predicate():
-    """Grep enforcement: the dense and paged kernels (one-pass and split-K
-    paths alike) must gate units through decode_common.chunk_relevant, not
-    re-derive the arithmetic locally."""
-    root = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
-    for rel in ("kernels/decode_attention.py",
-                "kernels/paged_decode_attention.py"):
-        text = (root / rel).read_text()
-        assert text.count("chunk_relevant") >= 2, (
-            f"{rel}: both the one-pass and split kernels must use "
-            "decode_common.chunk_relevant"
-        )
-        assert "length - window" not in text, (
-            f"{rel}: relevance arithmetic must live in decode_common"
-        )
+    """The dense and paged kernels (one-pass and split-K paths alike) must
+    gate units through decode_common.chunk_relevant and merge partials via
+    combine_split_states, not re-derive either locally. Single
+    implementation: the linter's ``decode-relevance-shared`` rule."""
+    from repro.analysis import run_rules
+
+    assert run_rules(rules=["decode-relevance-shared"]) == []

@@ -8,8 +8,6 @@ Covers the PR's acceptance criteria directly:
     is referenced outside ``src/repro/compat.py``.
 """
 
-import pathlib
-
 import jax
 import jax.numpy as jnp
 import pytest
@@ -139,16 +137,9 @@ def test_compat_interpret_detection():
 
 def test_no_versioned_jax_api_outside_compat():
     """The next JAX bump must be a one-file change: only compat.py may name
-    the version-dependent symbols."""
-    root = pathlib.Path(__file__).resolve().parent.parent
-    forbidden = ("CompilerParams", "TPUCompilerParams", "AxisType")
-    offenders = []
-    for sub in ("src", "benchmarks", "examples", "tests"):
-        for path in (root / sub).rglob("*.py"):
-            if path.name == "compat.py" or path == pathlib.Path(__file__):
-                continue
-            text = path.read_text()
-            for name in forbidden:
-                if name in text:
-                    offenders.append(f"{path.relative_to(root)}: {name}")
-    assert not offenders, offenders
+    the version-dependent symbols. The contract's single implementation is
+    the linter's ``compat-only-versioned-jax`` rule (repro.analysis.lint);
+    this test just runs it over the live tree."""
+    from repro.analysis import run_rules
+
+    assert run_rules(rules=["compat-only-versioned-jax"]) == []

@@ -1,0 +1,226 @@
+"""Page-pool sanitizer: shadow state machine unit + property tests.
+
+(Not in conftest's SANITIZED_MODULES on purpose: these tests construct
+their own pools and attach/provoke shadows with intentional violations.)
+"""
+
+import random
+from collections import Counter
+
+import pytest
+
+from repro.analysis.pool_sanitizer import (
+    CowViolationError,
+    DoubleFreeError,
+    NullPageWriteError,
+    ShadowDesyncError,
+    ShadowPool,
+    UseAfterReleaseError,
+    attach,
+)
+from repro.cache.pool import (
+    NULL_PAGE,
+    OutOfPages,
+    PagePool,
+    RefcountLeakError,
+    SequencePages,
+    SequenceReleasedError,
+)
+
+try:  # dev-only dep (requirements-dev.txt); seeded traces run without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _pool(num_pages=16, page_size=4):
+    pool = PagePool(num_pages=num_pages, page_size=page_size)
+    return pool, attach(pool)
+
+
+# --- typed pool errors (satellite: no silent-no-op releases) -----------------
+
+
+def test_double_release_raises_typed_error():
+    pool = PagePool(num_pages=8, page_size=4)  # unsanitized: pool's own check
+    seq = pool.allocate_sequence(6)
+    pool.release(seq)
+    with pytest.raises(SequenceReleasedError):
+        pool.release(seq)
+    with pytest.raises(SequenceReleasedError):
+        pool.append_token(seq)
+    with pytest.raises(SequenceReleasedError):
+        pool.fork(seq)
+
+
+def test_check_leaks_explains_refcounts():
+    pool = PagePool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(8)
+    with pytest.raises(RefcountLeakError) as ei:
+        pool.check_leaks()  # caller claims nothing is live
+    assert set(ei.value.leaks) == set(seq.pages)
+    # claiming the live sequence's refs makes it clean
+    assert pool.check_leaks({p: 1 for p in seq.pages}) == {}
+    pool.release(seq)
+    assert pool.check_leaks() == {}
+
+
+# --- shadow transitions -------------------------------------------------------
+
+
+def test_shadow_catches_double_free():
+    pool, sh = _pool()
+    pid = pool.alloc()
+    pool.decref(pid)
+    with pytest.raises(DoubleFreeError):
+        pool.decref(pid)
+
+
+def test_shadow_catches_incref_after_free():
+    pool, sh = _pool()
+    pid = pool.alloc()
+    pool.decref(pid)
+    with pytest.raises(UseAfterReleaseError):
+        pool.incref(pid)
+
+
+def test_shadow_catches_append_on_released_sequence():
+    pool, sh = _pool()
+    seq = pool.allocate_sequence(6)
+    stale = SequencePages(pages=list(seq.pages), length=seq.length)
+    pool.release(seq)
+    # `stale` still points at the freed pages (a dropped-not-released
+    # table): the shadow sees FREE pages behind a live-looking sequence.
+    with pytest.raises(UseAfterReleaseError):
+        pool.append_token(stale)
+
+
+def test_shadow_catches_null_page_write():
+    pool, sh = _pool()
+    # An engine bug that left a row parked on the null page mid-page:
+    seq = SequencePages(pages=[NULL_PAGE], length=2)
+    with pytest.raises(NullPageWriteError):
+        pool.append_token(seq)
+
+
+def test_shadow_catches_cow_violation():
+    pool, sh = _pool()
+    a = pool.allocate_sequence(6)   # partial tail
+    b = pool.fork(a)
+    # Simulate a buggy pool that appends into the shared tail without
+    # emitting the copy instruction.
+    real = sh._orig["append_token"]
+
+    def no_cow_append(seq):
+        pid, off, _cow = real(seq)
+        return pid, off, None
+
+    sh._orig["append_token"] = no_cow_append
+    with pytest.raises(CowViolationError):
+        pool.append_token(b)
+
+
+def test_shadow_catches_out_of_band_refcount_mutation():
+    pool, sh = _pool()
+    pid = pool.alloc()
+    pool._refcount[pid] += 1  # some path bypassing the primitives
+    with pytest.raises(ShadowDesyncError):
+        pool.alloc()
+
+
+def test_shadow_check_tables_and_detach():
+    pool, sh = _pool()
+    pid = pool.alloc()
+    sh.check_tables([[NULL_PAGE, pid]])  # null placeholder is fine
+    pool.decref(pid)
+    with pytest.raises(UseAfterReleaseError):
+        sh.check_tables([[pid]])
+    sh.detach()
+    # Unwrapped again: pool's own ValueError, not the shadow's error.
+    with pytest.raises(ValueError):
+        pool.decref(pid)
+    sh.detach()  # idempotent
+
+
+def test_shadow_passes_clean_lifecycle():
+    pool, sh = _pool()
+    a = pool.allocate_sequence(8)
+    b = pool.fork(a)
+    pid, off, cow = pool.append_token(b)   # page-aligned: fresh page, no COW
+    assert cow is None
+    pid_a, _, cow_a = pool.append_token(a)  # same boundary on the donor
+    assert cow_a is None and pid_a != pid
+    c = pool.allocate_sequence(4, shared_prefix=list(a.pages[:1]))
+    for seq in (a, b, c):
+        pool.release(seq)
+    sh.check_leaks()
+    assert sh.ops > 10
+
+
+# --- random op traces against the refcount invariant -------------------------
+
+
+def _run_trace(seed: int, steps: int = 120) -> None:
+    """Drive a sanitized pool with random (legal) ops; after every step the
+    pool's refcounts must be *exactly* explained by the live page tables —
+    `check_leaks(live_refs)` is the reference model, the shadow re-checks
+    every transition, and released sequences must refuse further use."""
+    rng = random.Random(seed)
+    pool = PagePool(num_pages=24, page_size=4)
+    sh = attach(pool)
+    live = []
+    graveyard = []
+    for _ in range(steps):
+        op = rng.choice(("alloc", "alloc_shared", "append", "fork",
+                         "release", "poke_dead"))
+        try:
+            if op == "alloc":
+                live.append(pool.allocate_sequence(rng.randint(1, 24)))
+            elif op == "alloc_shared" and live:
+                donor = rng.choice(live)
+                tokens = rng.randint(1, 24)
+                k = min(len(donor.pages),
+                        pool.pages_needed(tokens))
+                live.append(pool.allocate_sequence(
+                    tokens, shared_prefix=list(donor.pages[:k])))
+            elif op == "append" and live:
+                pool.append_token(rng.choice(live))
+            elif op == "fork" and live:
+                live.append(pool.fork(rng.choice(live)))
+            elif op == "release" and live:
+                seq = live.pop(rng.randrange(len(live)))
+                pool.release(seq)
+                graveyard.append(seq)
+            elif op == "poke_dead" and graveyard:
+                seq = rng.choice(graveyard)
+                with pytest.raises(SequenceReleasedError):
+                    pool.release(seq)
+                # the shadow's UAF check fires before the pool's own
+                # released-flag error; both are in the PoolError family
+                with pytest.raises((SequenceReleasedError,
+                                    UseAfterReleaseError)):
+                    pool.append_token(seq)
+        except OutOfPages:
+            # Legal outcome; allocation rollback must leave no residue,
+            # which the invariant check below proves.
+            pass
+        expected = Counter(pid for s in live for pid in s.pages)
+        pool.check_leaks(dict(expected))
+        sh.check_tables([s.pages for s in live])
+    for seq in live:
+        pool.release(seq)
+    sh.check_leaks()
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_traces_seeded(seed):
+    _run_trace(seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**32 - 1))
+    def test_random_traces_hypothesis(seed):
+        _run_trace(seed, steps=60)

@@ -14,9 +14,6 @@ PR-5 acceptance criteria covered here:
     (grep-enforced, pattern of ``tests/test_attention_plan.py``).
 """
 
-import pathlib
-import re
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -245,6 +242,39 @@ def test_paged_matches_direct_with_prefix_sharing(llama):
         eng.backend.quote(Request(uid=99, prompt=prompts[0],
                                   max_new_tokens=2))
     assert eng.backend.prefix.stats() == before
+
+
+def test_close_proves_zero_leak_teardown(llama):
+    """`close()` mid-flight releases live rows, drains the prefix cache,
+    and `PagePool.check_leaks()` certifies every page returned — the
+    teardown path is the leak detector, not a best-effort cleanup."""
+    cfg, params = llama
+    rng = np.random.default_rng(11)
+    system = rng.integers(1, 400, size=(32,))
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=64,
+                    page_size=16, max_batch=3, max_pages_per_seq=8,
+                    prompt_buckets=(16, 64))
+    for i in range(3):
+        tail = rng.integers(1, 400, size=(6 + i,))
+        eng.add_request(Request(uid=i, prompt=np.concatenate([system, tail]),
+                                max_new_tokens=32))
+    for _ in range(4):   # partway through decode: rows + prefix pages live
+        eng.step()
+    assert eng.backend.pool.used_pages > 0
+    assert eng.backend.check_leaks() == {}      # live refs fully explained
+    eng.close()
+    assert eng.backend.pool.used_pages == 0     # rows AND prefix drained
+    assert eng.backend.pool.check_leaks() == {}
+
+
+def test_paged_release_of_empty_row_raises(llama):
+    cfg, params = llama
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=32,
+                    page_size=16, max_batch=2, max_pages_per_seq=8,
+                    prompt_buckets=(16,))
+    from repro.cache.pool import SequenceReleasedError
+    with pytest.raises(SequenceReleasedError):
+        eng.backend.release(0)   # row holds no sequence
 
 
 def test_paged_preemption_under_page_pressure(llama):
@@ -568,22 +598,10 @@ def test_deprecated_shims_are_drop_in(llama):
 
 
 def test_no_legacy_engine_construction_outside_serving():
-    """Grep enforcement (pattern of test_attention_plan): the deprecated
-    engine classes may only be constructed inside ``src/repro/serving/``
-    — and this test file, which tests the shims themselves. Everything
-    else goes through ``LLMEngine``."""
-    root = pathlib.Path(__file__).resolve().parent.parent
-    pattern = re.compile(r"\b(?:Paged)?ServingEngine\(")
-    allowed = {
-        root / "src" / "repro" / "serving",
-        root / "tests" / "test_serving.py",
-    }
-    offenders = []
-    for sub in ("src", "examples", "benchmarks", "tests"):
-        for path in (root / sub).rglob("*.py"):
-            if any(a in (path, *path.parents) for a in allowed):
-                continue
-            for i, line in enumerate(path.read_text().splitlines(), 1):
-                if pattern.search(line):
-                    offenders.append(f"{path.relative_to(root)}:{i}: {line.strip()}")
-    assert not offenders, offenders
+    """The deprecated engine classes may only be constructed inside
+    ``src/repro/serving/`` — and this test file, which tests the shims
+    themselves. Everything else goes through ``LLMEngine``. Single
+    implementation: the linter's ``no-legacy-engine-construction`` rule."""
+    from repro.analysis import run_rules
+
+    assert run_rules(rules=["no-legacy-engine-construction"]) == []
