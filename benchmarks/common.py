@@ -1,20 +1,28 @@
-"""Shared benchmark plumbing: table rendering + artifact persistence."""
+"""Shared benchmark plumbing: table rendering + artifact persistence.
+
+Persistence delegates to ``repro.obs.metrics.write_json_artifact`` (PR 7)
+so every benchmark and the load harness emit the same envelope:
+``{"schema": "repro.obs/v1", "name", "kind", "created_unix", "payload",
+"metrics"}``.
+"""
 
 from __future__ import annotations
 
-import json
 import os
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
+
+from repro.obs.metrics import MetricsRegistry, write_json_artifact
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts", "benchmarks")
 
 
-def save_result(name: str, payload) -> str:
-    os.makedirs(ARTIFACTS, exist_ok=True)
-    path = os.path.abspath(os.path.join(ARTIFACTS, f"{name}.json"))
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=1)
-    return path
+def save_result(name: str, payload,
+                metrics: Optional[MetricsRegistry] = None) -> str:
+    """Write ``artifacts/benchmarks/<name>.json`` in the uniform obs
+    envelope; pass a registry to ship its snapshot alongside."""
+    return write_json_artifact(
+        name, payload, metrics=metrics, dirpath=ARTIFACTS, kind="benchmark",
+    )
 
 
 def render_table(title: str, rows: List[Dict], columns: Sequence[str]) -> str:

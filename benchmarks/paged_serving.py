@@ -195,13 +195,17 @@ def smoke():
 
 
 def main():
+    from repro.obs import Telemetry
+
     cfg = registry.get_smoke_config("llama3-8b")
     params = transformer.init_model(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
+    telemetry = Telemetry.create()
     engine = LLMEngine(
         cfg, params, kv_layout="paged", num_pages=NUM_PAGES,
         page_size=PAGE_SIZE, max_batch=6, max_pages_per_seq=8,
         prompt_buckets=(16, 32, 64, 96),
+        telemetry=telemetry,
     )
     reqs = build_trace(cfg, rng)
     peak = capture_peak_tables(engine)
@@ -336,6 +340,13 @@ def main():
 
     aligned = payload["placement"]["mi300x"][layout.HEAD_ALIGNED]
     naive = payload["placement"]["mi300x"][layout.INTERLEAVED]
+    engine_stats = engine.stats()
+    payload["measured"] = {
+        "tokens_generated": engine_stats.tokens_generated,
+        "measured_tok_s": engine_stats.measured_tok_s,
+        "modeled_tok_s": engine_stats.modeled_tok_s,
+        "decode_elapsed_s": engine_stats.decode_elapsed_s,
+    }
     payload["headline"] = {
         "prefix_hit_rate": stats["prefix_hit_rate"],
         "aligned_vs_naive_time_ratio":
@@ -367,7 +378,10 @@ def main():
     for tname in TOPOS:
         print(f"resolve_kv_layout[{tname}]: "
               f"{payload['placement'][tname]['resolved_layout']}")
-    path = common.save_result("paged_serving", payload)
+    # The telemetry snapshot (step/flush/decode histograms, lifecycle
+    # counters) rides in the artifact's "metrics" envelope slot.
+    path = common.save_result("paged_serving", payload,
+                              metrics=telemetry.metrics)
     print(f"\nsaved {path}")
 
 

@@ -377,6 +377,44 @@ def check_host_sync(modules: Sequence[Module]) -> List[Violation]:
     return out
 
 
+#: Serving functions on the per-tick path (PR 7): telemetry there may
+#: only *use* pre-bound instruments, never register/look them up.
+#: ``__init__`` is where binding happens; these are where it must not.
+_OBS_HOT_FNS = ("step", "_decode_tick", "_advance", "_flush",
+                "_emit_lifecycle", "decode", "prepare_row")
+_OBS_REGISTRATION_CALLS = ("counter", "gauge", "histogram", "labels")
+
+
+@rule(
+    "obs-no-hot-loop-allocs",
+    "serving per-tick functions (step/_decode_tick/_advance/_flush/"
+    "_emit_lifecycle/decode/prepare_row) may not register or look up "
+    "metric instruments (.counter/.gauge/.histogram/.labels) — bind them "
+    "once at construction and call .inc()/.observe()/.set() on the bound "
+    "object",
+)
+def check_obs_hot_loop_allocs(modules: Sequence[Module]) -> List[Violation]:
+    out: List[Violation] = []
+    for mod in modules:
+        if not _in_dir(mod, "src/repro/serving"):
+            continue
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and node.name in _OBS_HOT_FNS):
+                continue
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call) and \
+                        isinstance(sub.func, ast.Attribute) and \
+                        sub.func.attr in _OBS_REGISTRATION_CALLS:
+                    out.append(Violation(
+                        "obs-no-hot-loop-allocs", mod.path, sub.lineno,
+                        f".{sub.func.attr}(...) inside {node.name}() — "
+                        "instrument registration/lookup in the decode hot "
+                        "loop; pre-bind at construction",
+                    ))
+    return out
+
+
 # --- driver -------------------------------------------------------------------
 
 

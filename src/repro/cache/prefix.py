@@ -62,6 +62,7 @@ class PrefixCache:
         self._entries: "OrderedDict[bytes, int]" = OrderedDict()
         self.hits = 0
         self.queries = 0
+        self.evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -118,6 +119,7 @@ class PrefixCache:
                 # not free the page, only lose future sharing. Keep it.
                 continue
             del self._entries[h]
+            self.evictions += 1
             freed += bool(self.pool.decref(pid))
             if freed >= max_pages:
                 break
@@ -147,3 +149,15 @@ class PrefixCache:
     def stats(self) -> Tuple[int, int, int]:
         """(entries, hits, queries)."""
         return len(self._entries), self.hits, self.queries
+
+    def counters(self) -> dict:
+        """Full counter view (PR 7): everything :meth:`stats` reports plus
+        evictions and the page-level lookup hit rate — the numbers the
+        serving backends surface through ``prefix_stats()``."""
+        return {
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "queries": self.queries,
+            "evictions": self.evictions,
+            "hit_rate": self.hit_rate,
+        }

@@ -1,0 +1,305 @@
+"""Trace-driven SLO load harness over the ``LLMEngine`` facade (PR 7).
+
+Open-loop load generation with the full telemetry stack attached:
+
+  * **Arrivals** are Poisson — exponential inter-arrival gaps at
+    ``--rate`` requests/s, cumulative-summed into a wall-clock schedule.
+    The driver releases each request when its arrival time passes, steps
+    the engine continuously while it has work, and sleeps to the next
+    arrival when idle — so queueing delay is *measured*, not simulated.
+  * **Workload mix**: prompt lengths and output budgets are drawn from
+    weighted mixes, and a configurable fraction of requests shares a
+    system-prompt prefix (page-aligned, so the paged backend's prefix
+    cache gets real hits).
+  * **Warmup**: a pilot batch runs to completion first (compiling every
+    prefill bucket the mix can hit), ``jax.block_until_ready`` drains the
+    device, and ``engine.reset_metrics()`` zeroes telemetry — measured
+    numbers never include compilation.
+  * **SLO metrics**: TTFT / ITL p50/p90/p99 from the tracer's lifecycle
+    events (exact per-request timestamps, not averages), measured
+    decode tok/s vs the analytic model's prediction, preemption and
+    prefix-hit counters.
+  * **Artifacts**: ``artifacts/benchmarks/loadgen_<layout>.json`` (the
+    ``repro.obs`` envelope, with the full metrics snapshot riding along)
+    and ``loadgen_<layout>_trace.json`` — a Chrome ``trace_event`` file;
+    load it at https://ui.perfetto.dev. The model-vs-measured drift
+    table (ROADMAP 5(b)) prints and lands in the JSON payload.
+
+Run:
+  PYTHONPATH=src python -m repro.launch.loadgen --smoke
+      # CI: both KV layouts on the smoke model (Pallas in interpret
+      # mode on CPU), asserts artifacts + latency coverage
+  PYTHONPATH=src python -m repro.launch.loadgen --arch llama3-8b \
+      --kv-layout paged --requests 64 --rate 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import transformer
+from repro.obs import Telemetry
+from repro.obs.metrics import write_json_artifact
+from repro.serving import LLMEngine, Request, SamplingParams
+
+#: (value, weight) mixes the smoke/default workload draws from.
+PROMPT_MIX: Tuple[Tuple[int, float], ...] = ((8, 0.5), (24, 0.3), (44, 0.2))
+OUTPUT_MIX: Tuple[Tuple[int, float], ...] = ((4, 0.6), (8, 0.3), (12, 0.1))
+
+
+def _draw(rng, mix) -> int:
+    vals, weights = zip(*mix)
+    w = np.asarray(weights, np.float64)
+    return int(rng.choice(np.asarray(vals), p=w / w.sum()))
+
+
+def build_workload(
+    cfg,
+    rng,
+    n_requests: int,
+    *,
+    rate: float,
+    prompt_mix=PROMPT_MIX,
+    output_mix=OUTPUT_MIX,
+    shared_prefix_len: int = 16,
+    shared_fraction: float = 0.5,
+    temperature: float = 0.0,
+) -> List[Tuple[float, Request]]:
+    """Poisson-arrival request trace: ``[(arrival_s, Request), ...]``
+    sorted by arrival. ``shared_fraction`` of requests start with one
+    common system prefix of ``shared_prefix_len`` tokens (page-align it
+    to the backend's page size so prefix sharing can actually hit)."""
+    gaps = rng.exponential(1.0 / rate, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    system = rng.integers(1, cfg.vocab, size=(shared_prefix_len,))
+    out: List[Tuple[float, Request]] = []
+    for i in range(n_requests):
+        tail_len = _draw(rng, prompt_mix)
+        tail = rng.integers(1, cfg.vocab, size=(tail_len,))
+        if shared_prefix_len and rng.random() < shared_fraction:
+            prompt = np.concatenate([system, tail])
+        else:
+            prompt = tail
+        out.append((float(arrivals[i]), Request(
+            uid=i, prompt=prompt,
+            sampling=SamplingParams(
+                temperature=temperature,
+                max_tokens=_draw(rng, output_mix),
+            ),
+        )))
+    return out
+
+
+def percentiles(values, qs=(50, 90, 99)) -> Dict[str, Optional[float]]:
+    if not values:
+        return {f"p{q}": None for q in qs}
+    arr = np.asarray(values, np.float64)
+    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+
+def _warmup(engine: LLMEngine, cfg, rng, workload) -> None:
+    """Compile every prefill bucket the mix can hit (shared-prefix and
+    bare variants), drain the device, zero telemetry."""
+    pilots = []
+    seen = set()
+    for i, (_, req) in enumerate(workload):
+        key = len(req.prompt)
+        if key in seen:
+            continue
+        seen.add(key)
+        pilots.append(Request(
+            uid=10_000_000 + i, prompt=np.array(req.prompt),
+            sampling=SamplingParams(max_tokens=2),
+        ))
+    engine.generate(pilots)
+    jax.block_until_ready(engine.backend.caches)
+    # Warmup requests stay in the completion history (uids >= 10_000_000)
+    # but every measured counter/span/drift sample restarts here.
+    engine.reset_metrics()
+
+
+def drive(engine: LLMEngine, workload, *, idle_sleep_cap: float = 0.01):
+    """Open-loop drive: release requests at their arrival times, step
+    while the engine has work, sleep to the next arrival when idle.
+    Returns the finished ``RequestOutput`` list."""
+    pending = sorted(workload, key=lambda a: a[0])
+    done = []
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(pending) or engine.backend.active.any() \
+            or engine.scheduler.has_work():
+        now = time.perf_counter() - t0
+        while i < len(pending) and pending[i][0] <= now:
+            engine.add_request(pending[i][1])
+            i += 1
+        if not engine.backend.active.any() and not engine.scheduler.has_work():
+            # Idle with future arrivals only: sleep toward the next one.
+            time.sleep(min(max(pending[i][0] - now, 0.0), idle_sleep_cap))
+            continue
+        done.extend(o for o in engine.step() if o.finished)
+    return done
+
+
+def run_one(args, kv_layout: str) -> Dict:
+    """One full load run on one KV layout; returns the summary payload
+    (also written to ``artifacts/benchmarks/loadgen_<kv_layout>.json``)."""
+    get_cfg = (registry.get_smoke_config if args.smoke
+               else registry.get_config)
+    cfg = get_cfg(args.arch)
+    params = transformer.init_model(jax.random.PRNGKey(args.seed), cfg)
+    telemetry = Telemetry.create()
+    engine = LLMEngine(
+        cfg, params,
+        kv_layout=kv_layout,
+        max_batch=args.max_batch,
+        cache_len=args.cache_len,
+        num_pages=args.num_pages,
+        page_size=args.page_size,
+        prompt_buckets=(16, 32, 64),
+        telemetry=telemetry,
+    )
+    rng = np.random.default_rng(args.seed)
+    workload = build_workload(
+        cfg, rng, args.requests, rate=args.rate,
+        shared_prefix_len=args.shared_prefix,
+        shared_fraction=args.shared_fraction,
+        temperature=args.temperature,
+    )
+    _warmup(engine, cfg, rng, workload)
+
+    t0 = time.perf_counter()
+    done = drive(engine, workload)
+    wall = time.perf_counter() - t0
+
+    lat = telemetry.tracer.request_latencies()
+    measured = {uid: d for uid, d in lat.items() if uid < 10_000_000}
+    ttft = [d["ttft"] for d in measured.values() if d["ttft"] is not None]
+    queue = [d["queue"] for d in measured.values() if d["queue"] is not None]
+    itl = [x for d in measured.values() for x in d["itl"]]
+    stats = engine.stats()
+    prefix = engine.backend.prefix_stats()
+    drift = telemetry.drift.report(engine.drift_model_fn())
+
+    payload = {
+        "arch": args.arch,
+        "smoke": bool(args.smoke),
+        "kv_layout": engine.kv_layout,
+        "requests": args.requests,
+        "finished": len(done),
+        "rate_req_s": args.rate,
+        "wall_s": wall,
+        "tokens_generated": stats.tokens_generated,
+        "measured_tok_s": stats.measured_tok_s,
+        "modeled_tok_s": stats.modeled_tok_s,
+        "decode_elapsed_s": stats.decode_elapsed_s,
+        "ttft_s": percentiles(ttft),
+        "itl_s": percentiles(itl),
+        "queue_s": percentiles(queue),
+        "preemptions": stats.preemptions,
+        "resumed_tokens": stats.resumed_tokens,
+        "prefix": prefix,
+        "occupancy_cap": stats.occupancy_cap,
+        "drift": drift.to_dict(),
+        "drift_worst_ratio": drift.worst_ratio(),
+    }
+    out_dir = args.out_dir or None
+    json_path = write_json_artifact(
+        f"loadgen_{engine.kv_layout}", payload,
+        metrics=telemetry.metrics,
+        dirpath=out_dir, kind="loadgen",
+    )
+    trace_dir = out_dir or os.path.dirname(json_path)
+    trace_path = telemetry.tracer.write_chrome_trace(
+        os.path.join(trace_dir, f"loadgen_{engine.kv_layout}_trace.json")
+    )
+    payload["_artifacts"] = {"json": json_path, "trace": trace_path}
+
+    def ms(d):
+        return " / ".join(
+            "n/a" if d[f"p{q}"] is None else f"{d[f'p{q}'] * 1e3:.1f}ms"
+            for q in (50, 90, 99)
+        )
+
+    print(f"[loadgen:{engine.kv_layout}] {len(done)}/{args.requests} "
+          f"finished in {wall:.2f}s at rate {args.rate}/s")
+    print(f"  TTFT p50/p90/p99: {ms(payload['ttft_s'])}")
+    print(f"  ITL  p50/p90/p99: {ms(payload['itl_s'])}")
+    print(f"  measured {stats.measured_tok_s:.1f} tok/s (decode wall "
+          f"{stats.decode_elapsed_s:.2f}s), modeled "
+          f"{stats.modeled_tok_s:.0f} tok/s")
+    hit = prefix.get("prefix_hit_rate")
+    print(f"  preemptions {stats.preemptions} "
+          f"({stats.resumed_tokens} tokens resumed), prefix hit "
+          f"{'n/a' if hit is None else f'{hit:.2f}'}")
+    print("  " + drift.render().replace("\n", "\n  "))
+    print(f"  wrote {json_path}")
+    print(f"  wrote {trace_path} (open in https://ui.perfetto.dev)")
+    engine.close()
+    return payload
+
+
+def _smoke_check(payload: Dict) -> None:
+    """CI acceptance for one layout's run."""
+    import json
+
+    assert payload["finished"] == payload["requests"], payload
+    assert payload["ttft_s"]["p50"] is not None, "no TTFT measured"
+    assert payload["itl_s"]["p99"] is not None, "no ITL measured"
+    assert payload["measured_tok_s"] > 0, "no measured throughput"
+    assert payload["drift"]["rows"], "no drift cells recorded"
+    with open(payload["_artifacts"]["trace"]) as f:
+        trace = json.load(f)
+    assert trace["traceEvents"], "empty Chrome trace"
+    phases = {e["ph"] for e in trace["traceEvents"]}
+    assert {"X", "M", "i", "b", "e"} <= phases, phases
+    with open(payload["_artifacts"]["json"]) as f:
+        env = json.load(f)
+    assert env["schema"] == "repro.obs/v1", env["schema"]
+    assert env["metrics"]["serving_steps_total"]["value"] > 0
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b",
+                    choices=registry.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI: smoke model, both KV layouts, assert "
+                         "artifacts + latency coverage")
+    ap.add_argument("--kv-layout", choices=("auto", "dense", "paged"),
+                    default="auto")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--num-pages", type=int, default=96)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--shared-prefix", type=int, default=16,
+                    help="system-prompt tokens (page-aligned) shared by "
+                         "--shared-fraction of requests")
+    ap.add_argument("--shared-fraction", type=float, default=0.5)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-dir", default=None,
+                    help="artifact directory (default "
+                         "artifacts/benchmarks)")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        for layout in ("dense", "paged"):
+            payload = run_one(args, layout)
+            _smoke_check(payload)
+        print("[loadgen] smoke OK (dense + paged)")
+    else:
+        run_one(args, args.kv_layout)
+
+
+if __name__ == "__main__":
+    main()

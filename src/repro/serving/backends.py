@@ -160,7 +160,12 @@ class DenseBackend(_Backend):
                 f"({self.cache_len} tokens)"
             )
 
-    def decode_time_model(self, batch: int) -> float:
+    def decode_time_model(self, batch: int,
+                          mean_len: Optional[float] = None) -> float:
+        # ``mean_len`` is accepted for protocol parity with the paged
+        # model (drift calibration passes the live mean context) but
+        # ignored: a dense decode streams the full stripe regardless of
+        # how much of it is live.
         from repro import compat
         from repro.core import perf_model
 
@@ -175,6 +180,26 @@ class DenseBackend(_Backend):
     @property
     def page_occupancy(self) -> float:
         return self.num_active / self.rows if self.rows else 0.0
+
+    def prefix_stats(self) -> Dict[str, object]:
+        """Dense stripes have no prefix cache: every sharing counter is a
+        structural zero and ``prefix_hit_rate`` is **None** — "no cache",
+        not "a cache that never hit" (PR 7 satellite; the old facade
+        silently reported 0.0 here, indistinguishable from a cold paged
+        cache)."""
+        return {
+            "prefix_entries": 0.0,
+            "pages_reused": 0.0,
+            "prompt_pages": 0.0,
+            "prefix_hit_rate": None,
+            "prefix_lookup_hits": 0.0,
+            "prefix_lookup_queries": 0.0,
+            "prefix_evictions": 0.0,
+            "preemptions": float(self.stats["preemptions"]),
+            "resumed_tokens": float(self.stats["resumed_tokens"]),
+            "prefill_launches": float(self.stats["prefill_launches"]),
+            "batched_prefills": float(self.stats["batched_prefills"]),
+        }
 
     # -- admission / prefill ----------------------------------------------
 
@@ -423,14 +448,19 @@ class PagedBackend(_Backend):
     def page_occupancy(self) -> float:
         return self.pool.used_pages / max(self.pool.num_pages - 1, 1)
 
-    def decode_time_model(self, batch: int) -> float:
+    def decode_time_model(self, batch: int,
+                          mean_len: Optional[float] = None) -> float:
+        # Default planning shape is half-full sequences; drift calibration
+        # passes the cell's *measured* live mean context instead, so the
+        # comparison prices what the machine actually decoded.
         from repro import compat
         from repro.core import perf_model
 
         return perf_model.estimate_paged_decode(
             batch=batch, num_q_heads=self.cfg.n_heads,
             num_kv_heads=self.cfg.n_kv_heads,
-            mean_len=max(self.cache_len // 2, self.page_size),
+            mean_len=(max(int(mean_len), self.page_size) if mean_len
+                      else max(self.cache_len // 2, self.page_size)),
             page_size=self.page_size, head_dim=self.cfg.head_dim,
             dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
             topo=plan_lib._topology_for(compat.default_backend()),
@@ -931,14 +961,18 @@ class PagedBackend(_Backend):
             dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
         )
 
-    def prefix_stats(self) -> Dict[str, float]:
+    def prefix_stats(self) -> Dict[str, object]:
         reused = self.stats["pages_reused"]
         total = self.stats["prompt_pages"]
+        pc = self.prefix.counters()
         return {
             "prefix_entries": float(len(self.prefix)),
             "pages_reused": float(reused),
             "prompt_pages": float(total),
             "prefix_hit_rate": reused / total if total else 0.0,
+            "prefix_lookup_hits": float(pc["hits"]),
+            "prefix_lookup_queries": float(pc["queries"]),
+            "prefix_evictions": float(pc["evictions"]),
             "preemptions": float(self.stats["preemptions"]),
             "resumed_tokens": float(self.stats["resumed_tokens"]),
             "extend_prefills": float(self.stats["extend_prefills"]),

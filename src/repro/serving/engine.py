@@ -22,7 +22,15 @@ picking a class. The facade collapses that:
   * admission / fairness / preemption policy lives in
     ``serving.scheduler`` (page budget, priority + FCFS aging, the
     NUMA-occupancy admission cap from ``core.perf_model``); the execution
-    backends (``serving.backends``) are pure cache mechanism.
+    backends (``serving.backends``) are pure cache mechanism;
+  * observability is injected (``telemetry=repro.obs.Telemetry.create()``):
+    ``step()`` runs under spans (schedule / flush / decode), requests get
+    lifecycle events (arrival -> admitted -> first_token -> finish, with
+    preempt/resume), each decode tick's wall time feeds the
+    model-vs-measured drift collector, and all instruments are pre-bound
+    at construction (``obs-no-hot-loop-allocs`` lint rule). The default
+    is ``repro.obs.NULL_TELEMETRY`` — shared no-op instruments, no
+    span/metric objects allocated per step.
 
 ``ServingEngine`` / ``PagedServingEngine`` survive as deprecated shims
 over the facade; nothing outside ``repro.serving`` may construct them
@@ -42,6 +50,7 @@ import numpy as np
 from repro.cache.pool import OutOfPages
 from repro.configs.base import ModelConfig
 from repro.kernels import plan as plan_lib
+from repro.obs import NULL_TELEMETRY, Telemetry
 from repro.serving import sampling as sampling_lib
 from repro.serving.backends import DenseBackend, PagedBackend
 from repro.serving.request import (
@@ -51,7 +60,12 @@ from repro.serving.request import (
     RequestOutput,
     SamplingParams,
 )
-from repro.serving.scheduler import DEFERRED, Scheduler, SchedulerStats
+from repro.serving.scheduler import (
+    DEFERRED,
+    Scheduler,
+    SchedulerStats,
+    safe_rate,
+)
 
 __all__ = [
     "LLMEngine", "Request", "RequestOutput", "SamplingParams", "Result",
@@ -102,6 +116,7 @@ class LLMEngine:
         batch_prefills: bool = True,
         mapping: Optional[str] = None,
         scheduler: Optional[Scheduler] = None,
+        telemetry: Optional[Telemetry] = None,
     ):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(
@@ -154,6 +169,43 @@ class LLMEngine:
         self._next_uid = 0
         self._tokens_generated = 0
         self._elapsed = 0.0
+        self._decode_elapsed = 0.0
+        self._first_emitted: set = set()            # uids past first token
+
+        # Telemetry: every instrument is bound HERE, once — the decode
+        # hot path only touches pre-bound objects (obs-no-hot-loop-allocs
+        # lint rule). The default NULL_TELEMETRY shares module-level
+        # no-op singletons, so a disabled engine allocates nothing per
+        # step.
+        self.telemetry = telemetry or NULL_TELEMETRY
+        self._tr = self.telemetry.tracer
+        self._drift = self.telemetry.drift
+        m = self.telemetry.metrics
+        self._m_requests = m.counter(
+            "serving_requests_total", "requests accepted by add_request")
+        self._m_steps = m.counter(
+            "serving_steps_total", "engine ticks (step() calls)")
+        self._m_tokens = m.counter(
+            "serving_tokens_total", "tokens streamed to callers")
+        self._m_admitted = m.counter(
+            "serving_admissions_total", "admission records flushed")
+        self._m_preempt = m.counter(
+            "serving_preemptions_total", "rows evicted under page pressure")
+        self._m_finished = m.counter(
+            "serving_finished_total", "requests that reached finish")
+        self._h_step = m.histogram(
+            "serving_step_seconds", "one full step(): schedule+flush+decode")
+        self._h_schedule = m.histogram(
+            "serving_schedule_seconds", "admission-policy time per step")
+        self._h_flush = m.histogram(
+            "serving_flush_seconds", "prefill flush time per step")
+        self._h_decode = m.histogram(
+            "serving_decode_step_seconds",
+            "fused decode + sample + bookkeeping per tick")
+        self._g_running = m.gauge(
+            "serving_running", "active decode rows")
+        self._g_waiting = m.gauge(
+            "serving_waiting", "queued + requeued requests")
 
     # -- public surface ----------------------------------------------------
 
@@ -194,29 +246,88 @@ class LLMEngine:
         self._next_uid = max(self._next_uid, request.uid + 1)
         self.backend.validate(request)
         self.scheduler.add(request)
+        self._m_requests.inc()
+        self._tr.request_event(request.uid, "arrival",
+                               prompt_len=len(request.prompt),
+                               priority=request.priority)
         return request.uid
 
     def step(self) -> List[RequestOutput]:
         """One serving tick: admit + flush prefills, then one fused decode
         over every active row, sampled on device with per-request params.
         Returns the streamed increments — one :class:`RequestOutput` per
-        request that gained tokens or finished this tick."""
+        request that gained tokens or finished this tick.
+
+        Instrumented (when telemetry is on) as one ``step`` span holding
+        ``schedule`` / ``flush`` / ``decode`` child spans; each decode
+        tick's wall time is also folded into the drift collector under
+        its live (batch, mean-context) cell."""
         t0 = time.perf_counter()
         records: List = []
-        try:
-            self.scheduler.schedule(self.backend, records)
-        finally:
-            # Flush even when a late admission raises (oversized prompt,
-            # bucket overflow): rows admitted this round are already
-            # claimed and must not reach a decode tick — or a caller that
-            # catches the error — unprefilled.
-            if records:
-                self._flush(records)
-        outputs: List[RequestOutput] = []
-        if self.backend.active.any():
-            outputs = self._decode_tick()
-        self._elapsed += time.perf_counter() - t0
+        with self._tr.span("step"):
+            try:
+                with self._tr.span("schedule"):
+                    self.scheduler.schedule(self.backend, records)
+            finally:
+                self._h_schedule.observe(time.perf_counter() - t0)
+                # Flush even when a late admission raises (oversized
+                # prompt, bucket overflow): rows admitted this round are
+                # already claimed and must not reach a decode tick — or a
+                # caller that catches the error — unprefilled.
+                for rec in records:
+                    uid = rec["req"].uid
+                    self._m_admitted.inc()
+                    # A row whose output list is pre-seeded was admitted
+                    # with replay tokens: that is a preemption resume.
+                    resumed = bool(self.backend.out[rec["row"]])
+                    self._tr.request_event(
+                        uid, "resume" if resumed else "admitted",
+                        row=rec["row"])
+                if records:
+                    tf = time.perf_counter()
+                    with self._tr.span("flush", rows=len(records)):
+                        self._flush(records)
+                    self._h_flush.observe(time.perf_counter() - tf)
+            outputs: List[RequestOutput] = []
+            if self.backend.active.any():
+                nb = self.backend.num_active
+                live = self.backend.lengths[self.backend.active]
+                mean_len = float(live.mean()) if live.size else 0.0
+                td = time.perf_counter()
+                with self._tr.span("decode", batch=nb):
+                    outputs = self._decode_tick()
+                dt = time.perf_counter() - td
+                self._h_decode.observe(dt)
+                self._decode_elapsed += dt
+                self._drift.record(nb, mean_len, dt)
+            self._emit_lifecycle(outputs)
+        self._m_steps.inc()
+        self._g_running.set(self.backend.num_active)
+        self._g_waiting.set(self.scheduler.num_waiting)
+        dt_all = time.perf_counter() - t0
+        self._h_step.observe(dt_all)
+        self._elapsed += dt_all
         return outputs
+
+    def _emit_lifecycle(self, outputs: List[RequestOutput]) -> None:
+        """Per-request lifecycle events for this tick's streamed
+        increments: first_token on the first emission, one ``tokens``
+        event per emission (the measured inter-token stream), finish on
+        termination."""
+        for o in outputs:
+            n = len(o.new_tokens)
+            if n:
+                self._m_tokens.inc(n)
+                if o.uid not in self._first_emitted:
+                    self._first_emitted.add(o.uid)
+                    self._tr.request_event(o.uid, "first_token")
+                self._tr.request_event(o.uid, "tokens", n=n)
+            if o.finished:
+                self._m_finished.inc()
+                self._first_emitted.discard(o.uid)
+                self._tr.request_event(o.uid, "finish",
+                                       reason=o.finish_reason,
+                                       tokens=len(o.tokens))
 
     def generate(self, requests: Iterable = ()) -> List[RequestOutput]:
         """Blocking convenience: queue ``requests``, drive :meth:`step`
@@ -263,24 +374,45 @@ class LLMEngine:
             completed=len(self._completed),
             tokens_generated=self._tokens_generated,
             elapsed_s=self._elapsed,
-            tokens_per_s=(
-                self._tokens_generated / self._elapsed if self._elapsed else 0.0
-            ),
-            prefix_hit_rate=prefix.get("prefix_hit_rate", 0.0),
+            tokens_per_s=safe_rate(self._tokens_generated, self._elapsed),
+            # None (not 0.0) when the backend has no prefix cache at all.
+            prefix_hit_rate=prefix.get("prefix_hit_rate"),
             page_occupancy=b.page_occupancy,
             preemptions=b.stats["preemptions"],
             resumed_tokens=b.stats["resumed_tokens"],
             prefill_launches=b.stats["prefill_launches"],
             batched_prefills=b.stats["batched_prefills"],
             occupancy_cap=self.scheduler.occupancy_cap(b),
-            modeled_tok_s=nb / t if t > 0 else 0.0,
+            modeled_tok_s=safe_rate(nb, t),
+            measured_tok_s=safe_rate(
+                self._tokens_generated, self._decode_elapsed),
+            decode_elapsed_s=self._decode_elapsed,
         )
+
+    def drift_model_fn(self):
+        """``(batch, mean_len) -> modeled seconds`` for
+        :meth:`repro.obs.DriftCollector.report` — the backend's analytic
+        decode model evaluated at the drift cell's live context."""
+        model = self.backend.decode_time_model
+        return lambda batch, mean_len: model(batch, mean_len=mean_len)
+
+    def reset_metrics(self) -> None:
+        """Zero telemetry *and* the engine's own wall-clock accumulators
+        (load harnesses call this after warmup so measured numbers do not
+        include compilation)."""
+        self.telemetry.reset()
+        self._elapsed = 0.0
+        self._decode_elapsed = 0.0
+        self._tokens_generated = 0
 
     # -- internals ---------------------------------------------------------
 
     def _on_preempt(self, row: int, req, generated: List) -> None:
         self._pending.pop(row, None)
         self.scheduler.requeue(req, generated)
+        self._m_preempt.inc()
+        self._tr.request_event(req.uid, "preempt", row=row,
+                               generated=len(generated))
 
     def _seed_for(self, req) -> int:
         seed = req.sampling.seed

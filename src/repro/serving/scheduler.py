@@ -47,6 +47,17 @@ from typing import List, Optional, Sequence, Tuple
 #: round (as an extend) instead of prefilling the shared prefix twice.
 DEFERRED = object()
 
+#: Denominators below this are "no time measured/modeled", not a rate:
+#: guards every tokens/s division (a denormal decode_time_model result
+#: used to print as 10^15 modeled tok/s — PR 7 satellite fix).
+MIN_RATE_DENOM_S = 1e-9
+
+
+def safe_rate(count: float, seconds: float) -> float:
+    """``count / seconds`` with the near-zero denominator reported as
+    0.0 (unknown) instead of inf/garbage."""
+    return count / seconds if seconds > MIN_RATE_DENOM_S else 0.0
+
 
 def default_choose_victim(candidates: Sequence[Tuple[int, int, int]],
                           protect: int = -1) -> Optional[int]:
@@ -66,7 +77,23 @@ def default_choose_victim(candidates: Sequence[Tuple[int, int, int]],
 
 @dataclasses.dataclass
 class SchedulerStats:
-    """Serving counters surfaced by ``LLMEngine.stats()`` / ``step()``."""
+    """Serving counters surfaced by ``LLMEngine.stats()`` / ``step()``.
+
+    The throughput fields are deliberately three *different* numbers and
+    must never be conflated (PR 7 satellite):
+
+      * ``tokens_per_s`` — tokens over total engine wall time (prefill,
+        scheduling, and host bookkeeping included);
+      * ``measured_tok_s`` — tokens over *decode-phase* wall time only:
+        the apples-to-apples measurement for ``modeled_tok_s``;
+      * ``modeled_tok_s`` — ``core.perf_model``'s analytic prediction at
+        the current batch. A near-zero modeled tick reports 0.0 (unknown)
+        rather than a 10^15 tok/s artifact (:func:`safe_rate`).
+
+    ``prefix_hit_rate`` is ``None`` when the backend has no prefix cache
+    at all (dense stripes) — distinct from a real 0.0 hit rate on a
+    paged engine whose trace simply never shared a prefix.
+    """
 
     kv_layout: str = "dense"
     running: int = 0
@@ -75,7 +102,7 @@ class SchedulerStats:
     tokens_generated: int = 0
     elapsed_s: float = 0.0
     tokens_per_s: float = 0.0
-    prefix_hit_rate: float = 0.0
+    prefix_hit_rate: Optional[float] = None
     page_occupancy: float = 0.0    # used / total pages (dense: used slots)
     preemptions: int = 0
     resumed_tokens: int = 0
@@ -83,15 +110,20 @@ class SchedulerStats:
     batched_prefills: int = 0
     occupancy_cap: int = 0         # scheduler's modeled max useful batch
     modeled_tok_s: float = 0.0     # perf_model tokens/s at current batch
+    measured_tok_s: float = 0.0    # tokens / measured decode wall time
+    decode_elapsed_s: float = 0.0  # decode-phase wall time (measured)
 
     def summary(self) -> str:
+        prefix = ("n/a" if self.prefix_hit_rate is None
+                  else f"{self.prefix_hit_rate:.2f}")
         return (
             f"[{self.kv_layout}] {self.completed} done / {self.running} "
             f"running / {self.waiting} waiting | "
             f"{self.tokens_generated} tokens in {self.elapsed_s:.2f}s "
-            f"({self.tokens_per_s:.1f} tok/s, modeled "
+            f"({self.tokens_per_s:.1f} tok/s wall, measured decode "
+            f"{self.measured_tok_s:.1f}, modeled "
             f"{self.modeled_tok_s:.0f}) | prefix hit "
-            f"{self.prefix_hit_rate:.2f} | occupancy "
+            f"{prefix} | occupancy "
             f"{self.page_occupancy:.2f} (cap {self.occupancy_cap}) | "
             f"{self.preemptions} preemptions "
             f"({self.resumed_tokens} tokens resumed) | "

@@ -145,6 +145,44 @@ def test_host_sync_rule_scoped_to_hot_loop():
                        rules=["no-host-sync-in-decode-hot-loop"]) == []
 
 
+def test_obs_hot_loop_allocs_rule_fires():
+    bad = (
+        "class E:\n"
+        "    def step(self):\n"
+        "        c = self.telemetry.metrics.counter('steps')\n"
+        "        c.inc()\n"
+        "    def _decode_tick(self):\n"
+        "        self.registry.histogram('decode_s').observe(0.1)\n"
+    )
+    vs = _fires(bad, "src/repro/serving/engine.py", "obs-no-hot-loop-allocs")
+    assert len(vs) == 2  # counter in step + histogram in _decode_tick
+    assert "pre-bind at construction" in vs[0].message
+
+
+def test_obs_hot_loop_allocs_rule_allows_prebound_use():
+    # Registration in __init__ and .inc()/.observe() on the bound
+    # instrument in the hot loop are exactly the sanctioned pattern.
+    ok = (
+        "class E:\n"
+        "    def __init__(self, m):\n"
+        "        self._m_steps = m.counter('steps')\n"
+        "        self._h_step = m.histogram('step_s')\n"
+        "    def step(self):\n"
+        "        self._m_steps.inc()\n"
+        "        self._h_step.observe(0.1)\n"
+    )
+    assert lint_source(ok, "src/repro/serving/engine.py",
+                       rules=["obs-no-hot-loop-allocs"]) == []
+    # the same registration outside serving/ is out of scope
+    bad_path = (
+        "class E:\n"
+        "    def step(self):\n"
+        "        self.m.counter('steps').inc()\n"
+    )
+    assert lint_source(bad_path, "src/repro/launch/loadgen.py",
+                       rules=["obs-no-hot-loop-allocs"]) == []
+
+
 # --- registry / CLI / live tree ----------------------------------------------
 
 
@@ -154,6 +192,7 @@ def test_every_registered_rule_has_a_bad_fixture_test():
         "compat-only-versioned-jax", "plan-dispatch-only",
         "no-legacy-engine-construction", "decode-relevance-shared",
         "pallas-call-via-compat", "no-host-sync-in-decode-hot-loop",
+        "obs-no-hot-loop-allocs",
     }
     assert set(RULES) == covered
 

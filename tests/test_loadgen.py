@@ -1,0 +1,127 @@
+"""Load-harness tests (``repro.launch.loadgen``, PR 7).
+
+Workload construction is deterministic and pure, so it gets exact tests;
+the end-to-end drive runs one small dense load and checks the artifact
+contract (envelope JSON + Perfetto-loadable Chrome trace + SLO
+percentiles + drift table) the CI smoke also enforces at full size.
+"""
+
+import argparse
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.launch import loadgen
+from repro.models import transformer
+
+
+def _cfg():
+    return registry.get_smoke_config("llama3-8b")
+
+
+def test_build_workload_poisson_arrivals_sorted_and_seeded():
+    cfg = _cfg()
+    w1 = loadgen.build_workload(cfg, np.random.default_rng(7), 32, rate=10.0)
+    w2 = loadgen.build_workload(cfg, np.random.default_rng(7), 32, rate=10.0)
+    arrivals = [t for t, _ in w1]
+    assert arrivals == sorted(arrivals)
+    assert all(t > 0 for t in arrivals)
+    # Same seed -> same trace (arrivals and prompts).
+    assert arrivals == [t for t, _ in w2]
+    for (_, a), (_, b) in zip(w1, w2):
+        assert np.array_equal(a.prompt, b.prompt)
+        assert a.sampling.max_tokens == b.sampling.max_tokens
+    # Mean inter-arrival ~ 1/rate (loose: 32 samples).
+    gaps = np.diff([0.0] + arrivals)
+    assert 0.3 / 10.0 < gaps.mean() < 3.0 / 10.0
+
+
+def test_build_workload_shared_prefix_population():
+    cfg = _cfg()
+    w = loadgen.build_workload(
+        cfg, np.random.default_rng(0), 40, rate=10.0,
+        shared_prefix_len=16, shared_fraction=0.5,
+    )
+    prompts = [r.prompt for _, r in w]
+    heads = [tuple(np.asarray(p[:16])) for p in prompts if len(p) > 16]
+    shared = max(heads.count(h) for h in set(heads))
+    # ~half the population starts with the one system prefix.
+    assert shared >= 10
+    # And the mix produces several distinct prompt lengths.
+    assert len({len(p) for p in prompts}) >= 3
+
+    none = loadgen.build_workload(
+        cfg, np.random.default_rng(0), 8, rate=10.0, shared_fraction=0.0,
+    )
+    lens = {len(r.prompt) for _, r in none}
+    assert lens <= {v for v, _ in loadgen.PROMPT_MIX}
+
+
+def test_percentiles():
+    vals = [float(i) for i in range(1, 101)]
+    p = loadgen.percentiles(vals)
+    assert p["p50"] == pytest.approx(50.5)
+    assert p["p90"] == pytest.approx(90.1)
+    assert p["p99"] == pytest.approx(99.01)
+    assert loadgen.percentiles([]) == {"p50": None, "p90": None, "p99": None}
+
+
+def test_run_one_dense_end_to_end(tmp_path):
+    """One small measured load: every request finishes, SLO percentiles
+    and drift rows exist, and both artifacts land in --out-dir with the
+    documented schemas."""
+    args = argparse.Namespace(
+        arch="llama3-8b", smoke=True, kv_layout="dense", requests=4,
+        rate=200.0, max_batch=2, cache_len=128, num_pages=96, page_size=16,
+        shared_prefix=16, shared_fraction=0.5, temperature=0.0, seed=0,
+        out_dir=str(tmp_path),
+    )
+    payload = loadgen.run_one(args, "dense")
+    loadgen._smoke_check(payload)
+
+    assert payload["kv_layout"] == "dense"
+    assert payload["finished"] == 4
+    assert payload["ttft_s"]["p99"] >= payload["ttft_s"]["p50"] > 0
+    assert payload["measured_tok_s"] > 0
+    assert payload["prefix"]["prefix_hit_rate"] is None  # dense: n/a
+    assert payload["drift"]["rows"]
+    for row in payload["drift"]["rows"]:
+        assert row["samples"] > 0 and row["measured_p50_s"] > 0
+
+    env = json.load(open(tmp_path / "loadgen_dense.json"))
+    assert env["schema"] == "repro.obs/v1"
+    assert env["kind"] == "loadgen"
+    assert env["metrics"]["serving_finished_total"]["value"] == 4.0
+    trace = json.load(open(tmp_path / "loadgen_dense_trace.json"))
+    tids = {e["tid"] for e in trace["traceEvents"] if e["ph"] == "b"}
+    assert len(tids) == 4  # one async track per measured request
+
+
+def test_warmup_resets_measurement():
+    """Warmup pilots compile but never pollute measured telemetry: after
+    reset, counters and drift restart from zero while the instruments
+    stay bound."""
+    from repro.obs import Telemetry
+    from repro.serving import LLMEngine, Request, SamplingParams
+
+    cfg = _cfg()
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    tel = Telemetry.create()
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=2,
+                    cache_len=128, prompt_buckets=(16, 32, 64),
+                    telemetry=tel)
+    rng = np.random.default_rng(0)
+    workload = loadgen.build_workload(cfg, rng, 3, rate=1000.0)
+    loadgen._warmup(eng, cfg, rng, workload)
+    assert tel.metrics.snapshot()["serving_steps_total"]["value"] == 0.0
+    assert tel.tracer.spans == []
+    assert tel.drift.num_samples == 0
+    assert eng.stats().tokens_generated == 0
+
+    eng.generate([Request(uid=0, prompt=rng.integers(1, 400, size=(8,)),
+                          sampling=SamplingParams(max_tokens=2))])
+    assert tel.metrics.snapshot()["serving_steps_total"]["value"] > 0
+    eng.close()

@@ -605,3 +605,165 @@ def test_no_legacy_engine_construction_outside_serving():
     from repro.analysis import run_rules
 
     assert run_rules(rules=["no-legacy-engine-construction"]) == []
+
+
+# --- telemetry (PR 7) ---------------------------------------------------------
+
+
+def test_disabled_telemetry_shares_null_instruments(llama):
+    """The telemetry-off contract: an un-instrumented engine threads the
+    module-level no-op singletons — no span or metric objects exist per
+    step, and nothing is recorded."""
+    from repro.obs import NULL_TELEMETRY
+    from repro.obs.metrics import NULL_COUNTER, NULL_HISTOGRAM
+    from repro.obs.tracing import NULL_SPAN
+
+    cfg, params = llama
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=2,
+                    cache_len=128, prompt_buckets=(16,))
+    assert eng.telemetry is NULL_TELEMETRY
+    assert eng._m_steps is NULL_COUNTER
+    assert eng._h_decode is NULL_HISTOGRAM
+    assert eng._tr.span("step") is eng._tr.span("decode") is NULL_SPAN
+    rng = np.random.default_rng(0)
+    eng.generate([Request(uid=0, prompt=rng.integers(1, 400, size=(8,)),
+                          max_new_tokens=3)])
+    assert NULL_COUNTER.value == 0.0
+    assert NULL_HISTOGRAM.count == 0
+    assert eng.telemetry.tracer.spans == []
+    assert eng.telemetry.drift.num_samples == 0
+
+
+def test_telemetry_records_lifecycle_spans_and_drift(llama):
+    from repro.obs import Telemetry
+
+    cfg, params = llama
+    tel = Telemetry.create()
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=2,
+                    cache_len=128, prompt_buckets=(16,), telemetry=tel)
+    rng = np.random.default_rng(2)
+    reqs = [Request(uid=i, prompt=rng.integers(1, 400, size=(8,)),
+                    max_new_tokens=4) for i in range(2)]
+    results = eng.generate(reqs)
+    assert len(results) == 2
+
+    snap = tel.metrics.snapshot()
+    assert snap["serving_requests_total"]["value"] == 2.0
+    assert snap["serving_finished_total"]["value"] == 2.0
+    total = sum(len(r.tokens) for r in results)
+    assert snap["serving_tokens_total"]["value"] == float(total)
+    assert snap["serving_steps_total"]["value"] > 0
+    assert snap["serving_decode_step_seconds"]["count"] > 0
+
+    span_names = {s.name for s in tel.tracer.spans}
+    assert {"step", "schedule", "flush", "decode"} <= span_names
+    for uid in (0, 1):
+        events = [e for e, _, _ in tel.tracer.request_lifecycle(uid)]
+        assert events[0] == "arrival" and events[-1] == "finish"
+        assert "admitted" in events and "first_token" in events
+        lat = tel.tracer.request_latencies()[uid]
+        assert lat["ttft"] is not None and lat["ttft"] >= 0
+        assert lat["e2e"] is not None and lat["e2e"] >= lat["ttft"]
+        # max_new_tokens=4 -> first token + 3 inter-token intervals
+        assert len(lat["itl"]) == 3
+
+    assert tel.drift.num_samples > 0
+    report = tel.drift.report(eng.drift_model_fn())
+    assert report.rows and report.worst_ratio() is not None
+
+
+def test_telemetry_counts_preemptions(llama):
+    """Preempt/resume lifecycles reach the tracer and the counter (the
+    page-pressure trace from test_paged_preemption_under_page_pressure,
+    instrumented)."""
+    from repro.obs import Telemetry
+
+    cfg, params = llama
+    tel = Telemetry.create()
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=17,
+                    page_size=16, max_batch=2, max_pages_per_seq=16,
+                    prompt_buckets=(16, 32), prefix_sharing=False,
+                    telemetry=tel)
+    rng = np.random.default_rng(3)
+    reqs = [
+        Request(uid=0, prompt=rng.integers(1, 400, size=(16,)),
+                max_new_tokens=40, priority=1),
+        Request(uid=1, prompt=rng.integers(1, 400, size=(16,)),
+                max_new_tokens=8),
+    ]
+    results = eng.generate(reqs)
+    assert len(results) == 2
+    stats = eng.stats()
+    if stats.preemptions:  # page pressure fired
+        snap = tel.metrics.snapshot()
+        assert snap["serving_preemptions_total"]["value"] == \
+            float(stats.preemptions)
+        preempted = [
+            uid for uid in (0, 1)
+            if any(e == "preempt"
+                   for e, _, _ in tel.tracer.request_lifecycle(uid))
+        ]
+        assert preempted, "preemption happened but no lifecycle event"
+        for uid in preempted:
+            events = [e for e, _, _ in tel.tracer.request_lifecycle(uid)]
+            assert "resume" in events, events
+            assert tel.tracer.request_latencies()[uid]["preemptions"] >= 1
+
+
+def test_stats_split_measured_vs_modeled(llama):
+    cfg, params = llama
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=2,
+                    cache_len=128, prompt_buckets=(16,))
+    rng = np.random.default_rng(4)
+    eng.generate([Request(uid=0, prompt=rng.integers(1, 400, size=(8,)),
+                          max_new_tokens=4)])
+    stats = eng.stats()
+    assert stats.tokens_per_s > 0
+    assert stats.measured_tok_s > 0
+    assert stats.decode_elapsed_s > 0
+    # Decode-phase wall time is a subset of total engine wall time, so
+    # the decode-normalized rate can only be faster.
+    assert stats.decode_elapsed_s <= stats.elapsed_s
+    assert stats.measured_tok_s >= stats.tokens_per_s
+    assert stats.modeled_tok_s > 0
+    assert "measured decode" in stats.summary()
+
+
+def test_modeled_tok_s_near_zero_model_reports_zero(llama):
+    """The PR-7 satellite fix: a denormal decode_time_model result used
+    to print as 10^15 modeled tok/s; safe_rate reports 0.0 (unknown)."""
+    cfg, params = llama
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=1,
+                    cache_len=128, prompt_buckets=(16,))
+    eng.backend.decode_time_model = lambda batch, mean_len=None: 1e-12
+    stats = eng.stats()
+    assert stats.modeled_tok_s == 0.0
+    # And zero elapsed/decode time reports 0.0 rates, not a blow-up.
+    assert stats.tokens_per_s == 0.0
+    assert stats.measured_tok_s == 0.0
+
+
+def test_dense_prefix_hit_rate_is_none_not_zero(llama):
+    """Dense engines have no prefix cache: stats must say "n/a" (None),
+    never a fake 0.0 that reads as a cold cache (PR 7 satellite)."""
+    from repro.obs import Telemetry
+
+    cfg, params = llama
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=1,
+                    cache_len=128, prompt_buckets=(16,))
+    ps = eng.backend.prefix_stats()
+    assert ps["prefix_hit_rate"] is None
+    assert ps["prefix_lookup_queries"] == 0.0
+    assert eng.stats().prefix_hit_rate is None
+    assert "prefix hit n/a" in eng.stats().summary()
+
+    # Paged engines report a real float (0.0 means "never shared").
+    tel = Telemetry.create()
+    peng = LLMEngine(cfg, params, kv_layout="paged", num_pages=96,
+                     page_size=16, max_batch=2, max_pages_per_seq=8,
+                     prompt_buckets=(16, 32), telemetry=tel)
+    pps = peng.backend.prefix_stats()
+    assert pps["prefix_hit_rate"] == 0.0
+    assert peng.stats().prefix_hit_rate == 0.0
+    assert {"prefix_lookup_hits", "prefix_lookup_queries",
+            "prefix_evictions"} <= set(pps)
