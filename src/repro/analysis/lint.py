@@ -328,10 +328,10 @@ def check_pallas_call_compat(modules: Sequence[Module]) -> List[Violation]:
 
 
 #: Decode-hot-loop functions in serving/: one step() must stay free of
-#: host round-trips. ``LLMEngine._advance`` is deliberately *not* listed —
-#: it is the sanctioned once-per-tick sync point until ROADMAP item 3
-#: (host-free scan decode) lands.
-_HOT_LOOP_FNS = ("decode", "prepare_row", "_decode_tick")
+#: host round-trips. ``LLMEngine._sync_scan`` is deliberately *not*
+#: listed — with the fused ``lax.scan`` decode (ROADMAP item 3) it is the
+#: sanctioned sync point, entered once per ``steps_per_sync`` tokens.
+_HOT_LOOP_FNS = ("decode", "prepare_row", "_decode_tick", "fused_decode")
 _HOST_SYNC_ATTRS = ("item", "block_until_ready")
 _NUMPY_ALIASES = ("np", "numpy")
 
@@ -339,9 +339,9 @@ _NUMPY_ALIASES = ("np", "numpy")
 @rule(
     "no-host-sync-in-decode-hot-loop",
     "no .item() / np.asarray / block_until_ready inside serving/ decode "
-    "hot-loop functions (decode, prepare_row, _decode_tick) — host syncs "
-    "there serialize the NUMA-local pipeline",
-    advisory=True,
+    "hot-loop functions (decode, prepare_row, _decode_tick, fused_decode) "
+    "— host syncs there serialize the NUMA-local pipeline; the only "
+    "sanctioned sync point is LLMEngine._sync_scan, once per fused scan",
 )
 def check_host_sync(modules: Sequence[Module]) -> List[Violation]:
     out: List[Violation] = []
@@ -380,8 +380,9 @@ def check_host_sync(modules: Sequence[Module]) -> List[Violation]:
 #: Serving functions on the per-tick path (PR 7): telemetry there may
 #: only *use* pre-bound instruments, never register/look them up.
 #: ``__init__`` is where binding happens; these are where it must not.
-_OBS_HOT_FNS = ("step", "_decode_tick", "_advance", "_flush",
-                "_emit_lifecycle", "decode", "prepare_row")
+_OBS_HOT_FNS = ("step", "_decode_tick", "_sync_scan", "_flush",
+                "_emit_lifecycle", "decode", "prepare_row",
+                "fused_decode")
 _OBS_REGISTRATION_CALLS = ("counter", "gauge", "histogram", "labels")
 
 

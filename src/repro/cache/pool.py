@@ -197,6 +197,54 @@ class PagePool:
         seq.length = pos + 1
         return seq.tail_page(), pos % self.page_size, cow
 
+    def reserve_tokens(
+        self,
+        seq: SequencePages,
+        num_tokens: int,
+        cows: Optional[List[Tuple[int, int]]] = None,
+    ) -> List[Tuple[int, int]]:
+        """Pre-grow ``seq`` by ``num_tokens`` slots in one go; returns the
+        list of ``(src, dst)`` COW copies the engine must apply before any
+        of the reserved slots is written.
+
+        This is the host-side half of the fused multi-step decode scan: the
+        scan writes up to N tokens per row without host intervention, so
+        every page those tokens could land in must exist *before* launch.
+        Built on :meth:`append_token` (one call per token) so page-boundary
+        and copy-on-write behaviour — and the shadow sanitizer's view of
+        both — is identical to N single-step appends. On ``OutOfPages``
+        the partial progress is kept (``seq.length`` reflects it; COWs so
+        far are in ``cows`` when the caller passed its own list), so the
+        caller can free room and re-request the remainder.
+        """
+        out = cows if cows is not None else []
+        for _ in range(num_tokens):
+            _, _, cow = self.append_token(seq)
+            if cow is not None:
+                out.append(cow)
+        return out
+
+    def trim_tokens(self, seq: SequencePages, new_length: int) -> int:
+        """Shrink ``seq`` back to ``new_length`` tokens, returning now-unused
+        tail pages to the pool; returns #pages freed.
+
+        The inverse of an over-reservation: a scan that stopped early (stop
+        token, all rows done) consumed fewer slots than were reserved, and
+        the untouched tail pages go straight back on the free list.
+        """
+        if seq.released:
+            raise SequenceReleasedError("trim_tokens on a released sequence")
+        if not 0 <= new_length <= seq.length:
+            raise ValueError(
+                f"trim_tokens to {new_length} outside [0, {seq.length}]"
+            )
+        keep = self.pages_needed(new_length)
+        freed = 0
+        while len(seq.pages) > keep:
+            freed += bool(self.decref(seq.pages.pop()))
+        seq.length = new_length
+        return freed
+
     def fork(self, seq: SequencePages) -> SequencePages:
         """A new sequence sharing every page of ``seq`` (beam/parallel
         sampling). All pages — including the partial tail — are shared;

@@ -16,6 +16,13 @@ supports is funnelled through here, so a JAX bump is a one-file change:
   * backend / interpret detection — ``default_backend()`` / ``on_tpu()`` /
     ``use_interpret()`` centralize the "can this host lower Mosaic?" test
     that the kernels, ops dispatch and models previously duplicated.
+  * ``enable_compilation_cache(...)`` — the persistent compilation cache
+    moved from ``jax.experimental.compilation_cache.initialize_cache`` to
+    plain config flags across the supported range; the serving engine calls
+    this once so steady-state decode never recompiles across processes.
+  * ``donating_jit(...)`` — ``jax.jit`` with ``donate_argnums`` that stays
+    quiet on backends where donation is unsupported (CPU XLA warns
+    "Some donated buffers were not usable" on every call).
 
 Supported-JAX policy (see ROADMAP.md): oldest supported is 0.4.37 (the
 container's pinned toolchain); the shims are written against the 0.5-0.7
@@ -28,8 +35,10 @@ run by CI as ``python -m repro.analysis --strict`` and by tier-1 via
 
 from __future__ import annotations
 
+import functools
 import inspect
-from typing import Optional, Sequence, Tuple
+import warnings
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 from jax.experimental.pallas import tpu as pltpu
@@ -130,6 +139,79 @@ def make_mesh(
         if "axis_types" in sig.parameters and _axis_type(axis_types[0]) is not None:
             kwargs["axis_types"] = tuple(_axis_type(t) for t in axis_types)
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def enable_compilation_cache(cache_dir: Optional[str] = None) -> bool:
+    """Turn on JAX's persistent compilation cache, best-effort.
+
+    Returns True when a cache directory is active afterwards. The API
+    surface moved across the supported range (``initialize_cache(path)``
+    on 0.4.x, ``jax.config.update("jax_compilation_cache_dir", ...)`` plus
+    threshold flags later), so every path is attempted and failures are
+    swallowed: the cache is a steady-state-latency optimization, never a
+    correctness dependency.
+    """
+    active = False
+    if cache_dir is not None:
+        try:
+            jax.config.update("jax_compilation_cache_dir", cache_dir)
+            active = True
+        except Exception:
+            try:
+                from jax.experimental.compilation_cache import (
+                    compilation_cache as _cc,
+                )
+                _cc.initialize_cache(cache_dir)
+                active = True
+            except Exception:
+                pass
+    else:
+        active = getattr(
+            jax.config, "jax_compilation_cache_dir", None
+        ) is not None
+    # Cache even tiny/fast compilations (the decode scan body is small on
+    # CPU CI but the retrace guarantee must still be exercised there).
+    for flag, value in (
+        ("jax_persistent_cache_min_compile_time_secs", 0.0),
+        ("jax_persistent_cache_min_entry_size_bytes", -1),
+    ):
+        try:
+            jax.config.update(flag, value)
+        except Exception:
+            pass
+    return active
+
+
+def donating_jit(
+    fn: Callable,
+    *,
+    donate_argnums: Sequence[int] = (),
+    static_argnums: Sequence[int] = (),
+) -> Callable:
+    """``jax.jit`` with buffer donation, quiet where donation is a no-op.
+
+    On TPU/GPU the donated KV-cache buffers are reused in place (the decode
+    scan's carry aliases its input, halving peak HBM for the caches). CPU
+    XLA cannot alias them and emits a ``UserWarning`` per call; that
+    warning is filtered here so CI logs stay readable — behaviour is
+    unchanged either way (donation is an optimization hint).
+    """
+    jitted = jax.jit(
+        fn,
+        donate_argnums=tuple(donate_argnums),
+        static_argnums=tuple(static_argnums),
+    )
+
+    @functools.wraps(fn)
+    def call(*args, **kwargs):
+        with warnings.catch_warnings():
+            warnings.filterwarnings(
+                "ignore", message=".*[Dd]onat", category=UserWarning
+            )
+            return jitted(*args, **kwargs)
+
+    call.jitted = jitted
+    return call
 
 
 def default_backend() -> str:

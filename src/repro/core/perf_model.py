@@ -209,6 +209,19 @@ def estimate_paged_decode(
 #: plus its scheduling latency. Charged once whenever num_splits > 1.
 COMBINE_LAUNCH_OVERHEAD_S = 2e-6
 
+#: Modeled host-side cost of one decode sync: dispatch of the jitted step,
+#: device->host transfer of the sampled tokens, and the Python bookkeeping
+#: (stop scan, page-table upkeep, output flush) before the next launch.
+#: This is the per-token tax the fused multi-step scan amortizes.
+HOST_SYNC_OVERHEAD_S = 50e-6
+
+
+def amortized_host_overhead(steps_per_sync: int) -> float:
+    """Modeled per-token host overhead when the engine syncs once per
+    ``steps_per_sync`` fused scan ticks: the fixed :data:`HOST_SYNC_OVERHEAD_S`
+    is paid once per sync and spread over the N tokens it produced."""
+    return HOST_SYNC_OVERHEAD_S / max(int(steps_per_sync), 1)
+
 #: Default cap on the split sweep. The model plateaus well before this on
 #: every topology we carry (waves stop shrinking once cells x splits covers
 #: the domains, and the combine term grows linearly), so the cap only

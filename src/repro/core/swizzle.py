@@ -43,6 +43,33 @@ ALL_MAPPINGS = (
     SWIZZLED_HEAD_FIRST,
 )
 
+# KV-sweep traversal within a mapping (Sawtooth Wavefront Reordering,
+# PAPERS.md; ROADMAP 5(a)). Orthogonal to the four paper mappings: the
+# mapping decides which cell a workgroup computes, the traversal decides
+# the *direction* each KV sweep walks its tiles. ``sawtooth`` serpentines
+# — even sweeps ascend, odd sweeps descend — so the tile at a sweep
+# boundary is shared with the next sweep and its HBM->VMEM copy is
+# skipped (Pallas revisiting; on a GPU, the tile is L2-hot).
+LINEAR = "linear"
+SAWTOOTH = "sawtooth"
+TRAVERSALS = (LINEAR, SAWTOOTH)
+
+
+def kv_tile_order(traversal: str, sweep, n, num_n: int):
+    """Effective KV tile index for step ``n`` of sweep ``sweep``.
+
+    ``linear`` walks 0..num_n-1 every sweep; ``sawtooth`` reverses odd
+    sweeps (serpentine), so consecutive sweeps meet at a shared boundary
+    tile. Pure ``//``/``%``/``*`` arithmetic — evaluates identically on
+    Python ints, numpy arrays and JAX tracers (Pallas ``index_map``s).
+    """
+    if traversal == LINEAR:
+        return n
+    if traversal != SAWTOOTH:
+        raise ValueError(f"unknown traversal {traversal!r}")
+    rev = sweep % 2
+    return (1 - rev) * n + rev * (num_n - 1 - n)
+
 
 @dataclasses.dataclass(frozen=True)
 class AttentionGrid:

@@ -49,6 +49,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.core import swizzle
 
 NEG_INF = -1e30
 
@@ -78,6 +79,12 @@ class MappingConfig:
     # wrapper falls back to streaming. ~half of v5e VMEM, leaving room for
     # double-buffered Q/O and accumulators.
     vmem_budget_bytes: int = 64 * 1024 * 1024
+    # KV-sweep traversal for the *streaming* path (sawtooth wavefront,
+    # ROADMAP 5(a)): "linear" walks tiles 0..num_n-1 every sweep;
+    # "sawtooth" serpentines so consecutive sweeps share their boundary
+    # tile and Pallas skips its HBM->VMEM copy. Ignored when the K/V is
+    # VMEM-resident (there is no per-tile sweep to reorder).
+    traversal: str = swizzle.LINEAR
 
     def resolve_resident(self, skv: int, head_dim: int, dtype_bytes: int) -> bool:
         if not self.kv_resident:
@@ -138,14 +145,19 @@ def _apply_softcap(s, softcap: Optional[float]):
 def _fwd_stream_kernel(
     q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
     *, scale, causal, window, softcap, kv_len, num_n, block_m, block_n, order,
+    traversal,
 ):
     if order == HEAD_FIRST:
         m_idx = pl.program_id(2)
     else:
         m_idx = pl.program_id(1)
-    n_idx = pl.program_id(3)
+    # n_seq is the *position in the sweep* (init/emit anchors); n_idx is
+    # the KV tile this step actually loads — under sawtooth odd sweeps
+    # walk the tiles in reverse, mirroring the kv BlockSpec index_map.
+    n_seq = pl.program_id(3)
+    n_idx = swizzle.kv_tile_order(traversal, m_idx, n_seq, num_n)
 
-    @pl.when(n_idx == 0)
+    @pl.when(n_seq == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
@@ -191,7 +203,7 @@ def _fwd_stream_kernel(
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
-    @pl.when(n_idx == num_n - 1)
+    @pl.when(n_seq == num_n - 1)
     def _emit():
         l = l_ref[:, 0:1]
         l_safe = jnp.where(l == 0.0, 1.0, l)
@@ -383,12 +395,14 @@ def flash_attention_fwd(
 
     def kv_idx(*g):
         b_, h_, m_ = gidx(*g[:3])
-        return (b_, h_ // group, g[3], 0)
+        n_ = swizzle.kv_tile_order(mapping.traversal, m_, g[3], num_n)
+        return (b_, h_ // group, n_, 0)
 
     kernel = functools.partial(
         _fwd_stream_kernel,
         scale=scale, causal=causal, window=window, softcap=softcap,
         kv_len=kv_len, num_n=num_n, block_m=bm, block_n=bn, order=mapping.order,
+        traversal=mapping.traversal,
     )
     fn = pl.pallas_call(
         kernel,
@@ -474,7 +488,22 @@ def hbm_block_fetches(
         # Streaming: the full num_n-tile K/V sweep is refetched for every
         # (q-head, q-block) pair under either order (no cache between HBM and
         # VMEM on TPU; order only changes which ACC is live, not the traffic).
-        kv_traffic = batch * num_q_heads * num_m * num_n * kv_tile_bytes
+        kv_fetches = batch * num_q_heads * num_m * num_n
+        if (mapping.traversal == swizzle.SAWTOOTH
+                and mapping.order == HEAD_FIRST and num_n > 1):
+            # Serpentine sweeps share their boundary tile: the last tile of
+            # sweep m is the first tile of sweep m+1, so Pallas skips its
+            # copy — one tile saved per consecutive-sweep boundary. Within a
+            # q-head that is num_m - 1 boundaries; across the g q-heads of a
+            # GQA group (same kv head, consecutive under head_first) the
+            # head boundary also matches when num_m is even (the last sweep
+            # ends where the next head's first sweep starts).
+            group = max(1, num_q_heads // max(num_kv_heads, 1))
+            saved_per_kv = (num_m - 1) * group + (
+                (group - 1) if num_m % 2 == 0 else 0
+            )
+            kv_fetches -= batch * num_kv_heads * saved_per_kv
+        kv_traffic = kv_fetches * kv_tile_bytes
     # Q: each (bm, D) block is copied once per (batch, q-head, q-block) —
     # under head_first the block is revisited across the whole KV sweep, and
     # under block_first it still changes only when m does.

@@ -164,6 +164,7 @@ def _score_mapping(
     window: Optional[int],
 ) -> MappingConfig:
     from repro.core import perf_model
+    from repro.core import swizzle
     from repro.core.cache_sim import AttentionWorkload
     from repro.core.swizzle import AttentionGrid
 
@@ -192,56 +193,66 @@ def _score_mapping(
         bn_eff = _clamp(bn, seq_kv)
         for order in (HEAD_FIRST, BLOCK_FIRST):
             for kv_resident in (True, False):
-                cand = MappingConfig(
-                    order=order,
-                    kv_resident=kv_resident,
-                    acc_parallel=True,
-                    block_m=bm_eff,
-                    block_n=bn_eff,
-                    vmem_budget_bytes=vmem_budget_bytes,
-                )
-                if kv_resident and not cand.resolve_resident(
-                    seq_kv, head_dim, dtype_bytes
-                ):
-                    # Over-budget residency degenerates to streaming; keep
-                    # only the honest streaming candidate.
-                    continue
-                # perf_model.estimate models a square (seq_kv x seq_kv)
-                # launch: it recomputes blocks_per_head from wl.seq_len, so
-                # feed it the same convention. For rectangular shapes
-                # (bucketed prefill vs long cache) the analytic time is a
-                # square proxy; the exact rectangular traffic enters via the
-                # tie-break below.
-                grid = AttentionGrid(
-                    batch=batch,
-                    num_q_heads=num_q_heads,
-                    blocks_per_head=-(-seq_kv // bm_eff),
-                    group_size=group,
-                )
-                wl = AttentionWorkload(
-                    grid=grid,
-                    seq_len=seq_kv,
-                    head_dim=head_dim,
-                    block_m=bm_eff,
-                    block_n=bn_eff,
-                    causal=causal,
-                    dtype_bytes=dtype_bytes,
-                )
-                est = perf_model.estimate(_PAPER_NAME[order], wl, topo)
-                traffic = hbm_block_fetches(
-                    batch=batch,
-                    num_q_heads=num_q_heads,
-                    num_kv_heads=num_kv_heads,
-                    seq_q=seq_q,
-                    seq_kv=seq_kv,
-                    head_dim=head_dim,
-                    dtype_bytes=dtype_bytes,
-                    mapping=cand,
-                )["total_bytes"]
-                key = (est.time, traffic, rank)
-                rank += 1
-                if best is None or key < best[0]:
-                    best = (key, cand)
+                # Sawtooth wavefront (ROADMAP 5(a)) is a streaming-only
+                # refinement: serpentine KV sweeps share boundary tiles, so
+                # it enters the candidate space wherever a sweep exists
+                # (head_first streaming). Listed after linear so it wins
+                # only on the exact-traffic tie-break, never on rank.
+                traversals = (swizzle.LINEAR,)
+                if not kv_resident and order == HEAD_FIRST:
+                    traversals = (swizzle.LINEAR, swizzle.SAWTOOTH)
+                for traversal in traversals:
+                    cand = MappingConfig(
+                        order=order,
+                        kv_resident=kv_resident,
+                        acc_parallel=True,
+                        block_m=bm_eff,
+                        block_n=bn_eff,
+                        vmem_budget_bytes=vmem_budget_bytes,
+                        traversal=traversal,
+                    )
+                    if kv_resident and not cand.resolve_resident(
+                        seq_kv, head_dim, dtype_bytes
+                    ):
+                        # Over-budget residency degenerates to streaming;
+                        # keep only the honest streaming candidate.
+                        continue
+                    # perf_model.estimate models a square (seq_kv x seq_kv)
+                    # launch: it recomputes blocks_per_head from
+                    # wl.seq_len, so feed it the same convention. For
+                    # rectangular shapes (bucketed prefill vs long cache)
+                    # the analytic time is a square proxy; the exact
+                    # rectangular traffic enters via the tie-break below.
+                    grid = AttentionGrid(
+                        batch=batch,
+                        num_q_heads=num_q_heads,
+                        blocks_per_head=-(-seq_kv // bm_eff),
+                        group_size=group,
+                    )
+                    wl = AttentionWorkload(
+                        grid=grid,
+                        seq_len=seq_kv,
+                        head_dim=head_dim,
+                        block_m=bm_eff,
+                        block_n=bn_eff,
+                        causal=causal,
+                        dtype_bytes=dtype_bytes,
+                    )
+                    est = perf_model.estimate(_PAPER_NAME[order], wl, topo)
+                    traffic = hbm_block_fetches(
+                        batch=batch,
+                        num_q_heads=num_q_heads,
+                        num_kv_heads=num_kv_heads,
+                        seq_q=seq_q,
+                        seq_kv=seq_kv,
+                        head_dim=head_dim,
+                        dtype_bytes=dtype_bytes,
+                        mapping=cand,
+                    )["total_bytes"]
+                    key = (est.time, traffic, rank)
+                    rank += 1
+                    if best is None or key < best[0]:
+                        best = (key, cand)
     return best[1]
 
 

@@ -97,6 +97,10 @@ def build_workload(
     return out
 
 
+def safe_div(num: float, den: float) -> float:
+    return num / den if den else 0.0
+
+
 def percentiles(values, qs=(50, 90, 99)) -> Dict[str, Optional[float]]:
     if not values:
         return {f"p{q}": None for q in qs}
@@ -164,6 +168,9 @@ def run_one(args, kv_layout: str) -> Dict:
         page_size=args.page_size,
         prompt_buckets=(16, 32, 64),
         telemetry=telemetry,
+        # getattr: programmatic callers hand-build the namespace and may
+        # predate the flag (tests/test_loadgen.py does).
+        steps_per_sync=getattr(args, "steps_per_sync", 1),
     )
     rng = np.random.default_rng(args.seed)
     workload = build_workload(
@@ -173,10 +180,12 @@ def run_one(args, kv_layout: str) -> Dict:
         temperature=args.temperature,
     )
     _warmup(engine, cfg, rng, workload)
+    traces_warm = engine.backend.stats.get("decode_traces", 0)
 
     t0 = time.perf_counter()
     done = drive(engine, workload)
     wall = time.perf_counter() - t0
+    retraces = engine.backend.stats.get("decode_traces", 0) - traces_warm
 
     lat = telemetry.tracer.request_latencies()
     measured = {uid: d for uid, d in lat.items() if uid < 10_000_000}
@@ -187,6 +196,20 @@ def run_one(args, kv_layout: str) -> Dict:
     prefix = engine.backend.prefix_stats()
     drift = telemetry.drift.report(engine.drift_model_fn())
 
+    from repro.core import perf_model
+
+    # Per-token host overhead: the per-step residual (step wall minus its
+    # schedule / flush / decode phases) over the tokens produced — output
+    # sync, bookkeeping, span plumbing. This is the once-per-sync tax the
+    # fused N-step scan amortizes; flush is excluded because prefill cost
+    # (and any in-run compilation) is per-request, not per-token.
+    snap = telemetry.metrics.snapshot()
+    host_overhead = safe_div(
+        stats.elapsed_s - stats.decode_elapsed_s
+        - snap["serving_flush_seconds"]["sum"]
+        - snap["serving_schedule_seconds"]["sum"],
+        stats.tokens_generated,
+    )
     payload = {
         "arch": args.arch,
         "smoke": bool(args.smoke),
@@ -195,10 +218,16 @@ def run_one(args, kv_layout: str) -> Dict:
         "finished": len(done),
         "rate_req_s": args.rate,
         "wall_s": wall,
+        "steps_per_sync": engine.steps_per_sync,
         "tokens_generated": stats.tokens_generated,
         "measured_tok_s": stats.measured_tok_s,
         "modeled_tok_s": stats.modeled_tok_s,
         "decode_elapsed_s": stats.decode_elapsed_s,
+        "host_overhead_per_token_s": host_overhead,
+        "modeled_host_overhead_s": perf_model.amortized_host_overhead(
+            engine.steps_per_sync
+        ),
+        "decode_retraces_after_warmup": retraces,
         "ttft_s": percentiles(ttft),
         "itl_s": percentiles(itl),
         "queue_s": percentiles(queue),
@@ -210,14 +239,18 @@ def run_one(args, kv_layout: str) -> Dict:
         "drift_worst_ratio": drift.worst_ratio(),
     }
     out_dir = args.out_dir or None
+    # N > 1 runs get their own artifact name so the N-sweep (smoke's
+    # host-overhead comparison) never clobbers the N=1 baseline.
+    n = engine.steps_per_sync
+    stem = f"loadgen_{engine.kv_layout}" + (f"_n{n}" if n > 1 else "")
     json_path = write_json_artifact(
-        f"loadgen_{engine.kv_layout}", payload,
+        stem, payload,
         metrics=telemetry.metrics,
         dirpath=out_dir, kind="loadgen",
     )
     trace_dir = out_dir or os.path.dirname(json_path)
     trace_path = telemetry.tracer.write_chrome_trace(
-        os.path.join(trace_dir, f"loadgen_{engine.kv_layout}_trace.json")
+        os.path.join(trace_dir, f"{stem}_trace.json")
     )
     payload["_artifacts"] = {"json": json_path, "trace": trace_path}
 
@@ -228,7 +261,11 @@ def run_one(args, kv_layout: str) -> Dict:
         )
 
     print(f"[loadgen:{engine.kv_layout}] {len(done)}/{args.requests} "
-          f"finished in {wall:.2f}s at rate {args.rate}/s")
+          f"finished in {wall:.2f}s at rate {args.rate}/s "
+          f"(steps_per_sync={engine.steps_per_sync})")
+    print(f"  host overhead {host_overhead * 1e6:.1f}us/token "
+          f"(modeled {payload['modeled_host_overhead_s'] * 1e6:.1f}us), "
+          f"{retraces} decode retraces after warmup")
     print(f"  TTFT p50/p90/p99: {ms(payload['ttft_s'])}")
     print(f"  ITL  p50/p90/p99: {ms(payload['itl_s'])}")
     print(f"  measured {stats.measured_tok_s:.1f} tok/s (decode wall "
@@ -286,6 +323,9 @@ def main(argv=None):
                          "--shared-fraction of requests")
     ap.add_argument("--shared-fraction", type=float, default=0.5)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--steps-per-sync", type=int, default=1,
+                    help="fused decode scan length N: the host syncs "
+                         "(flush/schedule/telemetry) once per N tokens")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out-dir", default=None,
                     help="artifact directory (default "
@@ -293,10 +333,48 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.smoke:
+        # Both layouts x N in {1, 8}: the fused-decode acceptance sweep.
+        # Per (layout, N) run the standard smoke checks apply; across N
+        # the N=8 run must hold the tentpole's guarantees — zero decode
+        # retraces after warmup and strictly lower per-token host
+        # overhead than the N=1 baseline.
+        sweep: Dict[str, Dict[int, Dict]] = {}
         for layout in ("dense", "paged"):
-            payload = run_one(args, layout)
-            _smoke_check(payload)
-        print("[loadgen] smoke OK (dense + paged)")
+            sweep[layout] = {}
+            for n in (1, 8):
+                args.steps_per_sync = n
+                payload = run_one(args, layout)
+                _smoke_check(payload)
+                if n > 1:
+                    assert payload["decode_retraces_after_warmup"] == 0, (
+                        layout, n, payload["decode_retraces_after_warmup"])
+                sweep[layout][n] = payload
+            base, fused = sweep[layout][1], sweep[layout][8]
+            assert (fused["host_overhead_per_token_s"]
+                    < base["host_overhead_per_token_s"]), (
+                layout, base["host_overhead_per_token_s"],
+                fused["host_overhead_per_token_s"])
+        overhead = {
+            layout: {
+                f"n{n}": {
+                    "host_overhead_per_token_s":
+                        p["host_overhead_per_token_s"],
+                    "modeled_host_overhead_s": p["modeled_host_overhead_s"],
+                    "measured_tok_s": p["measured_tok_s"],
+                    "tokens_generated": p["tokens_generated"],
+                    "decode_retraces_after_warmup":
+                        p["decode_retraces_after_warmup"],
+                }
+                for n, p in by_n.items()
+            }
+            for layout, by_n in sweep.items()
+        }
+        path = write_json_artifact(
+            "loadgen_host_overhead", overhead,
+            dirpath=args.out_dir or None, kind="loadgen",
+        )
+        print(f"[loadgen] wrote {path}")
+        print("[loadgen] smoke OK (dense + paged, N in {1, 8})")
     else:
         run_one(args, args.kv_layout)
 

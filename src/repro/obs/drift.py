@@ -65,16 +65,26 @@ class DriftCollector:
     def __init__(self):
         self._cells: Dict[Tuple[int, int], _Cell] = {}
 
-    def record(self, batch: int, mean_len: float, seconds: float) -> None:
-        """Fold one measured decode step into its cell."""
+    def record(self, batch: int, mean_len: float, seconds: float,
+               ticks: int = 1) -> None:
+        """Fold one measured decode launch into its cell.
+
+        ``ticks`` is the number of scan ticks the launch fused (the
+        ``steps_per_sync`` hot loop syncs the host once per N tokens):
+        the wall time is amortized to ``seconds / ticks`` per tick and
+        observed ``ticks`` times, so per-tick cells stay comparable
+        across N and the sample count keeps meaning "decode ticks"."""
+        ticks = max(int(ticks), 1)
         key = (int(batch), context_bucket(mean_len))
         cell = self._cells.get(key)
         if cell is None:
             cell = self._cells[key] = _Cell(
                 Histogram(f"decode_step_b{key[0]}_ctx{key[1]}")
             )
-        cell.hist.observe(seconds)
-        cell.len_sum += float(mean_len)
+        per_tick = seconds / ticks
+        for _ in range(ticks):
+            cell.hist.observe(per_tick)
+            cell.len_sum += float(mean_len)
 
     @property
     def num_samples(self) -> int:
@@ -147,5 +157,6 @@ class NullDriftCollector(DriftCollector):
 
     enabled = False
 
-    def record(self, batch: int, mean_len: float, seconds: float) -> None:
+    def record(self, batch: int, mean_len: float, seconds: float,
+               ticks: int = 1) -> None:
         pass

@@ -14,10 +14,15 @@ layouts — cache plumbing — behind one protocol the scheduler and the
     jit key with the admitted rows stacked on the batch axis — and
     returns each row's last-position logits (sampling is the engine's
     job, on device);
-  * ``prepare_row(row)`` / ``decode(tok)`` advance one decode tick;
-    page-pool pressure inside ``prepare_row`` consults the injected
-    ``choose_victim`` policy and reports evictions through ``on_preempt``
-    — the backend executes preemption, the scheduler decides it;
+  * ``reserve_rows(n)`` / ``fused_decode(...)`` / ``commit_scan(...)``
+    advance up to N decode ticks in **one jitted ``lax.scan``** — decode
+    kernel, on-device sampler, stop-token/max-token done masks, and the
+    cache append all stay on device, so the host intervenes once per N
+    tokens instead of once per token (ROADMAP item 3). Page-pool pressure
+    inside ``reserve_rows`` (and the single-step ``prepare_row`` kept as
+    the bit-exactness oracle) consults the injected ``choose_victim``
+    policy and reports evictions through ``on_preempt`` — the backend
+    executes preemption, the scheduler decides it;
   * ``release(row)`` frees a finished row; ``quote``/``free_pages``/
     ``evictable_pages``/``decode_time_model`` feed the scheduler's page
     budget and NUMA-occupancy admission policy.
@@ -49,6 +54,7 @@ from repro.cache.prefix import PrefixCache, page_hashes
 from repro.configs.base import ModelConfig
 from repro.kernels import plan as plan_lib
 from repro.models import transformer
+from repro.serving import sampling as sampling_lib
 from repro.serving.scheduler import DEFERRED, default_choose_victim
 
 
@@ -88,8 +94,15 @@ class _Backend:
             "preemptions": 0, "prefix_evictions": 0, "pages_reused": 0,
             "prompt_pages": 0, "cow_copies": 0, "extend_prefills": 0,
             "resumed_tokens": 0, "prefill_launches": 0,
-            "batched_prefills": 0,
+            "batched_prefills": 0, "decode_traces": 0,
         }
+        #: How many decode steps one engine sync fuses (set by LLMEngine;
+        #: the scheduler prices page growth against it).
+        self.steps_per_sync = 1
+        # Fused-decode launchers, keyed (n_steps, stop-width bucket,
+        # multi-codebook) — O(1) keys per engine, so steady-state decode
+        # never retraces (stats["decode_traces"] counts traces).
+        self._scan_cache: Dict = {}
 
     @property
     def num_active(self) -> int:
@@ -105,6 +118,139 @@ class _Backend:
 
     def fits_buckets(self, n: int) -> bool:
         return any(n <= b for b in self.prompt_buckets)
+
+    # -- fused multi-step decode (the host-free hot loop) -------------------
+
+    def reserve_rows(self, n_steps: int) -> None:
+        """Reserve cache capacity for up to ``n_steps`` tokens per active
+        row before a fused scan launches. Dense stripes pre-reserve every
+        position at admission, so the base implementation is a no-op; the
+        paged backend overrides it with page reservation."""
+
+    def commit_scan(self, new_lengths: np.ndarray) -> None:
+        """Adopt the post-scan per-row lengths. The paged backend also
+        returns unconsumed reserved pages here (early stop / all-done
+        exit); rows the scan finished are released by the engine *after*
+        this commit, so trims always see live sequences."""
+        self.lengths = np.array(new_lengths, dtype=self.lengths.dtype)
+
+    def fused_decode(self, tok, gen, stops, max_toks,
+                     temps, top_k, top_p, seeds, n_steps: int):
+        """Run up to ``n_steps`` decode ticks in one jitted ``lax.scan``.
+
+        Per scan tick, entirely on device: decode kernel -> per-request
+        sampler (the same ``_sample_batch`` program the single-step path
+        jits, so outputs are bit-exact) -> stop-token / max-token done-mask
+        update -> cache append (paged rows write into pages reserved by
+        :meth:`reserve_rows`; dense rows bump their stripe position). Rows
+        finish mid-scan by freezing: their length stops advancing and (for
+        paged) their page-table row nulls out so the re-fed token sinks
+        into the null page — no live or shared page is ever re-written.
+        A ``lax.cond`` skips the remaining ticks once every row is done.
+
+        ``tok``: (rows,)[,K] token to feed first (the per-row pending
+        sample); ``gen``: per-row generated-token counts (the sampler's
+        stream position is scan-carried from here, so a fused run consumes
+        the identical keyed sample stream as N single steps); ``stops``:
+        (rows, W) stop-token ids padded with -1 (W == 0 disables stop
+        detection — multi-codebook streams); ``max_toks``: per-row
+        ``max_tokens``. Returns ``(ys, final_lengths)`` where ``ys`` are
+        per-tick device arrays (fed token, next sample, live /
+        appended-stop / fed-stop / hit-max masks) the engine reconstructs
+        host state from once per sync, and ``final_lengths`` feeds
+        :meth:`commit_scan`.
+        """
+        fn = self._fused_decode_fn(
+            int(n_steps), int(stops.shape[1]),
+            self.cfg.num_codebooks != 1,
+        )
+        paged = self.kv_layout == "paged"
+        pt = (jnp.asarray(self.page_table) if paged
+              else jnp.zeros((self.rows, 1), jnp.int32))
+        carry, ys = fn(
+            self.params, self.caches, pt, jnp.asarray(tok, jnp.int32),
+            jnp.asarray(self.lengths), jnp.asarray(gen, jnp.int32),
+            jnp.asarray(~self.active), jnp.asarray(temps),
+            jnp.asarray(top_k), jnp.asarray(top_p), jnp.asarray(seeds),
+            jnp.asarray(stops, jnp.int32), jnp.asarray(max_toks, jnp.int32),
+        )
+        self.caches = carry[0]
+        return ys, carry[3]
+
+    def _fused_decode_fn(self, n_steps: int, stop_width: int, multi: bool):
+        key = (n_steps, stop_width, multi)
+        fn = self._scan_cache.get(key)
+        if fn is None:
+            fn = self._build_fused_decode(n_steps, stop_width, multi)
+            self._scan_cache[key] = fn
+        return fn
+
+    def _build_fused_decode(self, n_steps: int, stop_width: int,
+                            multi: bool):
+        from repro import compat
+
+        cfg = self.cfg
+        paged = self.kv_layout == "paged"
+        stats = self.stats
+
+        def run(params, caches, pt, tok, lengths, gen, done,
+                temps, top_k, top_p, seeds, stops, max_toks):
+            # Trace-time side effect: fires once per compilation, so a
+            # flat counter after warmup proves zero steady-state retraces.
+            stats["decode_traces"] += 1
+
+            def tick(carry):
+                caches, pt, tok, lengths, gen, done = carry
+                live = ~done
+                lengths1 = lengths + live.astype(lengths.dtype)
+                if paged:
+                    logits, caches1 = transformer.decode_step(
+                        params, cfg, tok, caches, lengths1, page_table=pt)
+                else:
+                    logits, caches1 = transformer.decode_step(
+                        params, cfg, tok, caches, lengths1)
+                gen1 = gen + live.astype(gen.dtype)
+                nxt = sampling_lib._sample_batch(
+                    logits, temps, top_k, top_p, seeds, gen1
+                ).astype(tok.dtype)
+                if stop_width:
+                    fed_stop = live & (tok[:, None] == stops).any(axis=1)
+                    nxt_stop = (nxt[:, None] == stops).any(axis=1)
+                else:
+                    fed_stop = nxt_stop = jnp.zeros_like(done)
+                hit_max = live & (gen1 >= max_toks)
+                done_fed = fed_stop | hit_max
+                # A freshly sampled stop token is recorded in the output
+                # but never decoded (no K/V write) — mirror of the
+                # single-step path's early-stop append.
+                append_nxt = live & ~done_fed & nxt_stop
+                gen2 = gen1 + append_nxt.astype(gen.dtype)
+                newly = done_fed | append_nxt
+                pt1 = (jnp.where(newly[:, None], jnp.int32(NULL_PAGE), pt)
+                       if paged else pt)
+                keep = live & ~newly
+                tok1 = (jnp.where(keep[:, None], nxt, tok) if multi
+                        else jnp.where(keep, nxt, tok))
+                y = (tok, nxt, live, append_nxt, fed_stop, hit_max)
+                return (caches1, pt1, tok1, lengths1, gen2, done | newly), y
+
+            def skip(carry):
+                # All rows done: early exit — carry is untouched and the
+                # tick's masks read "nothing happened" on the host.
+                tok = carry[2]
+                false = jnp.zeros_like(carry[5])
+                return carry, (tok, tok, false, false, false, false)
+
+            def body(carry, _):
+                return jax.lax.cond(carry[5].all(), skip, tick, carry)
+
+            carry0 = (caches, pt, tok, lengths, gen, done)
+            return jax.lax.scan(body, carry0, None, length=n_steps)
+
+        # Donate the KV caches: the scan carry aliases its input buffers
+        # in place of a copy (halves peak cache HBM on TPU/GPU; a silent
+        # hint on CPU).
+        return compat.donating_jit(run, donate_argnums=(1,))
 
 
 # -----------------------------------------------------------------------------
@@ -465,6 +611,35 @@ class PagedBackend(_Backend):
             dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
             topo=plan_lib._topology_for(compat.default_backend()),
         ).time
+
+    def prefill_time_saved(self, req) -> float:
+        """Modeled prefill seconds a prefix-cache hit would save this
+        request if admitted *now* — the scheduler's cost-aware tie-break
+        within a priority class. Priced as (full prefill) minus (extend
+        over the matched paged prefix), both via
+        :func:`core.perf_model.estimate_extend_prefill`; zero when the
+        prefix cache matches nothing."""
+        from repro import compat
+        from repro.core import perf_model
+
+        _, matched = self.quote(req)
+        if matched <= 0:
+            return 0.0
+        n = len(req.prompt)
+        prefix = min(matched * self.page_size, n - 1)
+        topo = plan_lib._topology_for(compat.default_backend())
+        dtype_bytes = jnp.dtype(self.cfg.compute_dtype).itemsize
+
+        def _t(prefix_len: int) -> float:
+            return perf_model.estimate_extend_prefill(
+                batch=1, num_q_heads=self.cfg.n_heads,
+                num_kv_heads=self.cfg.n_kv_heads,
+                prefix_len=prefix_len, tail_len=n - prefix_len,
+                page_size=self.page_size, head_dim=self.cfg.head_dim,
+                dtype_bytes=dtype_bytes, topo=topo,
+            ).time
+
+        return max(_t(0) - _t(prefix), 0.0)
 
     # -- jitted cache plumbing ---------------------------------------------
 
@@ -842,6 +1017,70 @@ class PagedBackend(_Backend):
         self.out[row] = []
         self.on_preempt(row, state.req, generated)
         return True
+
+    def reserve_rows(self, n_steps: int) -> None:
+        """Reserve every active row's next ``min(n_steps, remaining)``
+        token slots before a fused scan launches, preempting other rows
+        under pool pressure (same retry policy as :meth:`prepare_row`,
+        amortized over the whole sync). COW copies surface here — the
+        scan itself never touches a shared page. Over-reserved slots
+        (early stop) return to the pool in :meth:`commit_scan`."""
+        for row in range(self.rows):
+            if not self.active[row]:
+                continue
+            state = self.seqs[row]
+            # Remaining output budget bounds the reservation: a scan never
+            # writes past max_tokens, so never past validate()'s cap.
+            remaining = state.req.max_new_tokens - len(self.out[row])
+            target = state.pages.length + min(n_steps, max(remaining, 1))
+            cows: List[Tuple[int, int]] = []
+            while state.pages.length < target:
+                try:
+                    self.pool.reserve_tokens(
+                        state.pages, target - state.pages.length, cows
+                    )
+                except OutOfPages:
+                    # Partial progress is kept (seq.length advanced, COWs
+                    # in ``cows``); free room and re-request the rest.
+                    if not (self._make_room(1) or self._preempt_one(row)):
+                        raise OutOfPages(
+                            "pool exhausted and nothing left to preempt"
+                        )
+            for src, dst in cows:
+                self.stats["cow_copies"] += 1
+                self.caches = self._copy_jit(
+                    self.caches, jnp.asarray(src, jnp.int32),
+                    jnp.asarray(dst, jnp.int32),
+                )
+            self.page_table[row] = NULL_PAGE
+            self.page_table[row, : len(state.pages.pages)] = state.pages.pages
+
+    def commit_scan(self, new_lengths: np.ndarray) -> None:
+        """Trim each live row's reservation down to what the scan actually
+        consumed (its final length) and rebuild the page tables; unused
+        reserved pages go straight back on the free list."""
+        for row in range(self.rows):
+            state = self.seqs[row]
+            if state is None or not self.active[row]:
+                continue
+            want = int(new_lengths[row])
+            if want < state.pages.length:
+                self.pool.trim_tokens(state.pages, want)
+            self.page_table[row] = NULL_PAGE
+            self.page_table[row, : len(state.pages.pages)] = state.pages.pages
+        self.lengths = np.array(new_lengths, dtype=self.lengths.dtype)
+
+    @property
+    def sync_reserve_pages(self) -> int:
+        """Decode headroom the scheduler must price at admission: with N
+        fused steps per sync, every live row (plus the candidate) can
+        grow ceil(N / page_size) pages before the host next intervenes —
+        a scan must never run out of pages mid-flight."""
+        n = self.steps_per_sync
+        if n <= 1:
+            return self.reserve_pages
+        per_row = -(-n // self.page_size)
+        return self.reserve_pages + per_row * (self.num_active + 1)
 
     def prepare_row(self, row: int) -> None:
         """Reserve the next token's slot in row's page table, preempting

@@ -47,6 +47,7 @@ from typing import Dict, Iterable, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.cache.pool import OutOfPages
 from repro.configs.base import ModelConfig
 from repro.kernels import plan as plan_lib
@@ -117,10 +118,16 @@ class LLMEngine:
         mapping: Optional[str] = None,
         scheduler: Optional[Scheduler] = None,
         telemetry: Optional[Telemetry] = None,
+        steps_per_sync: int = 1,
+        compilation_cache_dir: Optional[str] = None,
     ):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(
                 f"kv_layout must be one of {KV_LAYOUTS}, got {kv_layout!r}"
+            )
+        if steps_per_sync < 1:
+            raise ValueError(
+                f"steps_per_sync must be >= 1, got {steps_per_sync}"
             )
         # ``mapping`` overrides the config's kernel-schedule policy for
         # this engine ("auto" or a paper schedule name); ``with_mapping``
@@ -162,8 +169,17 @@ class LLMEngine:
         self.scheduler = scheduler or Scheduler()
         self.backend.choose_victim = self.scheduler.choose_victim
         self.backend.on_preempt = self._on_preempt
+        #: Decode steps fused into one jitted lax.scan per sync; the host
+        #: (scheduler, output flush, telemetry) intervenes every N tokens.
+        self.steps_per_sync = int(steps_per_sync)
+        self.backend.steps_per_sync = self.steps_per_sync
+        # Persistent compilation cache (best-effort): with the scan's jit
+        # keys O(1) per engine, a warm cache means steady-state serving
+        # never compiles at all — across processes, not just ticks.
+        compat.enable_compilation_cache(compilation_cache_dir)
 
         self._pending: Dict[int, np.ndarray] = {}   # row -> next token
+        self._last_ticks = 0                        # live ticks, last scan
         self._streamed: Dict[int, int] = {}         # uid -> tokens emitted
         self._completed: List[RequestOutput] = []
         self._next_uid = 0
@@ -252,16 +268,23 @@ class LLMEngine:
                                priority=request.priority)
         return request.uid
 
-    def step(self) -> List[RequestOutput]:
-        """One serving tick: admit + flush prefills, then one fused decode
-        over every active row, sampled on device with per-request params.
-        Returns the streamed increments — one :class:`RequestOutput` per
-        request that gained tokens or finished this tick.
+    def step(self, max_steps: Optional[int] = None) -> List[RequestOutput]:
+        """One serving sync: admit + flush prefills, then up to
+        ``max_steps`` (default: the engine's ``steps_per_sync``) fused
+        decode ticks in **one jitted ``lax.scan``** over every active row,
+        sampled on device with per-request params. Stop-token detection
+        and per-row done masks stay on device; the host reconstructs
+        outputs once, here. Returns the streamed increments — one
+        :class:`RequestOutput` per request that gained tokens or finished
+        this sync.
 
         Instrumented (when telemetry is on) as one ``step`` span holding
-        ``schedule`` / ``flush`` / ``decode`` child spans; each decode
-        tick's wall time is also folded into the drift collector under
-        its live (batch, mean-context) cell."""
+        ``schedule`` / ``flush`` / ``decode`` child spans; the scan's wall
+        time is folded into the drift collector under its live (batch,
+        mean-context) cell as one sample per live scan tick."""
+        n_steps = self.steps_per_sync if max_steps is None else int(max_steps)
+        if n_steps < 1:
+            raise ValueError(f"max_steps must be >= 1, got {max_steps}")
         t0 = time.perf_counter()
         records: List = []
         with self._tr.span("step"):
@@ -294,12 +317,13 @@ class LLMEngine:
                 live = self.backend.lengths[self.backend.active]
                 mean_len = float(live.mean()) if live.size else 0.0
                 td = time.perf_counter()
-                with self._tr.span("decode", batch=nb):
-                    outputs = self._decode_tick()
+                with self._tr.span("decode", batch=nb, steps=n_steps):
+                    outputs = self._decode_tick(n_steps)
                 dt = time.perf_counter() - td
                 self._h_decode.observe(dt)
                 self._decode_elapsed += dt
-                self._drift.record(nb, mean_len, dt)
+                self._drift.record(nb, mean_len, dt,
+                                   ticks=self._last_ticks)
             self._emit_lifecycle(outputs)
         self._m_steps.inc()
         self._g_running.set(self.backend.num_active)
@@ -453,62 +477,103 @@ class LLMEngine:
         for i, r in enumerate(rows):
             self._pending[r] = toks[i]
 
-    def _decode_tick(self) -> List[RequestOutput]:
+    def _stop_array(self, rows) -> np.ndarray:
+        """Per-row stop-token ids, padded with -1 to a power-of-two width
+        (the width is a jit-key component — bucketing bounds the fused
+        launcher's compilations). Width 0 disables on-device stop
+        detection entirely: no active row has stop tokens, or the stream
+        is multi-codebook (scalar-token stop semantics don't apply)."""
         b = self.backend
+        if self.cfg.num_codebooks != 1:
+            return np.zeros((b.rows, 0), np.int32)
+        width = max(
+            (len(b.row_req(r).sampling.stop_token_ids) for r in rows),
+            default=0,
+        )
+        if width == 0:
+            return np.zeros((b.rows, 0), np.int32)
+        width = 1 << (width - 1).bit_length()
+        stops = np.full((b.rows, width), -1, np.int32)
+        for r in rows:
+            ids = b.row_req(r).sampling.stop_token_ids
+            stops[r, : len(ids)] = ids
+        return stops
+
+    def _decode_tick(self, n_steps: int) -> List[RequestOutput]:
+        """Launch the fused scan: reserve cache room for the whole sync,
+        gather per-row tokens/sampling params, run up to ``n_steps``
+        decode ticks on device, and hand the results to the sanctioned
+        once-per-sync host sync point (:meth:`_sync_scan`)."""
+        b = self.backend
+        # May preempt rows under page pressure; a preempted row drops out
+        # of the scan entirely (its done mask starts True).
+        b.reserve_rows(n_steps)
+        rows = [r for r in range(b.rows) if b.active[r]]
+        if not rows:
+            self._last_ticks = 0
+            return []
         shape = (b.rows,) if self.cfg.num_codebooks == 1 else (
             b.rows, self.cfg.num_codebooks)
         tok = np.zeros(shape, np.int32)
-        for row in range(b.rows):
-            if not b.active[row]:
-                continue
+        for row in rows:
             if row in self._pending:
                 nxt = self._pending.pop(row)
             else:
                 nxt = b.out[row][-1]
             tok[row] = nxt
-            # May preempt *other* rows under page pressure; a preempted
-            # row's token writes into the null page and is ignored below.
-            b.prepare_row(row)
-        logits = b.decode(tok)
-        return self._advance(tok, logits)
+        temps, top_k, top_p, seeds, pos = self._sampling_arrays(
+            b.rows, [(r, r) for r in rows])
+        max_toks = np.zeros((b.rows,), np.int32)
+        for r in rows:
+            max_toks[r] = b.row_req(r).sampling.max_tokens
+        ys, lengths_f = b.fused_decode(
+            tok, pos, self._stop_array(rows), max_toks,
+            temps, top_k, top_p, seeds, n_steps,
+        )
+        return self._sync_scan(ys, lengths_f)
 
-    def _advance(self, tok, logits) -> List[RequestOutput]:
-        """Post-decode bookkeeping: append the token just decoded, sample
-        every row's next token in one device call, terminate on stop
-        tokens / max_tokens, and emit the streamed increments."""
+    def _sync_scan(self, ys, lengths_f) -> List[RequestOutput]:
+        """The once-per-sync host sync point: pull the scan's per-tick
+        masks/tokens to host, replay them into per-row output lists,
+        terminate finished rows, and emit the streamed increments — one
+        :class:`RequestOutput` per row per sync, however many ticks ran."""
         b = self.backend
-        rows = [r for r in range(b.rows) if b.active[r]]
-        for r in rows:
-            b.out[r].append(tok[r].copy())
-            self._tokens_generated += 1
-        params = self._sampling_arrays(b.rows, [(r, r) for r in rows])
-        nxt_all = np.asarray(sampling_lib.sample_tokens(logits, *params))
+        tok_seq, nxt_seq, live, appended, fed_stop, hit_max = (
+            np.asarray(y) for y in ys)
+        self._last_ticks = int(live.any(axis=1).sum())
+        b.commit_scan(np.asarray(lengths_f))
         outputs: List[RequestOutput] = []
-        for r in rows:
+        for r in range(b.rows):
+            col = live[:, r]
+            if not col.any():
+                continue
             req = b.row_req(r)
-            sp = req.sampling
-            nxt = nxt_all[r]
-            # The token just appended was sampled either from prefill
-            # logits (never stop-checked yet) or as a previous tick's nxt
-            # (which passed the check below) — so this catches exactly the
-            # first-generated-token-is-a-stop-token case.
-            stop_on_fed = (sp.stop_token_ids and np.ndim(tok[r]) == 0
-                           and int(tok[r]) in sp.stop_token_ids)
-            done = stop_on_fed or len(b.out[r]) >= sp.max_tokens
-            if stop_on_fed:
-                reason = FINISH_STOP
-            else:
-                reason = FINISH_LENGTH if done else None
-            if (not done and sp.stop_token_ids and np.ndim(nxt) == 0
-                    and int(nxt) in sp.stop_token_ids):
-                done = True
-                reason = FINISH_STOP
-                b.out[r].append(np.asarray(nxt))  # include the stop token
+            reason = None
+            last_t = 0
+            for t in range(col.shape[0]):
+                if not col[t]:
+                    break
+                last_t = t
+                b.out[r].append(tok_seq[t, r].copy())
                 self._tokens_generated += 1
-            if done:
+                # Mask priority mirrors the single-step rules: a fed stop
+                # token outranks the length cap; a freshly *sampled* stop
+                # token is appended (no K/V write) and terminates.
+                if fed_stop[t, r]:
+                    reason = FINISH_STOP
+                    break
+                if hit_max[t, r]:
+                    reason = FINISH_LENGTH
+                    break
+                if appended[t, r]:
+                    b.out[r].append(nxt_seq[t, r].copy())
+                    self._tokens_generated += 1
+                    reason = FINISH_STOP
+                    break
+            if reason is not None:
                 outputs.append(self._finish(r, req, reason))
             else:
-                self._pending[r] = nxt
+                self._pending[r] = nxt_seq[last_t, r]
                 delta = self._delta(req.uid, b.out[r])
                 if delta:
                     outputs.append(RequestOutput(

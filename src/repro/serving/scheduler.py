@@ -146,8 +146,11 @@ class Scheduler:
     fakes): ``rows``, ``num_active``, ``try_admit(req, resume_tokens,
     pending_hashes) -> record | None | DEFERRED``, optional ``quote(req)
     -> (total_pages, matched_pages)`` + ``free_pages`` / ``evictable_pages``
-    / ``reserve_pages`` for the page budget, optional
-    ``decode_time_model(batch) -> seconds`` for the occupancy cap.
+    / ``reserve_pages`` (and ``sync_reserve_pages`` when fused multi-step
+    decode grows rows between syncs) for the page budget, optional
+    ``decode_time_model(batch, mean_len=...) -> seconds`` for the
+    occupancy cap (batch-only models also accepted), optional
+    ``prefill_time_saved(req) -> seconds`` for the admission tie-break.
     """
 
     def __init__(self, *, aging_rounds: int = 4, decode_time_model=None):
@@ -158,7 +161,9 @@ class Scheduler:
         self._waiting: List[_Waiting] = []
         self._requeue: "deque[Tuple[object, List]]" = deque()
         self._arrival = 0
-        self._occupancy_cap: Optional[int] = None
+        # Occupancy cap memo, keyed by the live-mean-context bucket the
+        # batch is currently in (None = backend exposes no live lengths).
+        self._occupancy_cap: dict = {}
 
     # -- queue state -------------------------------------------------------
 
@@ -183,10 +188,26 @@ class Scheduler:
     def _effective_priority(self, w: _Waiting) -> int:
         return w.req.priority + w.rounds_waited // self.aging_rounds
 
-    def _ranked(self) -> List[_Waiting]:
+    def _prefill_savings(self, backend, req) -> float:
+        """Modeled prefill seconds saved by admitting ``req`` now (prefix
+        reuse about to be exploited). Zero for backends without the hook
+        (dense slots, test fakes) so the FCFS order is unchanged there."""
+        saved = getattr(backend, "prefill_time_saved", None)
+        return float(saved(req)) if saved is not None else 0.0
+
+    def _ranked(self, backend=None) -> List[_Waiting]:
+        """(effective-priority, modeled-prefill-savings, arrival) order:
+        within a priority class the candidate whose admission saves the
+        most modeled prefill time (largest live prefix-cache hit) goes
+        first; arrival breaks the remaining ties (FCFS)."""
         return sorted(
             self._waiting,
-            key=lambda w: (-self._effective_priority(w), w.arrival),
+            key=lambda w: (
+                -self._effective_priority(w),
+                -(self._prefill_savings(backend, w.req)
+                  if backend is not None else 0.0),
+                w.arrival,
+            ),
         )
 
     def page_budget_ok(self, backend, req) -> bool:
@@ -200,7 +221,29 @@ class Scheduler:
         total, matched = quote(req)
         fresh = total - matched
         budget = backend.free_pages + backend.evictable_pages
-        return fresh + getattr(backend, "reserve_pages", 0) <= budget
+        # Fused multi-step decode grows every active row by up to N tokens
+        # between host syncs; ``sync_reserve_pages`` prices that headroom
+        # (it degenerates to ``reserve_pages`` at N == 1).
+        reserve = getattr(backend, "sync_reserve_pages", None)
+        if reserve is None:
+            reserve = getattr(backend, "reserve_pages", 0)
+        return fresh + reserve <= budget
+
+    @staticmethod
+    def _live_mean_len(backend) -> Optional[float]:
+        """Mean context length over the backend's live rows, or None when
+        the backend exposes no live lengths (dense fakes, empty batch)."""
+        lengths = getattr(backend, "lengths", None)
+        active = getattr(backend, "active", None)
+        if lengths is None or active is None:
+            return None
+        try:
+            live = lengths[active]
+        except Exception:
+            return None
+        if getattr(live, "size", 0) == 0:
+            return None
+        return float(live.mean())
 
     def occupancy_cap(self, backend) -> int:
         """Largest decode batch before modeled aggregate tokens/s starts
@@ -209,11 +252,21 @@ class Scheduler:
         token is worth. A bandwidth-bound linear model (time ~ batch)
         keeps tokens/s flat, so the cap stays at ``backend.rows`` — the
         gate only binds when the model says occupancy actually hurts.
-        Computed once from ``backend.decode_time_model``
-        (``core.perf_model``'s dense/paged decode estimates); backends
-        without a model fall back to their row count."""
-        if self._occupancy_cap is not None:
-            return self._occupancy_cap
+
+        Re-priced as the batch *ages*: the sweep is evaluated at the live
+        mean sequence length (bucketed to powers of two so the memo stays
+        small), not the admission-time length — a batch that has grown
+        long contexts has a different occupancy knee than a fresh one.
+        Backends without live lengths (or models that only take ``batch``)
+        fall back to the model's own default shape; backends without any
+        model fall back to their row count."""
+        from repro.obs.drift import context_bucket
+
+        mean_len = self._live_mean_len(backend)
+        bucket = None if mean_len is None else context_bucket(mean_len)
+        cached = self._occupancy_cap.get(bucket)
+        if cached is not None:
+            return cached
         model = self._decode_time_model or getattr(
             backend, "decode_time_model", None
         )
@@ -221,14 +274,20 @@ class Scheduler:
         if model is not None:
             best = 0.0
             for b in range(1, backend.rows + 1):
-                t = model(b)
+                if bucket is None:
+                    t = model(b)
+                else:
+                    try:
+                        t = model(b, mean_len=float(bucket))
+                    except TypeError:  # injected batch-only test models
+                        t = model(b)
                 tok_s = b / t if t > 0 else float("inf")
                 if tok_s < best * (1.0 - 1e-9):
                     cap = b - 1
                     break
                 best = max(best, tok_s)
-        self._occupancy_cap = max(cap, 1)
-        return self._occupancy_cap
+        self._occupancy_cap[bucket] = max(cap, 1)
+        return self._occupancy_cap[bucket]
 
     def _admission_ok(self, backend, req) -> bool:
         if backend.num_active >= self.occupancy_cap(backend):
@@ -266,7 +325,7 @@ class Scheduler:
             self._requeue.popleft()
             take(rec)
         if not self._requeue:
-            for w in self._ranked():
+            for w in self._ranked(backend):
                 if not self._admission_ok(backend, w.req):
                     break
                 try:

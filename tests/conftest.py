@@ -14,7 +14,12 @@ pools with intentional violations and manages its own shadows.
 
 import pytest
 
-SANITIZED_MODULES = {"test_scheduler", "test_serving", "test_paged_cache"}
+SANITIZED_MODULES = {
+    "test_scheduler",
+    "test_serving",
+    "test_paged_cache",
+    "test_fused_decode",
+}
 
 
 @pytest.fixture(autouse=True)

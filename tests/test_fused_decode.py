@@ -1,0 +1,248 @@
+"""Fused multi-step decode: ``steps_per_sync=N`` vs N single steps.
+
+PR-8 acceptance criteria covered here:
+  * a fused N-step sync bit-matches N single-step syncs for BOTH kv
+    layouts — greedy rows, per-request-seeded stochastic rows, a stop
+    token firing mid-scan, and ``N > remaining max_tokens`` all included;
+  * the bit-match holds across preemption/resume under page pressure;
+  * page accounting stays exact under the shadow-pool sanitizer
+    (``conftest.py`` auto-attaches it to this module) and teardown
+    proves zero leaked pages;
+  * the scan launcher's jit keys are O(1) per engine: the retrace
+    counter (``backend.stats["decode_traces"]``) is FLAT after warmup;
+  * ``PagePool.reserve_tokens`` / ``trim_tokens`` — the host-side half
+    of the fused sync — keep COW and partial-progress semantics
+    identical to N single-step appends.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache.pool import OutOfPages, PagePool
+from repro.configs import registry
+from repro.models import transformer
+from repro.serving import LLMEngine, Request, SamplingParams
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = registry.get_smoke_config("llama3-8b")
+    params = transformer.init_model(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def direct_greedy(cfg, params, prompt, n_new, cache_len=256):
+    lg, caches = transformer.prefill(
+        params, cfg, jnp.asarray(prompt)[None], cache_len=cache_len
+    )
+    toks, lengths = [], jnp.array([len(prompt)], jnp.int32)
+    nxt = int(jnp.argmax(lg[0]))
+    for _ in range(n_new):
+        toks.append(nxt)
+        lengths = lengths + 1
+        lg, caches = transformer.decode_step(
+            params, cfg, jnp.asarray([nxt]), caches, lengths
+        )
+        nxt = int(jnp.argmax(lg[0]))
+    return toks
+
+
+def toks_of(out):
+    return [int(t) for t in out.tokens]
+
+
+LAYOUTS = {
+    "dense": dict(kv_layout="dense", max_batch=3, cache_len=256,
+                  prompt_buckets=(32, 64)),
+    "paged": dict(kv_layout="paged", max_batch=3, num_pages=96,
+                  page_size=16, max_pages_per_seq=8,
+                  prompt_buckets=(16, 32, 64)),
+}
+
+
+def run_at(cfg, params, reqs, n, kw):
+    eng = LLMEngine(cfg, params, steps_per_sync=n, **kw)
+    return eng, {r.uid: r for r in eng.generate([r.clone() for r in reqs])}
+
+
+# --- bit-match: fused N steps == N single steps -------------------------------
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_fused_bit_matches_single_step(llama, layout):
+    """One scan of 8 ticks produces exactly the tokens of 8 one-tick
+    syncs: greedy rows, a seeded stochastic row, and a row whose
+    ``max_tokens`` (3) is smaller than the scan length (the done mask
+    parks it mid-scan without a host round-trip)."""
+    cfg, params = llama
+    rng = np.random.default_rng(30)
+    prompts = [rng.integers(1, 400, size=(L,)) for L in (8, 20, 33)]
+    reqs = [
+        Request(uid=0, prompt=prompts[0], max_new_tokens=9),
+        Request(uid=1, prompt=prompts[1],
+                sampling=SamplingParams(temperature=0.9, top_k=25,
+                                        max_tokens=7, seed=3)),
+        Request(uid=2, prompt=prompts[2], max_new_tokens=3),  # < N=8
+    ]
+    kw = LAYOUTS[layout]
+    _, base = run_at(cfg, params, reqs, 1, kw)
+    _, fused = run_at(cfg, params, reqs, 8, kw)
+    assert sorted(fused) == [0, 1, 2]
+    for uid in (0, 1, 2):
+        assert toks_of(fused[uid]) == toks_of(base[uid]), (layout, uid)
+        assert fused[uid].finish_reason == base[uid].finish_reason
+    for uid in (0, 2):  # greedy rows also equal the direct oracle
+        want = direct_greedy(cfg, params, prompts[uid],
+                             reqs[uid].sampling.max_tokens)
+        assert toks_of(fused[uid]) == want, (layout, uid)
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_fused_stop_token_mid_scan(llama, layout):
+    """On-device stop detection: a stop token sampled at tick i < N
+    terminates the row inside the scan — same tokens (stop included) and
+    ``finish_reason`` as the single-step engine."""
+    cfg, params = llama
+    prompt = np.random.default_rng(31).integers(1, 400, size=(12,))
+    ref_toks = direct_greedy(cfg, params, prompt, 8, cache_len=128)
+    i = next(k for k in range(1, 8) if ref_toks[k] not in ref_toks[:k])
+    kw = dict(LAYOUTS[layout], max_batch=1)
+    eng = LLMEngine(cfg, params, steps_per_sync=8, **kw)
+    res = eng.generate([Request(uid=0, prompt=prompt, max_new_tokens=8,
+                                eos_id=int(ref_toks[i]))])
+    assert toks_of(res[0]) == ref_toks[: i + 1]
+    assert res[0].finish_reason == "stop"
+    # The FED token can be the stop too (first generated token): the
+    # fed-stop mask outranks everything, still inside the scan.
+    res0 = eng.generate([Request(uid=1, prompt=prompt, max_new_tokens=8,
+                                 eos_id=int(ref_toks[0]))])
+    assert toks_of(res0[0]) == [ref_toks[0]]
+    assert res0[0].finish_reason == "stop"
+
+
+def test_fused_bit_matches_across_preemption(llama):
+    """Page pressure mid-sync: the scan's pre-reservation preempts the
+    lowest-priority row, it resumes later, and every output still equals
+    the direct greedy decode — the bit-match survives evict/replay with
+    N > 1."""
+    cfg, params = llama
+    rng = np.random.default_rng(32)
+    prompts = [rng.integers(1, 400, size=(20,)) for _ in range(3)]
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=12,
+                    page_size=16, max_batch=3, max_pages_per_seq=4,
+                    prompt_buckets=(16, 32), steps_per_sync=4)
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=30, priority=i)
+            for i, p in enumerate(prompts)]
+    results = eng.generate(reqs)
+    assert sorted(r.uid for r in results) == [0, 1, 2]
+    stats = eng.stats()
+    assert stats.preemptions >= 1
+    assert stats.resumed_tokens > 0
+    for r in results:
+        want = direct_greedy(cfg, params, prompts[r.uid], 30)
+        assert toks_of(r) == want, r.uid
+
+
+# --- zero steady-state retraces ----------------------------------------------
+
+
+def test_retrace_counter_flat_after_warmup(llama):
+    """The scan launcher's jit key is (N, stop-width bucket, codebooks) —
+    constant for a given engine + workload shape — so after the first
+    sync compiles, later waves of requests add ZERO decode traces."""
+    cfg, params = llama
+    eng = LLMEngine(cfg, params, kv_layout="dense", max_batch=2,
+                    cache_len=128, prompt_buckets=(16,), steps_per_sync=4)
+    rng = np.random.default_rng(33)
+
+    def wave(uid0):
+        return [Request(uid=uid0 + i,
+                        prompt=rng.integers(1, 400, size=(8 + i,)),
+                        max_new_tokens=6) for i in range(2)]
+
+    eng.generate(wave(0))
+    warm = eng.backend.stats["decode_traces"]
+    assert warm >= 1
+    for k in (10, 20, 30):
+        eng.generate(wave(k))
+        assert eng.backend.stats["decode_traces"] == warm
+
+
+# --- page accounting under the sanitizer -------------------------------------
+
+
+def test_fused_page_accounting_zero_leak(llama):
+    """Reserve-then-trim page accounting over a full fused run: shared
+    prefixes, early stops (trim), and teardown all balance — the shadow
+    sanitizer (auto-attached by conftest) re-verifies every refcount."""
+    cfg, params = llama
+    rng = np.random.default_rng(34)
+    system = rng.integers(1, 400, size=(32,))
+    eng = LLMEngine(cfg, params, kv_layout="paged", num_pages=64,
+                    page_size=16, max_batch=3, max_pages_per_seq=8,
+                    prompt_buckets=(16, 64), steps_per_sync=8)
+    for i in range(3):
+        tail = rng.integers(1, 400, size=(6 + i,))
+        eng.add_request(Request(uid=i, prompt=np.concatenate([system, tail]),
+                                max_new_tokens=5 + i))
+    # First sync may already finish the shortest request (5 tokens < N=8).
+    done = [o for o in eng.step() if o.finished]
+    assert eng.backend.check_leaks() == {}
+    done += eng.generate([])
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert eng.backend.check_leaks() == {}
+    eng.close()
+    assert eng.backend.pool.used_pages == 0
+    assert eng.backend.pool.check_leaks() == {}
+
+
+# --- PagePool reserve/trim primitives ----------------------------------------
+
+
+def test_pool_reserve_and_trim_tokens():
+    pool = PagePool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(5)              # 2 pages
+    cows = pool.reserve_tokens(seq, 6)           # 5 -> 11 tokens, 3 pages
+    assert cows == []                            # nothing shared, no COW
+    assert seq.length == 11 and len(seq.pages) == 3
+    freed = pool.trim_tokens(seq, 6)             # back to 2 pages
+    assert freed == 1
+    assert seq.length == 6 and len(seq.pages) == 2
+    with pytest.raises(ValueError):
+        pool.trim_tokens(seq, 7)                 # can't trim upward
+    pool.release(seq)
+    assert pool.check_leaks() == {}
+
+
+def test_pool_reserve_tokens_cow_on_shared_tail():
+    """Reserving into a forked sequence's shared partial tail emits the
+    (src, dst) copy exactly as a single-step append would."""
+    pool = PagePool(num_pages=8, page_size=4)
+    seq = pool.allocate_sequence(6)              # partial tail (2/4 used)
+    fork = pool.fork(seq)
+    cows = pool.reserve_tokens(fork, 2)
+    assert len(cows) == 1
+    src, dst = cows[0]
+    assert src == seq.pages[-1] and dst == fork.pages[-1] and src != dst
+    assert seq.length == 6 and fork.length == 8
+    pool.release(fork)
+    pool.release(seq)
+    assert pool.check_leaks() == {}
+
+
+def test_pool_reserve_tokens_partial_progress_on_exhaustion():
+    """OutOfPages mid-reservation keeps the partial growth (the engine
+    frees room and re-requests the remainder) instead of unwinding it."""
+    pool = PagePool(num_pages=4, page_size=4)    # 3 usable pages
+    seq = pool.allocate_sequence(4)              # 1 page
+    cows = []
+    with pytest.raises(OutOfPages):
+        pool.reserve_tokens(seq, 12, cows)       # needs a 4th page
+    assert seq.length == 12 and len(seq.pages) == 3  # progress kept
+    assert cows == []
+    freed = pool.trim_tokens(seq, 4)
+    assert freed == 2
+    pool.release(seq)
+    assert pool.check_leaks() == {}

@@ -91,6 +91,51 @@ def test_reuse_efficiency_bounded(seq_q, seq_kv, order, kv_resident):
     assert r["total_bytes"] >= r["ideal_bytes"]
 
 
+def test_sawtooth_wins_long_context_streaming():
+    """ROADMAP 5(a): once K/V spills the VMEM budget (streaming), the
+    serpentine sawtooth traversal shares one boundary tile per KV sweep,
+    the exact traffic model prices it strictly below linear at equal
+    modeled time, and the resolver's tie-break picks it."""
+    import dataclasses
+
+    from repro.core import swizzle
+
+    mc = ops.resolve_mapping((1, 16, 4, 262144, 262144, 128), dtype_bytes=2)
+    assert not mc.kv_resident          # 256K KV never fits residency
+    assert mc.order == HEAD_FIRST
+    assert mc.traversal == swizzle.SAWTOOTH
+    kw = dict(batch=1, num_q_heads=16, num_kv_heads=4, seq_q=262144,
+              seq_kv=262144, head_dim=128, dtype_bytes=2)
+    saw = hbm_block_fetches(mapping=mc, **kw)
+    lin = hbm_block_fetches(
+        mapping=dataclasses.replace(mc, traversal=swizzle.LINEAR), **kw
+    )
+    assert saw["kv_bytes"] < lin["kv_bytes"]
+    assert saw["total_bytes"] < lin["total_bytes"]
+    assert 0.0 < saw["reuse_efficiency"] <= 1.0
+
+
+def test_sawtooth_streaming_kernel_matches_oracle():
+    """The serpentine kv index_map + in-kernel tile remap is numerically
+    the same attention: odd sweeps visit tiles in reverse, online softmax
+    is order-independent up to float tolerance."""
+    from repro.core import swizzle
+    from repro.kernels import ref
+    from repro.kernels.flash_attention import flash_attention_fwd
+
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 4, 384, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 384, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 384, 64), jnp.float32)
+    mc = MappingConfig(kv_resident=False, block_m=128, block_n=128,
+                       traversal=swizzle.SAWTOOTH)
+    o, _ = flash_attention_fwd(
+        q, k, v, mapping=mc, causal=True, interpret=compat.use_interpret()
+    )
+    o_ref = ref.attention(q, k, v, causal=True)
+    assert jnp.max(jnp.abs(o - o_ref)) < 2e-5
+
+
 def test_streaming_traffic_counts_tiles():
     """The streaming sweep is num_n tiles per (head, q-block) — a ceil-padded
     seq_kv pays for whole tiles, not raw bytes (the pre-fix math ignored
