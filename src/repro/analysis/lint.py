@@ -416,6 +416,48 @@ def check_obs_hot_loop_allocs(modules: Sequence[Module]) -> List[Violation]:
     return out
 
 
+#: Cross-device collective primitives. Under the mesh-sharded serving
+#: path (PR 9) the only sanctioned cross-device traffic is the split-K
+#: combine and the sampler's logits reduction — everywhere else the
+#: sharded decode must stay device-pure (GSPMD inserts what the
+#: NamedShardings require; hand-written collectives in kernel bodies,
+#: the scheduler, or the page pool would add fabric crossings the perf
+#: model does not price).
+_COLLECTIVE_IDENTS = ("psum", "psum_scatter", "all_gather", "ppermute",
+                      "all_to_all", "pmean")
+_COLLECTIVE_SCOPES = ("src/repro/kernels", "src/repro/serving",
+                      "src/repro/cache")
+_COLLECTIVE_ALLOWED = ("src/repro/kernels/decode_common.py",
+                       "src/repro/serving/sampling.py")
+
+
+@rule(
+    "collectives-only-in-combine",
+    "cross-device collectives (psum/all_gather/ppermute/...) may only "
+    "appear in the sanctioned combine and sampling modules "
+    "(kernels/decode_common.py, serving/sampling.py) — never in kernel "
+    "bodies, the scheduler, or the page pool, which must stay "
+    "device-pure under the head-sharded mesh",
+)
+def check_collectives(modules: Sequence[Module]) -> List[Violation]:
+    out: List[Violation] = []
+    for mod in modules:
+        if mod.path in _COLLECTIVE_ALLOWED:
+            continue
+        if not any(_in_dir(mod, d) for d in _COLLECTIVE_SCOPES):
+            continue
+        for ident, line in _identifiers(mod.tree):
+            if ident in _COLLECTIVE_IDENTS:
+                out.append(Violation(
+                    "collectives-only-in-combine", mod.path, line,
+                    f"{ident} outside the sanctioned combine/sampling "
+                    "modules — cross-device traffic belongs in "
+                    "decode_common's split combine or the sampler's "
+                    "logits reduction",
+                ))
+    return out
+
+
 # --- driver -------------------------------------------------------------------
 
 

@@ -111,6 +111,22 @@ def domain_of_head(head: int, num_kv_heads: int, num_domains: int) -> int:
     return head % num_domains
 
 
+def device_of_head(head: int, num_kv_heads: int, num_devices: int) -> int:
+    """Mesh device owning a KV head under the head-sharded serving pool.
+
+    The recursive form of :func:`domain_of_head`: ``NamedSharding`` on the
+    pool's leading head axis hands out contiguous head blocks per device,
+    so this is the same arithmetic one tier up. The sharded backends, the
+    per-device page budgets, and ``core.perf_model``'s inter-device tier
+    all consume this one function so the three layers can never disagree
+    on which device's HBM a head's pages occupy."""
+    if num_devices <= 1:
+        return 0
+    if num_kv_heads >= num_devices:
+        return head * num_devices // num_kv_heads
+    return head % num_devices
+
+
 def domain_of_page(
     pid: int, head: int, policy: str, num_kv_heads: int, num_domains: int
 ) -> int:

@@ -98,6 +98,66 @@ TPU_V5P_MEGACORE = Topology(
 )
 
 
+@dataclasses.dataclass(frozen=True)
+class MeshTopology:
+    """Two-tier NUMA: ``num_devices`` chips (each a :class:`Topology` of
+    intra-chip domains) joined by an inter-device fabric that is a second,
+    slower bandwidth rung above each chip's HBM.
+
+    This is the recursive form of the paper's hierarchy: head -> domain
+    inside a chip, head group -> device across the mesh. ``perf_model``
+    prices decode placement jointly over (domain, device) with it —
+    device-local split-K ranges ride ``chip.hbm_bw`` while ranges that
+    straddle devices pay ``device_link_bw`` for the crossing bytes.
+
+    ``device_link_bw`` is the per-device share of the mesh interconnect in
+    bytes/s. For TPU chips the preset ``Topology.link_bw`` already *is*
+    the chip-to-chip ICI link, so it is the default; platforms whose
+    ``link_bw`` means an intra-package fabric (MI300X) should pass the
+    inter-GPU figure explicitly.
+    """
+
+    chip: Topology
+    num_devices: int
+    device_link_bw: float
+
+    @property
+    def name(self) -> str:
+        return f"{self.chip.name}_mesh{self.num_devices}"
+
+    @property
+    def total_domains(self) -> int:
+        return self.num_devices * self.chip.num_domains
+
+    @property
+    def aggregate_hbm_bw(self) -> float:
+        return self.num_devices * self.chip.hbm_bw
+
+    @property
+    def aggregate_peak_flops(self) -> float:
+        return self.num_devices * self.chip.peak_flops
+
+
+def mesh_topology(
+    num_devices: int,
+    chip: Topology = TPU_V5E,
+    device_link_bw: float | None = None,
+) -> MeshTopology:
+    """Build the two-tier descriptor for ``num_devices`` chips.
+
+    ``device_link_bw=None`` defaults to ``chip.link_bw`` (the ICI figure
+    on the TPU presets) — always a slower rung than ``chip.hbm_bw``."""
+    if num_devices < 1:
+        raise ValueError(f"num_devices must be >= 1, got {num_devices}")
+    return MeshTopology(
+        chip=chip,
+        num_devices=num_devices,
+        device_link_bw=(
+            chip.link_bw if device_link_bw is None else float(device_link_bw)
+        ),
+    )
+
+
 def pod_as_numa(num_chips: int, chip: Topology = TPU_V5E) -> Topology:
     """Treat a TPU pod as a NUMA machine: one domain per chip, HBM as 'cache'.
 

@@ -29,7 +29,7 @@ from typing import Dict, Optional, Tuple
 from repro.core import acc as acc_lib
 from repro.core import swizzle
 from repro.core.cache_sim import AttentionWorkload
-from repro.core.numa import Topology
+from repro.core.numa import MeshTopology, Topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -232,12 +232,24 @@ MAX_DECODE_SPLITS = 16
 @dataclasses.dataclass(frozen=True)
 class SplitEstimate:
     """Occupancy model of split-K decode for one shape: the chosen split
-    count, its modeled time, the one-pass baseline, and the full sweep."""
+    count, its modeled time, the one-pass baseline, and the full sweep.
+
+    When the estimate was scored against a :class:`~repro.core.numa.
+    MeshTopology` (``mesh`` passed to :func:`estimate_decode_splits`),
+    ``device_pure`` records the joint (domain, device) placement verdict:
+    True means every split range stays inside the device owning its KV
+    head (all streaming rides local HBM), False means striping the ranges
+    across devices — paying the inter-device link for ``(D-1)/D`` of the
+    bytes — still modeled faster (only possible when the link rivals HBM
+    or the head count leaves device HBM idle). ``None`` on single-device
+    estimates, where the question does not arise."""
 
     num_splits: int
     time: float                      # modeled tick seconds at num_splits
     base_time: float                 # num_splits == 1 baseline
     times: Tuple[Tuple[int, float], ...]  # the whole candidate sweep
+    device_pure: Optional[bool] = None   # mesh: device-local ranges won?
+    num_devices: int = 1
 
     @property
     def speedup(self) -> float:
@@ -256,6 +268,7 @@ def estimate_decode_splits(
     topo: Topology,
     window: Optional[int] = None,
     max_splits: int = MAX_DECODE_SPLITS,
+    mesh: Optional[MeshTopology] = None,
 ) -> SplitEstimate:
     """Pick ``num_splits`` for a flash-decode launch by occupancy.
 
@@ -287,6 +300,24 @@ def estimate_decode_splits(
     dominates decode — genuinely divides by ``s``; only the (negligible)
     compute concentrates in the window-holding splits. Capping the
     candidate count at the live unit count keeps the choice conservative.
+
+    With ``mesh`` (the inter-device bandwidth tier) each candidate ``s``
+    is additionally scored under both joint (domain, device) placements:
+
+      * **device-pure** — every split range of a cell stays on the device
+        owning the cell's KV head (the head-sharded pool): all streaming
+        is local HBM, the combine is local, but only ``min(Hkv, D)``
+        devices' HBM supplies bytes;
+      * **straddled** — ranges stripe round-robin across all ``D``
+        devices (the device-tier analogue of ``interleaved`` page
+        placement): every device's HBM supplies bytes, at the price of
+        ``(D-1)/D`` of the KV — and the combine's partial states —
+        crossing ``device_link_bw``.
+
+    Device-pure wins whenever the head count covers the devices (equal
+    supply, zero link cost); straddling can only win when heads leave
+    device HBM idle (``Hkv < D``) *and* the link rivals HBM — both
+    directions are pinned in tests. Ties keep device-pure.
     """
     cells = max(1, batch * num_kv_heads)
     group = max(1, num_q_heads // max(num_kv_heads, 1))
@@ -303,24 +334,149 @@ def estimate_decode_splits(
     # each), written once and read once by the combine.
     state_bytes = 2 * 4.0 * gp * (head_dim + 2)
 
-    times = []
-    best = None
-    for s in range(1, max(1, min(int(max_splits), units)) + 1):
-        waves = -(-cells * s // domains)
-        t_cell = max(kv_bytes / s / bw_dom, flops / s / fl_dom)
-        t = waves * t_cell
+    num_devices = mesh.num_devices if mesh is not None else 1
+    link_bw = mesh.device_link_bw if mesh is not None else 0.0
+
+    def candidate(s: int, pure: bool) -> float:
+        if pure:
+            # Device-pure: every range streams its owner's local HBM.
+            # Only ``min(Hkv, D)`` devices' HBM supplies bytes (head
+            # ownership), and each supplier runs its share in waves over
+            # its own domains. The aggregate-supply term is always <= the
+            # wave term at D == 1, so the single-device model is exactly
+            # the PR-4 formula.
+            owners = min(max(num_kv_heads, 1), num_devices)
+            supply = -(-cells * s // owners)   # split units per supplier
+            waves = -(-supply // domains)
+            t = max(
+                waves * max(kv_bytes / s / bw_dom, flops / s / fl_dom),
+                cells * kv_bytes / (topo.hbm_bw * owners),
+            )
+        else:
+            # Straddled: ranges stripe round-robin over all D devices'
+            # pools (interleaved placement, one tier up). A unit pulls
+            # its pages from D HBMs in parallel through its device link,
+            # so its stream rate is min(link, D x domain share); the
+            # aggregate caps are all-device HBM supply and the fabric
+            # carrying the (D-1)/D remote fraction.
+            owners = num_devices
+            rate = min(max(link_bw, 1.0), num_devices * bw_dom)
+            waves = -(-cells * s // (num_devices * domains))
+            t = max(
+                waves * max(kv_bytes / s / rate, flops / s / fl_dom),
+                cells * kv_bytes / (topo.hbm_bw * num_devices),
+                cells * kv_bytes * (num_devices - 1) / num_devices
+                / max(link_bw * num_devices, 1.0),
+            )
         if s > 1:
-            t += cells * s * state_bytes / topo.hbm_bw
+            t += cells * s * state_bytes / (topo.hbm_bw * owners)
             t += COMBINE_LAUNCH_OVERHEAD_S
-        times.append((s, t))
-        if best is None or t < best[1]:
-            best = (s, t)
+            if not pure:
+                # Partial states cross the fabric to the combining owner.
+                t += cells * s * state_bytes \
+                    * (num_devices - 1) / num_devices \
+                    / max(link_bw * num_devices, 1.0)
+        return t
+
+    times = []
+    best = None  # (time, s, device_pure)
+    for s in range(1, max(1, min(int(max_splits), units)) + 1):
+        placements = (True,) if num_devices <= 1 else (True, False)
+        t_s = None
+        for pure in placements:   # pure first: strict < keeps it on ties
+            t = candidate(s, pure)
+            if t_s is None or t < t_s:
+                t_s = t
+            if best is None or t < best[0]:
+                best = (t, s, pure)
+        times.append((s, t_s))
     return SplitEstimate(
-        num_splits=best[0],
-        time=best[1],
+        num_splits=best[1],
+        time=best[0],
         base_time=times[0][1],
         times=tuple(times),
+        device_pure=(best[2] if num_devices > 1 else None),
+        num_devices=num_devices,
     )
+
+
+def estimate_sharded_paged_decode(
+    *,
+    batch: int,
+    num_q_heads: int,
+    num_kv_heads: int,
+    mean_len: int,
+    page_size: int,
+    head_dim: int,
+    dtype_bytes: int,
+    mesh: MeshTopology,
+    shared_prefix_len: int = 0,
+) -> DecodeEstimate:
+    """One decode tick with the page pool KV-head-sharded over the mesh.
+
+    Each device runs :func:`estimate_paged_decode` over its head slice
+    (``ceil(Hkv / D)`` heads — the contiguous blocks ``cache.layout.
+    device_of_head`` hands out) against its own chip topology; the tick
+    finishes when the busiest device does. With replicated parameters the
+    only cross-device traffic in the modeled hot loop is the attention
+    outputs' gather (``B x Hq_slice x hd`` per non-owner device per
+    layer-equivalent — charged once against the link); the KV streaming
+    itself is entirely device-local, which is the point of the sharding.
+    Aggregate tokens/s is ``batch / time`` — the modeled scaling curve the
+    loadgen sharded artifact records next to the measured one."""
+    d = max(mesh.num_devices, 1)
+    heads_dev = -(-max(num_kv_heads, 1) // d)
+    q_heads_dev = -(-max(num_q_heads, 1) // d)
+    local = estimate_paged_decode(
+        batch=batch, num_q_heads=q_heads_dev, num_kv_heads=heads_dev,
+        mean_len=mean_len, page_size=page_size, head_dim=head_dim,
+        dtype_bytes=dtype_bytes, topo=mesh.chip,
+        shared_prefix_len=shared_prefix_len,
+    )
+    # Attention-output gather: every device contributes its head slice of
+    # the (B, Hq, hd) activations to the replicated residual stream.
+    gather_bytes = (
+        batch * q_heads_dev * head_dim * dtype_bytes * (d - 1)
+        if d > 1 else 0.0
+    )
+    t = local.time + gather_bytes / max(mesh.device_link_bw * d, 1.0)
+    return DecodeEstimate(
+        layout=f"{local.layout}:mesh{d}",
+        time=t,
+        hbm_bytes=local.hbm_bytes * d,
+        link_bytes=gather_bytes,
+        flops=local.flops * d,
+        reuse_rate=local.reuse_rate,
+    )
+
+
+#: Cap on the adaptive steps-per-sync chooser. Powers of two up to this
+#: bound the fused-decode jit keys at O(log MAX) per engine — the
+#: zero-steady-state-retrace guarantee survives adaptivity.
+MAX_STEPS_PER_SYNC = 32
+
+
+def choose_steps_per_sync(
+    *,
+    decode_tick_s: float,
+    max_steps: int = MAX_STEPS_PER_SYNC,
+    overhead_budget: float = 0.1,
+) -> int:
+    """Pick the fused scan length N from the modeled decode tick time.
+
+    The smallest power of two whose amortized per-token host overhead
+    (:func:`amortized_host_overhead`) drops below ``overhead_budget`` of
+    the tick itself, capped at ``max_steps``. Deep batches / long
+    contexts have expensive ticks, so the sync tax is already noise and N
+    stays small (host visibility every token); tiny ticks drown in the
+    50 µs sync and N climbs toward the cap. Restricting N to powers of
+    two keeps the scan launcher's jit-key count logarithmic."""
+    n = 1
+    cap = max(1, int(max_steps))
+    while n < cap and amortized_host_overhead(n) \
+            > overhead_budget * max(decode_tick_s, 0.0):
+        n *= 2
+    return min(n, cap)
 
 
 def estimate_extend_prefill(

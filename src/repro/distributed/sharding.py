@@ -213,6 +213,55 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, caches_shape, *,
     return jax.tree_util.tree_map_with_path(spec, caches_shape)
 
 
+def kv_head_shards(
+    num_kv_heads: int, num_devices: int
+) -> Tuple[Tuple[int, int], ...]:
+    """Per-device half-open KV-head ranges under the head-sharded pool.
+
+    This is the block decomposition ``NamedSharding`` applies to the pool's
+    leading head axis — contiguous equal blocks, the mesh-tier image of
+    ``cache.layout.device_of_head`` (which tests pin against this). The
+    serving mesh requires ``num_devices`` to divide ``num_kv_heads``
+    (backends validate with a clear error), so every range has width
+    ``Hkv // D``."""
+    if num_devices <= 1:
+        return ((0, num_kv_heads),)
+    if num_kv_heads % num_devices:
+        raise ValueError(
+            f"num_kv_heads={num_kv_heads} must divide evenly over "
+            f"num_devices={num_devices} for the head-sharded pool"
+        )
+    per = num_kv_heads // num_devices
+    return tuple((d * per, (d + 1) * per) for d in range(num_devices))
+
+
+def paged_cache_specs(mesh: Mesh, caches_shape):
+    """Specs for the paged cache tree (transformer.init_paged_caches):
+    shard the pool's leading KV-head axis on "model" so every page slice
+    lives in its owning device's HBM — the PR-2 head-major layout is what
+    makes this split natural. Page *tables* stay replicated host-side.
+
+    Pool arrays are ``(Hkv, num_pages, ps, hd)`` per rem layer and
+    ``(n_periods, Hkv, num_pages, ps, hd)`` for scanned stacks — the head
+    axis is rank-4-from-the-right in both, so the spec right-aligns.
+    Non-pool leaves (conv/ssm states, if any) replicate."""
+
+    def spec(path, leaf):
+        key = ""
+        for entry in reversed(path):
+            if hasattr(entry, "key"):
+                key = str(entry.key)
+                break
+        rank = leaf.ndim
+        if key in ("k_pages", "v_pages") and rank >= 4:
+            tail = P(MODEL_AXIS, None, None, None)
+            pad = (None,) * (rank - len(tail))
+            return fix_spec(P(*(pad + tuple(tail))), leaf.shape, mesh)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, caches_shape)
+
+
 def shard_moe_buffers(mesh: Optional[Mesh], mode: str = "ep"):
     """Constraint function threaded into models.moe.
 

@@ -106,6 +106,12 @@ class AttentionPlan:
     window: Optional[int] = None   # sliding window the plan was scored for
     placement: Optional[str] = None     # paged: head_aligned | interleaved
     num_splits: int = 1            # DECODE: split-K ranges (occupancy model)
+    num_devices: int = 1           # mesh width the plan was scored for
+    #: DECODE on a mesh: True when the joint (domain, device) model kept
+    #: split-K ranges device-pure (head-sharded pool, every range local to
+    #: its owner's HBM); False when striping the pool across devices won
+    #: (fast fabric + too few KV heads to feed every device). None off-mesh.
+    split_device_pure: Optional[bool] = None
 
     @property
     def prefix_capacity(self) -> int:
@@ -447,6 +453,8 @@ def _plan_cached(
     mapping_name: str,
     impl: str,
     vmem_budget_bytes: int,
+    num_devices: int,
+    device_link_bw: Optional[float],
 ) -> AttentionPlan:
     if mapping_name != "auto":
         mapping = PAPER_MAPPINGS[mapping_name]  # KeyError = fail fast
@@ -488,21 +496,33 @@ def _plan_cached(
         )
 
     num_splits = 1
+    split_device_pure = None
     if phase == DECODE:
         # Split-K (PR 4): sequence-parallel decode, chosen by occupancy —
         # cells x splits vs the domain count, combine overhead charged
         # explicitly. The granule is what the kernel can actually split
         # at: KV chunks for the dense stripe, pages for the pool.
-        from repro.core import perf_model
+        # On a mesh (PR 9) the same sweep scores placement jointly over
+        # (domain, device): device-pure ranges ride local HBM, straddled
+        # ones pay the inter-device tier for crossing bytes.
+        from repro.core import numa, perf_model
 
         granule = chunk if kv_layout == DENSE else page_size
         if granule:
-            num_splits = perf_model.estimate_decode_splits(
+            mesh = None
+            if num_devices > 1:
+                mesh = numa.mesh_topology(
+                    num_devices, chip=_topology_for(backend),
+                    device_link_bw=device_link_bw,
+                )
+            split = perf_model.estimate_decode_splits(
                 batch=batch, num_q_heads=num_q_heads,
                 num_kv_heads=num_kv_heads, seq_kv=seq_kv, granule=granule,
                 head_dim=head_dim, dtype_bytes=dtype_bytes,
-                topo=_topology_for(backend), window=window,
-            ).num_splits
+                topo=_topology_for(backend), window=window, mesh=mesh,
+            )
+            num_splits = split.num_splits
+            split_device_pure = split.device_pure
 
     return AttentionPlan(
         phase=phase,
@@ -517,6 +537,8 @@ def _plan_cached(
         window=window,
         placement=placement,
         num_splits=num_splits,
+        num_devices=num_devices,
+        split_device_pure=split_device_pure,
     )
 
 
@@ -534,6 +556,8 @@ def plan_attention(
     mapping_name: str = "auto",
     impl: str = "auto",
     vmem_budget_bytes: int = MappingConfig.vmem_budget_bytes,
+    num_devices: int = 1,
+    device_link_bw: Optional[float] = None,
 ) -> AttentionPlan:
     """Resolve the best :class:`AttentionPlan` for an attention shape.
 
@@ -553,6 +577,11 @@ def plan_attention(
     ``mapping_name`` / ``impl`` carry the config policy ("auto" or a pinned
     ``PAPER_MAPPINGS`` name / kernel impl); this is the only layer that
     interprets them.
+
+    ``num_devices`` > 1 scores DECODE split-K placement jointly over
+    (domain, device) via ``numa.mesh_topology`` — ``device_link_bw``
+    overrides the inter-device fabric figure (``None`` = the chip preset's
+    link) — and records the verdict in ``plan.split_device_pure``.
     """
     if phase not in PHASES:
         raise ValueError(f"unknown phase {phase!r}; expected one of {PHASES}")
@@ -573,6 +602,8 @@ def plan_attention(
         int(prefix_pages),
         mapping_name, impl,
         int(vmem_budget_bytes),
+        int(num_devices),
+        float(device_link_bw) if device_link_bw is not None else None,
     )
 
 
@@ -638,6 +669,8 @@ def plan_for_config(
     prefix_pages: int = 0,
     backend: Optional[str] = None,
     interpret: Optional[bool] = None,
+    num_devices: int = 1,
+    device_link_bw: Optional[float] = None,
 ) -> AttentionPlan:
     """:func:`plan_attention` with the schedule/impl policy read from a
     ``ModelConfig``. Models, engines and benchmarks call this instead of
@@ -658,6 +691,8 @@ def plan_for_config(
         prefix_pages=prefix_pages,
         mapping_name=getattr(cfg, "mapping_name", "auto"),
         impl=getattr(cfg, "attn_impl", "auto"),
+        num_devices=num_devices,
+        device_link_bw=device_link_bw,
     )
 
 

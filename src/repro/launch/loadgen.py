@@ -31,11 +31,16 @@ Run:
       # mode on CPU), asserts artifacts + latency coverage
   PYTHONPATH=src python -m repro.launch.loadgen --arch llama3-8b \
       --kv-layout paged --requests 64 --rate 32
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+      python -m repro.launch.loadgen --smoke --mesh-sweep 1,2,4
+      # sharded scaling sweep: head-sharded paged pool, global batch
+      # scaled as devices * per-device rows, writes loadgen_sharded.json
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import os
 import time
 from typing import Dict, List, Optional, Tuple
@@ -108,6 +113,53 @@ def percentiles(values, qs=(50, 90, 99)) -> Dict[str, Optional[float]]:
     return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
 
 
+def _per_device_accounting(engine, cfg, done, peak_pages: int):
+    """Per-device bandwidth + page-occupancy accounting for mesh runs.
+
+    The pool is head-sharded: every page holds one KV-head slice per
+    device, so page occupancy is identical on every device and the
+    per-device footprint is ``pages * page_slice_bytes``. Decode reads
+    the whole resident context once per step on every device (its head
+    slice of it), so the implied per-device HBM demand is the per-token
+    slice read times the measured aggregate token rate."""
+    num_devices = engine.backend.num_devices
+    if num_devices <= 1:
+        return None
+    from repro.distributed import sharding as sharding_lib
+
+    b = engine.backend
+    itemsize = jax.tree_util.tree_leaves(b.caches)[0].dtype.itemsize
+    heads_per_dev = -(-cfg.n_kv_heads // num_devices)
+    mean_ctx = float(np.mean(
+        [o.prompt_len + len(o.tokens) for o in done])) if done else 0.0
+    # One decode step reads each active row's resident KV once per
+    # device (the head slice); the step yields one token per row, so
+    # per-token-per-device bytes is independent of batch.
+    kv_read = (2 * cfg.n_layers * heads_per_dev * mean_ctx
+               * cfg.head_dim * itemsize)
+    out = {
+        "num_devices": num_devices,
+        "kv_head_shards": [
+            list(s) for s in
+            sharding_lib.kv_head_shards(cfg.n_kv_heads, num_devices)
+        ],
+        "kv_read_bytes_per_token_per_device": kv_read,
+        "implied_hbm_bw_per_device":
+            kv_read * engine.stats().measured_tok_s,
+    }
+    pool = getattr(b, "pool", None)
+    if pool is not None:
+        slice_bytes = b._page_slice_bytes(cfg, b.page_size, num_devices)
+        out.update({
+            "page_slice_bytes": slice_bytes,
+            "pool_pages": pool.num_pages,
+            "peak_pages_used": peak_pages,
+            "peak_kv_bytes_per_device": peak_pages * slice_bytes,
+            "page_budgets": b.device_page_budgets(),
+        })
+    return out
+
+
 def _warmup(engine: LLMEngine, cfg, rng, workload) -> None:
     """Compile every prefill bucket the mix can hit (shared-prefix and
     bare variants), drain the device, zero telemetry."""
@@ -129,10 +181,12 @@ def _warmup(engine: LLMEngine, cfg, rng, workload) -> None:
     engine.reset_metrics()
 
 
-def drive(engine: LLMEngine, workload, *, idle_sleep_cap: float = 0.01):
+def drive(engine: LLMEngine, workload, *, idle_sleep_cap: float = 0.01,
+          on_step=None):
     """Open-loop drive: release requests at their arrival times, step
     while the engine has work, sleep to the next arrival when idle.
-    Returns the finished ``RequestOutput`` list."""
+    Returns the finished ``RequestOutput`` list. ``on_step(engine)`` is
+    called after every step (occupancy sampling for the mesh sweep)."""
     pending = sorted(workload, key=lambda a: a[0])
     done = []
     i = 0
@@ -148,15 +202,26 @@ def drive(engine: LLMEngine, workload, *, idle_sleep_cap: float = 0.01):
             time.sleep(min(max(pending[i][0] - now, 0.0), idle_sleep_cap))
             continue
         done.extend(o for o in engine.step() if o.finished)
+        if on_step is not None:
+            on_step(engine)
     return done
 
 
-def run_one(args, kv_layout: str) -> Dict:
+def run_one(args, kv_layout: str, *, cfg=None) -> Dict:
     """One full load run on one KV layout; returns the summary payload
-    (also written to ``artifacts/benchmarks/loadgen_<kv_layout>.json``)."""
-    get_cfg = (registry.get_smoke_config if args.smoke
-               else registry.get_config)
-    cfg = get_cfg(args.arch)
+    (also written to ``artifacts/benchmarks/loadgen_<kv_layout>.json``).
+    ``cfg`` overrides the registry lookup (the mesh sweep pins one
+    mesh-divisible config so runs are comparable across device counts)."""
+    if cfg is None:
+        get_cfg = (registry.get_smoke_config if args.smoke
+                   else registry.get_config)
+        cfg = get_cfg(args.arch)
+    # getattr throughout: programmatic callers hand-build the namespace
+    # and may predate newer flags (tests/test_loadgen.py does).
+    mesh_n = int(getattr(args, "mesh", 0) or 0)
+    steps = getattr(args, "steps_per_sync", 1)
+    if steps != "auto":
+        steps = int(steps)
     params = transformer.init_model(jax.random.PRNGKey(args.seed), cfg)
     telemetry = Telemetry.create()
     engine = LLMEngine(
@@ -168,9 +233,8 @@ def run_one(args, kv_layout: str) -> Dict:
         page_size=args.page_size,
         prompt_buckets=(16, 32, 64),
         telemetry=telemetry,
-        # getattr: programmatic callers hand-build the namespace and may
-        # predate the flag (tests/test_loadgen.py does).
-        steps_per_sync=getattr(args, "steps_per_sync", 1),
+        mesh=mesh_n if mesh_n > 1 else None,
+        steps_per_sync=steps,
     )
     rng = np.random.default_rng(args.seed)
     workload = build_workload(
@@ -182,8 +246,18 @@ def run_one(args, kv_layout: str) -> Dict:
     _warmup(engine, cfg, rng, workload)
     traces_warm = engine.backend.stats.get("decode_traces", 0)
 
+    # Peak page occupancy, sampled after every step: with the
+    # head-sharded pool each page spans all devices (one head-slice per
+    # device), so pool occupancy IS the per-device occupancy.
+    peak = {"pages": 0}
+
+    def _sample(eng):
+        pool = getattr(eng.backend, "pool", None)
+        if pool is not None:
+            peak["pages"] = max(peak["pages"], int(pool.used_pages))
+
     t0 = time.perf_counter()
-    done = drive(engine, workload)
+    done = drive(engine, workload, on_step=_sample)
     wall = time.perf_counter() - t0
     retraces = engine.backend.stats.get("decode_traces", 0) - traces_warm
 
@@ -237,12 +311,17 @@ def run_one(args, kv_layout: str) -> Dict:
         "occupancy_cap": stats.occupancy_cap,
         "drift": drift.to_dict(),
         "drift_worst_ratio": drift.worst_ratio(),
+        "mesh_devices": engine.backend.num_devices,
+        "per_device": _per_device_accounting(engine, cfg, done, peak["pages"]),
     }
     out_dir = args.out_dir or None
-    # N > 1 runs get their own artifact name so the N-sweep (smoke's
-    # host-overhead comparison) never clobbers the N=1 baseline.
+    # N > 1 and mesh runs get their own artifact names so sweeps (the
+    # smoke host-overhead comparison, the sharded device-count sweep)
+    # never clobber the N=1 single-device baseline.
     n = engine.steps_per_sync
     stem = f"loadgen_{engine.kv_layout}" + (f"_n{n}" if n > 1 else "")
+    if engine.backend.num_devices > 1:
+        stem += f"_d{engine.backend.num_devices}"
     json_path = write_json_artifact(
         stem, payload,
         metrics=telemetry.metrics,
@@ -302,6 +381,101 @@ def _smoke_check(payload: Dict) -> None:
     assert env["metrics"]["serving_steps_total"]["value"] > 0
 
 
+def run_sharded_sweep(args) -> Dict:
+    """Device-count scaling sweep on the paged backend: one load run per
+    mesh width with MaxText-style global-batch scaling
+    (``max_batch = device_count * per_device_batch``, requests scaled to
+    match), modeled + measured aggregate tok/s, per-device page and
+    bandwidth accounting. Writes ``loadgen_sharded.json``."""
+    counts = sorted({int(x) for x in args.mesh_sweep.split(",") if x})
+    if not counts:
+        raise ValueError("--mesh-sweep needs a comma-separated list of "
+                         "device counts, e.g. 1,2,4")
+    avail = len(jax.devices())
+    runnable = [d for d in counts if d <= avail]
+    if runnable != counts:
+        print(f"[loadgen] skipping device counts beyond the "
+              f"{avail} available: {sorted(set(counts) - set(runnable))}")
+    if not runnable:
+        raise RuntimeError(f"no runnable device counts (have {avail})")
+
+    get_cfg = (registry.get_smoke_config if args.smoke
+               else registry.get_config)
+    cfg = get_cfg(args.arch)
+    if args.smoke:
+        # Pin ONE mesh-divisible head layout for the whole sweep so the
+        # numbers are comparable across device counts (the smoke config's
+        # Hkv=2 doesn't divide over 4 devices).
+        cfg = dataclasses.replace(cfg, n_heads=8, n_kv_heads=4,
+                                  head_dim=16, d_model=128, d_ff=256)
+    bad = [d for d in runnable if cfg.n_kv_heads % d]
+    if bad:
+        raise ValueError(f"n_kv_heads={cfg.n_kv_heads} not divisible by "
+                         f"device counts {bad}")
+
+    per_dev_batch = int(getattr(args, "per_device_batch", 0)
+                        or args.max_batch)
+    runs: Dict[str, Dict] = {}
+    for d in runnable:
+        ns = argparse.Namespace(**vars(args))
+        ns.mesh = d
+        ns.max_batch = per_dev_batch * d
+        ns.requests = args.requests * d
+        print(f"[loadgen] sharded sweep: {d} device(s), "
+              f"max_batch={ns.max_batch}, requests={ns.requests}")
+        p = run_one(ns, "paged", cfg=cfg)
+        if args.smoke:
+            assert p["finished"] == p["requests"], p
+            assert p["measured_tok_s"] > 0, p
+        runs[str(d)] = {k: p[k] for k in (
+            "requests", "finished", "wall_s", "steps_per_sync",
+            "tokens_generated", "measured_tok_s", "modeled_tok_s",
+            "decode_elapsed_s", "decode_retraces_after_warmup",
+            "mesh_devices", "per_device",
+        )}
+        runs[str(d)]["max_batch"] = ns.max_batch
+
+    base = runs[str(runnable[0])]
+    payload = {
+        "arch": args.arch,
+        "smoke": bool(args.smoke),
+        "kv_layout": "paged",
+        "per_device_batch": per_dev_batch,
+        "device_counts": runnable,
+        "runs": runs,
+        # Aggregate throughput relative to the smallest mesh — the
+        # artifact the acceptance criterion reads (modeled AND measured
+        # tok/s scaling vs device count).
+        "scaling": {
+            "baseline_devices": runnable[0],
+            "measured_tok_s": {
+                str(d): safe_div(runs[str(d)]["measured_tok_s"],
+                                 base["measured_tok_s"])
+                for d in runnable
+            },
+            "modeled_tok_s": {
+                str(d): safe_div(runs[str(d)]["modeled_tok_s"],
+                                 base["modeled_tok_s"])
+                for d in runnable
+            },
+        },
+    }
+    path = write_json_artifact("loadgen_sharded", payload,
+                               dirpath=args.out_dir or None,
+                               kind="loadgen")
+    print("[loadgen] sharded scaling (vs "
+          f"{runnable[0]} device(s)):")
+    for d in runnable:
+        r = runs[str(d)]
+        print(f"  {d}dev: measured {r['measured_tok_s']:.1f} tok/s "
+              f"(x{payload['scaling']['measured_tok_s'][str(d)]:.2f}), "
+              f"modeled {r['modeled_tok_s']:.0f} tok/s "
+              f"(x{payload['scaling']['modeled_tok_s'][str(d)]:.2f})")
+    print(f"[loadgen] wrote {path}")
+    payload["_artifacts"] = {"json": path}
+    return payload
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b",
@@ -323,14 +497,31 @@ def main(argv=None):
                          "--shared-fraction of requests")
     ap.add_argument("--shared-fraction", type=float, default=0.5)
     ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--steps-per-sync", type=int, default=1,
+    ap.add_argument("--steps-per-sync", default="1",
                     help="fused decode scan length N: the host syncs "
-                         "(flush/schedule/telemetry) once per N tokens")
+                         "(flush/schedule/telemetry) once per N tokens; "
+                         "'auto' lets the scheduler pick from the live "
+                         "batch's modeled tick time")
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard one load run over N devices (1-D 'model' "
+                         "mesh, head-sharded KV; 0 = single-device)")
+    ap.add_argument("--mesh-sweep", default="",
+                    help="comma-separated device counts (e.g. 1,2,4): "
+                         "paged scaling sweep with per-device batch "
+                         "scaling, writes loadgen_sharded.json")
+    ap.add_argument("--per-device-batch", type=int, default=0,
+                    help="mesh sweep: decode rows per device "
+                         "(max_batch = devices * this; default "
+                         "--max-batch)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out-dir", default=None,
                     help="artifact directory (default "
                          "artifacts/benchmarks)")
     args = ap.parse_args(argv)
+
+    if args.mesh_sweep:
+        run_sharded_sweep(args)
+        return
 
     if args.smoke:
         # Both layouts x N in {1, 8}: the fused-decode acceptance sweep.

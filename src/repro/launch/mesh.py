@@ -32,3 +32,28 @@ def make_host_mesh() -> Mesh:
         (n, 1), ("data", "model"),
         axis_types=(compat.AXIS_AUTO, compat.AXIS_AUTO),
     )
+
+
+def make_serving_mesh(num_devices: int | None = None) -> Mesh:
+    """1-D serving mesh: ``("model",)`` over the first ``num_devices``
+    host devices (all of them by default).
+
+    The serving engine shards the paged pool's KV-head axis (and the dense
+    cache's head axis) over this single axis — head-parallel serving, the
+    recursive form of the paper's head -> domain placement. There is no
+    data axis: a serving batch is one replica whose KV bytes are spread
+    over every device's HBM (``sharding.batch_spec`` then resolves batch
+    dims to replicated, which is what keeps single-device and sharded
+    decode bit-identical)."""
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else int(num_devices)
+    if n < 1:
+        raise ValueError(f"num_devices must be >= 1, got {n}")
+    if n > len(devs):
+        raise ValueError(
+            f"requested {n} devices but the host exposes {len(devs)}"
+        )
+    return compat.make_mesh(
+        (n,), ("model",), axis_types=(compat.AXIS_AUTO,),
+        devices=devs[:n],
+    )

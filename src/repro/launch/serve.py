@@ -11,11 +11,15 @@ Examples:
       --max-new-tokens 12
   python -m repro.launch.serve --arch llama3-8b --smoke --kv-layout paged \
       --temperature 0.8 --top-k 40 --top-p 0.95
+  python -m repro.launch.serve --arch llama3-8b --smoke --mesh 4 \
+      --steps-per-sync auto
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import math
 
 import jax
 import numpy as np
@@ -46,9 +50,29 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--mesh", type=int, default=0,
+                    help="shard serving over N devices (1-D 'model' mesh, "
+                         "head-sharded KV; 0 = single-device)")
+    ap.add_argument("--steps-per-sync", default="1",
+                    help="fused decode ticks per host sync: an int, or "
+                         "'auto' to let the scheduler pick from the live "
+                         "batch's modeled tick time")
     args = ap.parse_args(argv)
 
     cfg = (registry.get_smoke_config if args.smoke else registry.get_config)(args.arch)
+    if args.mesh > 1 and args.smoke and cfg.n_kv_heads % args.mesh:
+        # Smoke configs keep tiny head counts; widen KV heads to the
+        # smallest multiple the mesh divides so the head-sharded pool has
+        # an even split (smoke-only — real configs must divide as-is).
+        factor = args.mesh // math.gcd(cfg.n_kv_heads, args.mesh)
+        cfg = dataclasses.replace(
+            cfg, n_kv_heads=cfg.n_kv_heads * factor,
+            n_heads=cfg.n_heads * factor,
+        )
+        print(f"smoke mesh fit: widened heads x{factor} -> "
+              f"Hq={cfg.n_heads} Hkv={cfg.n_kv_heads}")
+    steps = (args.steps_per_sync if args.steps_per_sync == "auto"
+             else int(args.steps_per_sync))
     params = transformer.init_model(jax.random.PRNGKey(args.seed), cfg)
     engine = LLMEngine(
         cfg, params,
@@ -58,8 +82,11 @@ def main(argv=None):
         num_pages=args.num_pages,
         page_size=args.page_size,
         prompt_buckets=(args.prompt_len, 2 * args.prompt_len),
+        mesh=args.mesh if args.mesh > 1 else None,
+        steps_per_sync=steps,
     )
-    print(f"kv_layout={engine.kv_layout} (requested {args.kv_layout})")
+    print(f"kv_layout={engine.kv_layout} (requested {args.kv_layout}) "
+          f"devices={engine.backend.num_devices}")
     rng = np.random.default_rng(args.seed)
     shape = (args.prompt_len,) if cfg.num_codebooks == 1 else (
         args.prompt_len, cfg.num_codebooks)

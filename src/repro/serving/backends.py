@@ -74,6 +74,50 @@ class _Backend:
 
     kv_layout: str
     rows: int
+    #: Serving mesh (1-D "model" axis) the KV caches are sharded over;
+    #: None = single-device. Set by :meth:`_setup_mesh`.
+    mesh = None
+    num_devices: int = 1
+
+    def _setup_mesh(self, mesh, specs) -> None:
+        """Place the cache tree under ``specs`` on ``mesh`` and remember
+        the shardings so the jitted hot paths can re-constrain (GSPMD
+        would otherwise be free to re-layout the donated scan carry).
+        Head-sharded placement only moves bytes — every jitted program
+        computes the same values, so sharded decode stays bit-exact."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        self.mesh = mesh
+        self.num_devices = int(mesh.devices.size) if mesh is not None else 1
+        if mesh is None:
+            self._cache_shardings = None
+            return
+        self._cache_shardings = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, PartitionSpec),
+        )
+        self.caches = jax.device_put(self.caches, self._cache_shardings)
+
+    def _constrain(self, caches):
+        """Inside-jit sharding pin for the cache tree (identity off-mesh)."""
+        if getattr(self, "_cache_shardings", None) is None:
+            return caches
+        return jax.tree.map(
+            jax.lax.with_sharding_constraint, caches, self._cache_shardings
+        )
+
+    @staticmethod
+    def _check_head_shards(cfg: ModelConfig, mesh) -> int:
+        """Validate the head-sharded split and return the device count."""
+        if mesh is None:
+            return 1
+        n = int(mesh.devices.size)
+        if n > 1:
+            from repro.distributed import sharding as sharding_lib
+
+            # Raises with a clear message when Hkv % devices != 0.
+            sharding_lib.kv_head_shards(cfg.n_kv_heads, n)
+        return n
 
     def _init_rows(self, rows: int):
         self.rows = rows
@@ -192,12 +236,14 @@ class _Backend:
         cfg = self.cfg
         paged = self.kv_layout == "paged"
         stats = self.stats
+        constrain = self._constrain
 
         def run(params, caches, pt, tok, lengths, gen, done,
                 temps, top_k, top_p, seeds, stops, max_toks):
             # Trace-time side effect: fires once per compilation, so a
             # flat counter after warmup proves zero steady-state retraces.
             stats["decode_traces"] += 1
+            caches = constrain(caches)
 
             def tick(carry):
                 caches, pt, tok, lengths, gen, done = carry
@@ -209,6 +255,10 @@ class _Backend:
                 else:
                     logits, caches1 = transformer.decode_step(
                         params, cfg, tok, caches, lengths1)
+                # Keep the scan carry head-sharded: without the pin GSPMD
+                # may re-layout the donated caches between ticks, turning
+                # the device-local page walk into resharding traffic.
+                caches1 = constrain(caches1)
                 gen1 = gen + live.astype(gen.dtype)
                 nxt = sampling_lib._sample_batch(
                     logits, temps, top_k, top_p, seeds, gen1
@@ -274,7 +324,9 @@ class DenseBackend(_Backend):
         rows: int = 8,
         cache_len: int = 2048,
         prompt_buckets=(128, 512, 2048),
+        mesh=None,
     ):
+        self._check_head_shards(cfg, mesh)
         self.cfg = cfg
         self.params = params
         self.cache_len = cache_len
@@ -283,10 +335,19 @@ class DenseBackend(_Backend):
         self.caches = transformer.init_caches(
             params, cfg, rows, cache_len, image_len=cfg.vision_tokens or 0,
         )
+        specs = None
+        if mesh is not None:
+            from repro.distributed import sharding as sharding_lib
+
+            # (rows, Hkv, S, hd) stripes: heads on "model" (batch axes
+            # resolve replicated on the 1-D serving mesh).
+            specs = sharding_lib.cache_specs(cfg, mesh, self.caches)
+        self._setup_mesh(mesh, specs)
         self.slot_req: List[Optional[object]] = [None] * rows
+        constrain = self._constrain
         self._decode = jax.jit(
             lambda params, tok, caches, lengths: transformer.decode_step(
-                params, cfg, tok, caches, lengths
+                params, cfg, tok, constrain(caches), lengths
             )
         )
         self._prefill = {}
@@ -495,9 +556,41 @@ class PagedBackend(_Backend):
         prefix_sharing: bool = True,
         reserve_pages: int = 1,
         batch_prefills: bool = True,
+        mesh=None,
+        device_hbm_bytes=None,
     ):
         if cfg.num_codebooks != 1:
             raise ValueError("paged backend supports single-codebook models")
+        num_devices = self._check_head_shards(cfg, mesh)
+        # Per-device page budgets: each device holds a (Hkv/D)-head slice
+        # of every page, so a byte budget translates to a per-device page
+        # capacity — and the *pool* is one global allocator, so the
+        # tightest device clamps it (a page exists on every device or on
+        # none; page tables stay replicated).
+        self._page_budgets = None
+        if device_hbm_bytes is not None:
+            budgets = (
+                tuple(float(b) for b in device_hbm_bytes)
+                if isinstance(device_hbm_bytes, (tuple, list))
+                else (float(device_hbm_bytes),) * num_devices
+            )
+            if len(budgets) != num_devices:
+                raise ValueError(
+                    f"device_hbm_bytes has {len(budgets)} entries for "
+                    f"{num_devices} devices"
+                )
+            slice_bytes = self._page_slice_bytes(cfg, page_size, num_devices)
+            caps = tuple(int(b // slice_bytes) for b in budgets)
+            clamp = min(caps)
+            if clamp < 1 + max_pages_per_seq:
+                limit = caps.index(clamp)
+                raise ValueError(
+                    f"device {limit} page budget holds {clamp} pages "
+                    f"({budgets[limit]:.3g} B / {slice_bytes} B per page "
+                    f"slice) < 1 + max_pages_per_seq={max_pages_per_seq}"
+                )
+            self._page_budgets = caps
+            num_pages = min(num_pages, clamp)
         for b in prompt_buckets:
             if b % page_size:
                 raise ValueError(
@@ -530,22 +623,62 @@ class PagedBackend(_Backend):
         self.caches = transformer.init_paged_caches(
             params, cfg, num_pages, page_size
         )
+        specs = None
+        if mesh is not None:
+            from repro.distributed import sharding as sharding_lib
+
+            specs = sharding_lib.paged_cache_specs(mesh, self.caches)
+        self._setup_mesh(mesh, specs)
         # Inactive rows keep all-null page tables and length 0: the decode
         # step writes their token into the reserved null page and the
         # kernel emits zeros for them.
         self.page_table = np.zeros((rows, max_pages_per_seq), np.int32)
         self.seqs: List[Optional[_SeqState]] = [None] * rows
 
+        constrain = self._constrain
         self._decode = jax.jit(
             lambda params, tok, caches, lengths, pt: transformer.decode_step(
-                params, cfg, tok, caches, lengths, page_table=pt
+                params, cfg, tok, constrain(caches), lengths, page_table=pt
             )
         )
         self._prefill_p: Dict = {}
-        self._scatter_jit = jax.jit(self._scatter_tail)
-        self._copy_jit = jax.jit(self._copy_page)
+        self._scatter_jit = jax.jit(
+            lambda caches, tails, pids: constrain(
+                self._scatter_tail(caches, tails, pids)
+            )
+        )
+        self._copy_jit = jax.jit(
+            lambda caches, src, dst: constrain(
+                self._copy_page(caches, src, dst)
+            )
+        )
 
     # -- capacity ----------------------------------------------------------
+
+    @staticmethod
+    def _page_slice_bytes(cfg: ModelConfig, page_size: int,
+                          num_devices: int) -> int:
+        """Bytes one physical page occupies in ONE device's HBM: the
+        (Hkv / D)-head K+V slice of that page, summed over every layer
+        (one pool per attention layer, all driven by the same ids)."""
+        heads_dev = -(-cfg.n_kv_heads // max(num_devices, 1))
+        itemsize = jnp.dtype(cfg.compute_dtype).itemsize
+        return 2 * cfg.n_layers * heads_dev * page_size \
+            * cfg.head_dim * itemsize
+
+    def device_page_budgets(self) -> Optional[Dict[str, object]]:
+        """Per-device page capacities under ``device_hbm_bytes`` (None
+        when no budget was given): capacities, the limiting device, and
+        the effective pool size after the clamp — what the scheduler's
+        ``page_budget_ok`` is implicitly pricing via ``free_pages``."""
+        if self._page_budgets is None:
+            return None
+        caps = self._page_budgets
+        return {
+            "capacities": caps,
+            "limiting_device": caps.index(min(caps)),
+            "effective_num_pages": self.pool.num_pages,
+        }
 
     def validate(self, req) -> None:
         tok = np.asarray(req.prompt)
@@ -598,19 +731,26 @@ class PagedBackend(_Backend):
                           mean_len: Optional[float] = None) -> float:
         # Default planning shape is half-full sequences; drift calibration
         # passes the cell's *measured* live mean context instead, so the
-        # comparison prices what the machine actually decoded.
+        # comparison prices what the machine actually decoded. On a mesh
+        # the sharded estimate prices the per-device head slice plus the
+        # attention-output gather.
         from repro import compat
-        from repro.core import perf_model
+        from repro.core import numa, perf_model
 
-        return perf_model.estimate_paged_decode(
+        kw = dict(
             batch=batch, num_q_heads=self.cfg.n_heads,
             num_kv_heads=self.cfg.n_kv_heads,
             mean_len=(max(int(mean_len), self.page_size) if mean_len
                       else max(self.cache_len // 2, self.page_size)),
             page_size=self.page_size, head_dim=self.cfg.head_dim,
             dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
-            topo=plan_lib._topology_for(compat.default_backend()),
-        ).time
+        )
+        chip = plan_lib._topology_for(compat.default_backend())
+        if self.num_devices > 1:
+            return perf_model.estimate_sharded_paged_decode(
+                mesh=numa.mesh_topology(self.num_devices, chip=chip), **kw
+            ).time
+        return perf_model.estimate_paged_decode(topo=chip, **kw).time
 
     def prefill_time_saved(self, req) -> float:
         """Modeled prefill seconds a prefix-cache hit would save this
@@ -1179,13 +1319,19 @@ class PagedBackend(_Backend):
     def mapping(self):
         """Resolved decode-shape schedule (decode & window are part of the
         plan key, so this differs from the prefill resolution)."""
+        return self.decode_plan().mapping
+
+    def decode_plan(self) -> plan_lib.AttentionPlan:
+        """The resolved steady-state decode plan, scored jointly over
+        (domain, device) when this backend runs on a mesh — exposes
+        ``num_splits`` / ``split_device_pure`` for stats and tests."""
         return plan_lib.plan_for_config(
             self.cfg,
             (self.rows, self.cfg.n_heads, self.cfg.n_kv_heads,
              1, self.cache_len, self.cfg.head_dim),
             phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED,
-            page_size=self.page_size,
-        ).mapping
+            page_size=self.page_size, num_devices=self.num_devices,
+        )
 
     def modeled_kv_layout(self) -> str:
         """What the analytic model would pick for this backend's steady

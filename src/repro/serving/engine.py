@@ -118,21 +118,59 @@ class LLMEngine:
         mapping: Optional[str] = None,
         scheduler: Optional[Scheduler] = None,
         telemetry: Optional[Telemetry] = None,
-        steps_per_sync: int = 1,
+        steps_per_sync=1,
         compilation_cache_dir: Optional[str] = None,
+        mesh=None,
+        shard_params: bool = False,
+        device_hbm_bytes=None,
     ):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(
                 f"kv_layout must be one of {KV_LAYOUTS}, got {kv_layout!r}"
             )
-        if steps_per_sync < 1:
+        # "auto": the scheduler re-picks N from the live batch's modeled
+        # tick time before every sync (perf_model.choose_steps_per_sync);
+        # powers of two only, so the fused launcher's jit keys stay O(log)
+        # and steady-state decode never retraces.
+        self._auto_steps = steps_per_sync == "auto"
+        if self._auto_steps:
+            steps_per_sync = 1
+        elif not isinstance(steps_per_sync, int) or steps_per_sync < 1:
             raise ValueError(
-                f"steps_per_sync must be >= 1, got {steps_per_sync}"
+                f"steps_per_sync must be a positive int or 'auto', "
+                f"got {steps_per_sync!r}"
             )
+        # Serving mesh: an int requests that many host devices on a 1-D
+        # "model" axis (lazy import — launch depends on serving); a Mesh
+        # passes through; None = single-device. The backends shard only
+        # the KV caches over it (head-parallel); params are replicated
+        # unless ``shard_params`` opts into tensor-parallel weights —
+        # replication keeps every reduction device-local, which is what
+        # makes sharded decode bit-exact vs the single-device engine.
+        if isinstance(mesh, int):
+            from repro.launch.mesh import make_serving_mesh
+
+            mesh = make_serving_mesh(mesh)
         # ``mapping`` overrides the config's kernel-schedule policy for
         # this engine ("auto" or a paper schedule name); ``with_mapping``
         # validates a pinned name at construction instead of mid-trace.
         cfg = plan_lib.with_mapping(cfg, mapping)
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            import jax
+
+            if shard_params:
+                from repro.distributed import sharding as sharding_lib
+
+                params = jax.device_put(
+                    params, sharding_lib.param_shardings(
+                        mesh, jax.eval_shape(lambda p: p, params))
+                )
+            else:
+                params = jax.device_put(
+                    params, NamedSharding(mesh, PartitionSpec())
+                )
         if kv_layout == "auto":
             if not _paged_supported(cfg):
                 kv_layout = "dense"
@@ -149,6 +187,7 @@ class LLMEngine:
             self.backend = DenseBackend(
                 cfg, params, rows=max_batch, cache_len=cache_len,
                 prompt_buckets=prompt_buckets or (128, 512, 2048),
+                mesh=mesh,
             )
         else:
             self.backend = PagedBackend(
@@ -164,6 +203,8 @@ class LLMEngine:
                 prefix_sharing=prefix_sharing,
                 reserve_pages=reserve_pages,
                 batch_prefills=batch_prefills,
+                mesh=mesh,
+                device_hbm_bytes=device_hbm_bytes,
             )
         self.cfg = cfg
         self.scheduler = scheduler or Scheduler()
@@ -282,6 +323,14 @@ class LLMEngine:
         ``schedule`` / ``flush`` / ``decode`` child spans; the scan's wall
         time is folded into the drift collector under its live (batch,
         mean-context) cell as one sample per live scan tick."""
+        if self._auto_steps:
+            # Re-pick N from the live batch depth BEFORE admission: the
+            # scheduler's page-budget check prices decode headroom off
+            # ``backend.steps_per_sync`` (sync_reserve_pages), so the N
+            # the scan will run with is the N admission was priced at.
+            self.steps_per_sync = self.scheduler.choose_steps_per_sync(
+                self.backend)
+            self.backend.steps_per_sync = self.steps_per_sync
         n_steps = self.steps_per_sync if max_steps is None else int(max_steps)
         if n_steps < 1:
             raise ValueError(f"max_steps must be >= 1, got {max_steps}")
@@ -411,6 +460,8 @@ class LLMEngine:
             measured_tok_s=safe_rate(
                 self._tokens_generated, self._decode_elapsed),
             decode_elapsed_s=self._decode_elapsed,
+            steps_per_sync=self.steps_per_sync,
+            num_devices=b.num_devices,
         )
 
     def drift_model_fn(self):

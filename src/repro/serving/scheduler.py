@@ -112,12 +112,16 @@ class SchedulerStats:
     modeled_tok_s: float = 0.0     # perf_model tokens/s at current batch
     measured_tok_s: float = 0.0    # tokens / measured decode wall time
     decode_elapsed_s: float = 0.0  # decode-phase wall time (measured)
+    steps_per_sync: int = 1        # fused decode ticks per host sync (live)
+    num_devices: int = 1           # serving-mesh width (1 = single device)
 
     def summary(self) -> str:
         prefix = ("n/a" if self.prefix_hit_rate is None
                   else f"{self.prefix_hit_rate:.2f}")
+        mesh = f" x{self.num_devices}dev" if self.num_devices > 1 else ""
         return (
-            f"[{self.kv_layout}] {self.completed} done / {self.running} "
+            f"[{self.kv_layout}{mesh} N={self.steps_per_sync}] "
+            f"{self.completed} done / {self.running} "
             f"running / {self.waiting} waiting | "
             f"{self.tokens_generated} tokens in {self.elapsed_s:.2f}s "
             f"({self.tokens_per_s:.1f} tok/s wall, measured decode "
@@ -346,3 +350,28 @@ class Scheduler:
     ) -> Optional[int]:
         """Preemption policy (see :func:`default_choose_victim`)."""
         return default_choose_victim(candidates, protect)
+
+    def choose_steps_per_sync(self, backend) -> int:
+        """Adaptive fused-decode depth (ROADMAP 3's remaining half): pick
+        the smallest power-of-two N whose amortized host-sync overhead
+        drops under 10% of the *live batch's* modeled decode tick
+        (``perf_model.choose_steps_per_sync``). A deep batch with long
+        contexts has slow ticks — N stays small and preemption stays
+        responsive; a shallow batch with fast ticks is host-bound — N
+        grows until the sync cost amortizes. Backends without a decode
+        model keep the engine's current N."""
+        from repro.core import perf_model
+
+        model = self._decode_time_model or getattr(
+            backend, "decode_time_model", None
+        )
+        if model is None:
+            return max(int(getattr(backend, "steps_per_sync", 1)), 1)
+        batch = max(backend.num_active, 1)
+        mean_len = self._live_mean_len(backend)
+        try:
+            tick = (model(batch) if mean_len is None
+                    else model(batch, mean_len=mean_len))
+        except TypeError:  # injected batch-only test models
+            tick = model(batch)
+        return perf_model.choose_steps_per_sync(decode_tick_s=float(tick))

@@ -19,6 +19,7 @@ SANITIZED_MODULES = {
     "test_serving",
     "test_paged_cache",
     "test_fused_decode",
+    "sharded_engine_cases",
 }
 
 

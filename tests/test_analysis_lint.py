@@ -183,6 +183,40 @@ def test_obs_hot_loop_allocs_rule_allows_prebound_use():
                        rules=["obs-no-hot-loop-allocs"]) == []
 
 
+def test_collectives_rule_fires():
+    bad = (
+        "import jax\n"
+        "def kernel(x):\n"
+        "    return jax.lax.psum(x, 'model')\n"
+    )
+    vs = _fires(bad, "src/repro/kernels/paged_decode_attention.py",
+                "collectives-only-in-combine")
+    assert "psum" in vs[0].message
+    # the scheduler and the page pool must stay device-pure too
+    _fires(bad, "src/repro/serving/scheduler.py",
+           "collectives-only-in-combine")
+    _fires(bad, "src/repro/cache/pool.py",
+           "collectives-only-in-combine")
+
+
+def test_collectives_rule_allows_sanctioned_modules():
+    src = (
+        "import jax\n"
+        "def combine(parts):\n"
+        "    return jax.lax.psum(parts, 'model')\n"
+        "def gather(x):\n"
+        "    return jax.lax.all_gather(x, 'model')\n"
+    )
+    assert lint_source(src, "src/repro/kernels/decode_common.py",
+                       rules=["collectives-only-in-combine"]) == []
+    assert lint_source(src, "src/repro/serving/sampling.py",
+                       rules=["collectives-only-in-combine"]) == []
+    # outside the scoped dirs (e.g. optim's gradient allreduce) the rule
+    # does not apply
+    assert lint_source(src, "src/repro/optim/grad_compress.py",
+                       rules=["collectives-only-in-combine"]) == []
+
+
 # --- registry / CLI / live tree ----------------------------------------------
 
 
@@ -192,7 +226,7 @@ def test_every_registered_rule_has_a_bad_fixture_test():
         "compat-only-versioned-jax", "plan-dispatch-only",
         "no-legacy-engine-construction", "decode-relevance-shared",
         "pallas-call-via-compat", "no-host-sync-in-decode-hot-loop",
-        "obs-no-hot-loop-allocs",
+        "obs-no-hot-loop-allocs", "collectives-only-in-combine",
     }
     assert set(RULES) == covered
 

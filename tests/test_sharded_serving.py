@@ -1,0 +1,183 @@
+"""Mesh-sharded serving: KV-head-sharded pool + sharded fused decode.
+
+PR-9 acceptance criteria covered here and in
+``tests/sharded_engine_cases.py`` (the engine-level half, run in a
+fresh subprocess below):
+  * sharded decode (4-device 1-D ``model`` mesh, head-sharded KV)
+    bit-matches the single-device engine for BOTH kv layouts, with the
+    fused scan at N in {1, 8}, and across preemption/resume under page
+    pressure;
+  * the retrace counter stays FLAT after warmup on the mesh, and the
+    head-sharded pool leaks zero pages per device at shutdown (the
+    shadow sanitizer auto-attaches to the cases module via
+    ``conftest.py``);
+  * per-device page budgets (``device_hbm_bytes``) clamp the pool to
+    the *smallest* device and name the limiting device when nothing
+    fits;
+  * ``plan_attention`` scores (domain, device) placement jointly:
+    device-pure split-K ranges win when the inter-device tier is slower
+    than local HBM, and straddled ranges win when a fast fabric makes
+    the extra aggregate bandwidth worth the crossing — BOTH directions
+    pinned;
+  * the adaptive fused-scan depth (``steps_per_sync="auto"``) lands in
+    ``stats()`` and respects the ``MAX_STEPS_PER_SYNC`` cap.
+
+The placement-model and shard-math tests here run in-process anywhere
+(no devices needed). The engine cases run in a subprocess that forces 4
+virtual CPU devices — same idiom as ``test_multidevice.py``, because a
+long-lived XLA CPU client can segfault on its first *sharded* compile
+late in the tier-1 suite, and a fresh client is also what real sharded
+serving gets.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.cache import layout as layout_lib
+from repro.core import numa, perf_model
+from repro.distributed import sharding as sharding_lib
+from repro.kernels import plan as plan_lib
+
+NUM_DEVICES = 4
+
+
+# --- shard math ---------------------------------------------------------------
+
+
+def test_kv_head_shards_match_device_of_head():
+    """The pool's contiguous head shards and the placement helper agree
+    on which device owns every KV head, for every mesh width."""
+    for d in (1, 2, 4):
+        shards = sharding_lib.kv_head_shards(8, d)
+        assert len(shards) == d
+        for h in range(8):
+            owner = layout_lib.device_of_head(h, 8, d)
+            lo, hi = shards[owner]
+            assert lo <= h < hi, (d, h, owner)
+    with pytest.raises(ValueError, match="divide"):
+        sharding_lib.kv_head_shards(6, 4)
+
+
+# --- joint (domain, device) placement model -----------------------------------
+
+
+SLOW_LINK = 1e9      # fabric far below one domain's HBM stream
+FAST_LINK = 1e13     # fabric above the whole chip's HBM
+
+
+def _split(num_kv_heads, link_bw, num_devices=NUM_DEVICES):
+    chip = numa.MI300X
+    return perf_model.estimate_decode_splits(
+        batch=1, num_q_heads=2 * num_kv_heads, num_kv_heads=num_kv_heads,
+        seq_kv=32768, granule=16, head_dim=128, dtype_bytes=2, topo=chip,
+        mesh=numa.mesh_topology(num_devices, chip=chip,
+                                device_link_bw=link_bw),
+    )
+
+
+def test_split_model_prefers_device_pure_on_slow_fabric():
+    """When the inter-device tier is slower than local HBM, split ranges
+    that stay inside one device's head shard must win."""
+    est = _split(num_kv_heads=4, link_bw=SLOW_LINK)
+    assert est.device_pure is True
+    assert est.num_devices == NUM_DEVICES
+
+
+def test_split_model_prefers_straddling_on_fast_fabric():
+    """The reverse direction: with few KV heads (2 owners for 4 devices)
+    and a fabric faster than the owners' combined HBM, straddled ranges
+    tap all four devices' bandwidth and must win."""
+    est = _split(num_kv_heads=2, link_bw=FAST_LINK)
+    assert est.device_pure is False
+    # Same head count on the slow fabric flips back to device-pure.
+    assert _split(num_kv_heads=2, link_bw=SLOW_LINK).device_pure is True
+
+
+def test_split_model_single_device_unchanged():
+    """No mesh: the estimate carries no placement verdict and matches
+    the single-device formula (num_devices=1)."""
+    chip = numa.MI300X
+    est = perf_model.estimate_decode_splits(
+        batch=1, num_q_heads=8, num_kv_heads=4, seq_kv=32768, granule=16,
+        head_dim=128, dtype_bytes=2, topo=chip,
+    )
+    assert est.device_pure is None
+    assert est.num_devices == 1
+
+
+def test_plan_attention_threads_joint_placement():
+    """The plan layer exposes the verdict: ``split_device_pure`` pinned
+    in both directions through ``plan_attention``'s mesh knobs."""
+    shape = (1, 8, 4, 1, 32768, 128)
+    single = plan_lib.plan_attention(
+        shape, phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED,
+        page_size=16, backend="gpu")
+    assert single.num_devices == 1
+    assert single.split_device_pure is None
+    slow = plan_lib.plan_attention(
+        shape, phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED,
+        page_size=16, backend="gpu", num_devices=NUM_DEVICES,
+        device_link_bw=SLOW_LINK)
+    assert slow.num_devices == NUM_DEVICES
+    assert slow.split_device_pure is True
+    fast = plan_lib.plan_attention(
+        (1, 8, 2, 1, 32768, 128), phase=plan_lib.DECODE,
+        kv_layout=plan_lib.PAGED, page_size=16, backend="gpu",
+        num_devices=NUM_DEVICES, device_link_bw=FAST_LINK)
+    assert fast.split_device_pure is False
+
+
+def test_sharded_estimate_scales_with_devices():
+    """Aggregate decode throughput from the sharded estimate grows with
+    the mesh (each device streams only its head slice)."""
+    kw = dict(batch=8, num_q_heads=8, num_kv_heads=4, mean_len=4096,
+              page_size=16, head_dim=128, dtype_bytes=2)
+    chip = numa.MI300X
+    one = perf_model.estimate_sharded_paged_decode(
+        mesh=numa.mesh_topology(1, chip=chip), **kw)
+    four = perf_model.estimate_sharded_paged_decode(
+        mesh=numa.mesh_topology(4, chip=chip), **kw)
+    assert four.tokens_per_second > 2 * one.tokens_per_second
+    assert "mesh4" in four.layout
+
+
+def test_choose_steps_per_sync_bounds():
+    pick = perf_model.choose_steps_per_sync
+    assert pick(decode_tick_s=1e-3) == 1     # tick dwarfs host overhead
+    assert pick(decode_tick_s=1e-7) == perf_model.MAX_STEPS_PER_SYNC
+    ns = [pick(decode_tick_s=t) for t in (1e-3, 1e-4, 1e-5, 1e-6, 1e-7)]
+    assert ns == sorted(ns)                  # deeper scans as ticks shrink
+    assert all(n & (n - 1) == 0 for n in ns)  # powers of two (jit keys)
+
+
+# --- engine-level mesh cases (fresh process) ----------------------------------
+
+
+@pytest.mark.slow
+def test_sharded_engine_cases_subprocess():
+    """Run ``tests/sharded_engine_cases.py`` — bit-exactness vs
+    single-device (both layouts, N in {1, 8}, preemption/resume),
+    retrace-flat, per-device budgets, adaptive N, head-sharded
+    placement, zero leaks — in a fresh interpreter with 4 virtual CPU
+    devices (see the cases module's docstring for why)."""
+    here = os.path.dirname(__file__)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q",
+         os.path.join(here, "sharded_engine_cases.py")],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert proc.returncode == 0, \
+        f"\n--- stdout ---\n{proc.stdout[-4000:]}\n--- stderr ---\n" \
+        f"{proc.stderr[-2000:]}"
+    assert " passed" in proc.stdout and "failed" not in proc.stdout, \
+        proc.stdout[-1000:]
