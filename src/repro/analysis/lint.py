@@ -458,6 +458,56 @@ def check_collectives(modules: Sequence[Module]) -> List[Violation]:
     return out
 
 
+#: Quantized-pool scale metadata (PR 10): ``k_scales`` / ``v_scales``
+#: ride the page table — scalar-prefetch SMEM metadata indexed by page id
+#: inside kernel bodies (src/repro/kernels/) and packed/scattered by the
+#: quantization library (src/repro/cache/). Everywhere else they are
+#: opaque cache-dict entries: serving code that *indexes* a bare
+#: ``k_scales`` array or does arithmetic on one is re-deriving
+#: dequantization outside the kernel, which silently diverges from what
+#: the SMEM path actually computes.
+_SCALE_NAMES = ("k_scales", "v_scales")
+_SCALE_ALLOWED_DIRS = ("src/repro/kernels", "src/repro/cache")
+
+
+@rule(
+    "kv-scales-ride-page-table",
+    "bare k_scales/v_scales arrays may only be indexed or used in "
+    "arithmetic inside src/repro/kernels/ and src/repro/cache/ — "
+    "everywhere else scale metadata is an opaque page-table payload "
+    "(dict entries pass through; dequant math lives with the kernels)",
+)
+def check_kv_scales_opaque(modules: Sequence[Module]) -> List[Violation]:
+    out: List[Violation] = []
+    for mod in modules:
+        if any(_in_dir(mod, d) for d in _SCALE_ALLOWED_DIRS):
+            continue
+
+        def bad(node: ast.AST) -> Optional[str]:
+            if isinstance(node, ast.Name) and node.id in _SCALE_NAMES:
+                return node.id
+            return None
+
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Subscript):
+                name = bad(node.value)
+                if name:
+                    out.append(Violation(
+                        "kv-scales-ride-page-table", mod.path, node.lineno,
+                        f"{name}[...] outside kernels/cache — scale "
+                        "metadata is opaque page-table payload here",
+                    ))
+            elif isinstance(node, ast.BinOp):
+                name = bad(node.left) or bad(node.right)
+                if name:
+                    out.append(Violation(
+                        "kv-scales-ride-page-table", mod.path, node.lineno,
+                        f"arithmetic on {name} outside kernels/cache — "
+                        "dequantization lives with the kernel SMEM path",
+                    ))
+    return out
+
+
 # --- driver -------------------------------------------------------------------
 
 

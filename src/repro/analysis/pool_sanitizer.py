@@ -26,6 +26,19 @@ the pool's own compound operations (``allocate_sequence``, ``fork``,
 calls through the shadow automatically. ``tests/conftest.py`` attaches a
 shadow to every pool constructed in the scheduler/serving/paged-cache
 suites, so the whole tier-1 serving surface runs sanitized.
+
+:class:`ShadowTier` extends the same idea one tier down: it attaches to a
+:class:`repro.cache.tier.HostPageStore` (and, bound, the device
+:class:`~repro.cache.prefix.PrefixCache` in front of it) and mirrors each
+chain hash through a DEVICE / HOST residency machine — residency is
+exclusive by construction, and the shadow catches the violations:
+
+  * **double demote** — admitting a hash that is already host-resident,
+  * **promote-after-free** — taking a payload the host tier no longer
+    holds (LRU-evicted, drained, or already promoted),
+  * **stale device read** — a device prefix lookup returning (or an
+    insert creating) an entry for a hash whose page was demoted — the
+    device copy should have been dropped at demotion.
 """
 
 from __future__ import annotations
@@ -41,19 +54,30 @@ from repro.cache.pool import (
 
 __all__ = [
     "CowViolationError",
+    "DoubleDemoteError",
     "DoubleFreeError",
     "NullPageWriteError",
     "PoolSanitizerError",
+    "PromoteAfterFreeError",
     "ShadowDesyncError",
     "ShadowPool",
+    "ShadowTier",
+    "StaleDeviceReadError",
     "UseAfterReleaseError",
     "attach",
+    "attach_tier",
 ]
 
 # Shadow page states (derived: FREE rc==0, OWNED rc==1, SHARED rc>1).
 FREE = "FREE"
 OWNED = "OWNED"
 SHARED = "SHARED"
+
+# Shadow tier residency states per chain hash (absent = never seen /
+# gone): DEVICE = prefix-cache entry holds a device page; HOST = demoted
+# payload lives in the host store.
+DEVICE = "DEVICE"
+HOST = "HOST"
 
 
 class PoolSanitizerError(PoolError):
@@ -79,6 +103,22 @@ class CowViolationError(PoolSanitizerError):
 class ShadowDesyncError(PoolSanitizerError):
     """Shadow and pool refcounts disagree — some path mutated refcounts
     without going through the instrumented primitives."""
+
+
+class DoubleDemoteError(PoolSanitizerError):
+    """Demotion of a hash that is already host-resident — the device copy
+    was never promoted back, so something demoted the same page twice."""
+
+
+class PromoteAfterFreeError(PoolSanitizerError):
+    """Promotion (take) of a hash the host tier no longer holds — it was
+    LRU-evicted, drained, or already promoted."""
+
+
+class StaleDeviceReadError(PoolSanitizerError):
+    """A device prefix-cache entry exists (or was read) for a hash whose
+    page was demoted host-side — the device copy should have been dropped
+    at demotion; residency is exclusive."""
 
 
 class ShadowPool:
@@ -235,3 +275,139 @@ def attach(pool: PagePool) -> ShadowPool:
     """Instrument ``pool`` in place; returns the shadow for queries and
     teardown checks."""
     return ShadowPool(pool)
+
+
+class ShadowTier:
+    """Residency state machine over a device↔host KV tier: instruments a
+    :class:`repro.cache.tier.HostPageStore` (and, via :meth:`bind_prefix`,
+    the device :class:`~repro.cache.prefix.PrefixCache` in front of it),
+    mirroring each chain hash through DEVICE / HOST / gone. Instance
+    attributes only, same contract as :class:`ShadowPool`."""
+
+    def __init__(self, host):
+        self.host = host
+        self._state: Dict[bytes, str] = {}
+        self.prefix = None
+        self.ops = 0
+        self._orig = {
+            "admit": host.admit,
+            "take": host.take,
+            "discard": host.discard,
+            "drain": host.drain,
+        }
+        host.admit = self._admit
+        host.take = self._take
+        host.discard = self._discard
+        host.drain = self._drain
+        self._prefix_orig: Dict[str, object] = {}
+        self._attached = True
+
+    def bind_prefix(self, prefix) -> "ShadowTier":
+        """Also instrument the device prefix cache paired with this host
+        store, so stale device reads (and inserts) of demoted hashes are
+        caught at the device side too."""
+        self.prefix = prefix
+        self._prefix_orig = {
+            "lookup": prefix.lookup,
+            "insert": prefix.insert,
+        }
+        prefix.lookup = self._lookup
+        prefix.insert = self._insert
+        return self
+
+    def state(self, h: bytes) -> Optional[str]:
+        return self._state.get(h)
+
+    # -- instrumented host-store primitives ---------------------------------
+
+    def _admit(self, h, payload) -> bool:
+        self.ops += 1
+        if self._state.get(h) == HOST:
+            raise DoubleDemoteError(
+                f"demote of hash {h!r}, which is already host-resident"
+            )
+        stored = self._orig["admit"](h, payload)
+        if stored:
+            self._state[h] = HOST
+        # Mirror host-LRU overflow: hashes the admit pushed out are gone.
+        for k in [k for k, s in self._state.items()
+                  if s == HOST and k not in self.host]:
+            del self._state[k]
+        return stored
+
+    def _take(self, h):
+        self.ops += 1
+        if self._state.get(h) != HOST:
+            raise PromoteAfterFreeError(
+                f"promote (take) of hash {h!r}, which the host tier does "
+                f"not hold (state={self._state.get(h)})"
+            )
+        payload = self._orig["take"](h)
+        self._state.pop(h, None)
+        return payload
+
+    def _discard(self, h) -> bool:
+        self.ops += 1
+        dropped = self._orig["discard"](h)
+        if dropped:
+            self._state.pop(h, None)
+        return dropped
+
+    def _drain(self) -> int:
+        self.ops += 1
+        n = self._orig["drain"]()
+        self._state = {
+            k: s for k, s in self._state.items() if s != HOST
+        }
+        return n
+
+    # -- instrumented device prefix cache -----------------------------------
+
+    def _lookup(self, hashes, touch: bool = True):
+        self.ops += 1
+        out = self._prefix_orig["lookup"](hashes, touch=touch)
+        for h in list(hashes)[: len(out)]:
+            if self._state.get(h) == HOST:
+                raise StaleDeviceReadError(
+                    f"device prefix lookup matched hash {h!r}, whose page "
+                    f"was demoted host-side"
+                )
+        return out
+
+    def _insert(self, hashes, pages):
+        self.ops += 1
+        for h in hashes:
+            if self._state.get(h) == HOST:
+                raise StaleDeviceReadError(
+                    f"device prefix insert of hash {h!r} while its payload "
+                    f"is host-resident; promote (take) or discard it first"
+                )
+        added = self._prefix_orig["insert"](hashes, pages)
+        for h in hashes:
+            self._state[h] = DEVICE
+        return added
+
+    def detach(self) -> None:
+        """Restore the unwrapped methods (idempotent)."""
+        if not self._attached:
+            return
+        for name in self._orig:
+            try:
+                delattr(self.host, name)
+            except AttributeError:
+                pass
+        for name in self._prefix_orig:
+            try:
+                delattr(self.prefix, name)
+            except AttributeError:
+                pass
+        self._attached = False
+
+
+def attach_tier(host, prefix=None) -> ShadowTier:
+    """Instrument a host page store (and optionally its device prefix
+    cache) in place; returns the shadow tier for queries and teardown."""
+    shadow = ShadowTier(host)
+    if prefix is not None:
+        shadow.bind_prefix(prefix)
+    return shadow

@@ -4,9 +4,11 @@ Modules:
   pool    fixed-size page allocator (free list, refcounts, COW, page tables)
   prefix  hash-chain longest-shared-prefix page reuse across requests
   layout  head-aligned vs interleaved page placement + modeled traffic
+  quant   int8/fp8 page codes + per-(head, page) dequant scales
+  tier    host-memory page store behind the device pool (demote/promote)
 """
 
-from repro.cache import layout, pool, prefix  # noqa: F401
+from repro.cache import layout, pool, prefix, quant, tier  # noqa: F401
 from repro.cache.layout import (  # noqa: F401
     HEAD_ALIGNED,
     INTERLEAVED,
@@ -19,3 +21,4 @@ from repro.cache.layout import (  # noqa: F401
 )
 from repro.cache.pool import NULL_PAGE, OutOfPages, PagePool, SequencePages  # noqa: F401
 from repro.cache.prefix import PrefixCache, page_hashes  # noqa: F401
+from repro.cache.tier import HostPageStore  # noqa: F401

@@ -1,0 +1,204 @@
+"""Quantized KV pages: int8 / fp8 codes + per-(head, page) scales.
+
+The million-token serving problem is first a *capacity* problem: at fp32 a
+128K-token context holds ~2 GB of KV per layer-group, and the NUMA-aware
+head-first placement only pays off if the pages fit on-device at all. This
+module shrinks the paged pool 4x (int8/fp8 codes, one fp32 scale per
+(kv head, physical page) for K and V each) while keeping the *dequantize
+point inside the Pallas kernel bodies*: pools stream as 1-byte codes and
+widen to fp32 in VMEM right before the QK^T/PV matmuls, so HBM traffic —
+the thing decode is bound on — shrinks with the storage.
+
+Scale metadata is **page-table metadata**: a ``(Hkv, num_pages)`` fp32
+array per pool, indexed by *physical* page id exactly like the pool
+itself, riding the same scalar-prefetch SMEM path the page table uses
+(``kernels/paged_decode_attention.py`` / ``paged_prefill_attention.py``).
+Nothing outside ``src/repro/kernels/`` and this module may do arithmetic
+on the scales (lint rule ``kv-scales-ride-page-table``): serving and model
+code thread them opaquely, keyed by the page table.
+
+Write paths quantize **per page with rescale-on-append**: a page's scale
+is the running amax of everything written into it; when a new token's row
+exceeds the current scale's range, the page's existing codes are rescaled
+(``codes * old_scale / new_scale`` — a shrink, never an overflow) in the
+same jitted update. Copy-on-write copies codes verbatim and duplicates the
+scale entry (``cow_scales``), so a forked page dequantizes identically.
+
+Symmetric schemes, zero-point-free:
+
+  * ``int8`` — codes in [-127, 127], ``scale = amax / 127``;
+  * ``fp8``  — ``float8_e4m3fn`` codes, ``scale = amax / 448`` (the e4m3
+    max normal), which keeps the format's relative precision centred on
+    the page's live range;
+  * ``fp32`` — identity (no scales allocated anywhere).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "KV_DTYPES",
+    "QMAX",
+    "append_rows",
+    "cow_scales",
+    "dequantize_pages",
+    "kv_dtype_of",
+    "kv_itemsize",
+    "quantize_pages",
+    "scale_nbytes",
+    "scatter_pages",
+    "storage_dtype",
+    "validate_kv_dtype",
+]
+
+#: Supported pool storage formats, in the order the docs list them.
+KV_DTYPES = ("fp32", "int8", "fp8")
+
+#: Largest representable magnitude per quantized format (int8 symmetric
+#: range; float8_e4m3fn max normal).
+QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def validate_kv_dtype(kv_dtype: str) -> str:
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(
+            f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
+        )
+    return kv_dtype
+
+
+def storage_dtype(kv_dtype: str):
+    """The jnp dtype the pool arrays are stored as."""
+    validate_kv_dtype(kv_dtype)
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8":
+        return jnp.float8_e4m3fn
+    return jnp.float32
+
+
+def kv_itemsize(kv_dtype: str) -> int:
+    """Bytes per pool element — what ``_page_slice_bytes`` accounting and
+    the perf model's ``dtype_bytes`` consume."""
+    return 1 if kv_dtype in QMAX else 4
+
+
+def kv_dtype_of(dtype) -> str:
+    """The ``kv_dtype`` name a pool array's jnp dtype corresponds to — how
+    the model layer recognises a quantized pool it was handed (any wider
+    dtype, fp32/bf16, reads as the unquantized "fp32" scheme)."""
+    d = jnp.dtype(dtype)
+    if d == jnp.dtype(jnp.int8):
+        return "int8"
+    if d == jnp.dtype(jnp.float8_e4m3fn):
+        return "fp8"
+    return "fp32"
+
+
+def scale_nbytes(num_kv_heads: int, num_pages: int, kv_dtype: str) -> int:
+    """Bytes of scale metadata per pool array (0 for fp32): one fp32 per
+    (kv head, physical page)."""
+    if kv_dtype not in QMAX:
+        return 0
+    return 4 * num_kv_heads * num_pages
+
+
+def _safe(s):
+    return jnp.where(s > 0.0, s, 1.0)
+
+
+def _encode(x, kv_dtype: str):
+    """fp32 -> codes at unit scale (caller has already divided)."""
+    if kv_dtype == "int8":
+        return jnp.clip(jnp.round(x), -127.0, 127.0).astype(jnp.int8)
+    return x.astype(storage_dtype(kv_dtype))
+
+
+def quantize_pages(pages, kv_dtype: str):
+    """Quantize a full pool ``(Hkv, P, page_size, hd)`` (or any array whose
+    last two axes are the page content) to ``(codes, scales)`` with one
+    scale per leading index pair — ``(Hkv, P)`` for a pool.
+
+    fp32 returns ``(pages, None)`` so callers can thread unconditionally.
+    """
+    validate_kv_dtype(kv_dtype)
+    if kv_dtype == "fp32":
+        return jnp.asarray(pages, jnp.float32), None
+    x = jnp.asarray(pages, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=(-2, -1))
+    scales = amax / QMAX[kv_dtype]
+    codes = _encode(x / _safe(scales)[..., None, None], kv_dtype)
+    return codes, scales.astype(jnp.float32)
+
+
+def dequantize_pages(codes, scales):
+    """Inverse of :func:`quantize_pages`: ``codes (..., ps, hd)`` x
+    ``scales (...)`` -> fp32. ``scales=None`` is the fp32 identity."""
+    x = jnp.asarray(codes, jnp.float32)
+    if scales is None:
+        return x
+    return x * jnp.asarray(scales, jnp.float32)[..., None, None]
+
+
+def append_rows(pages, scales, rows, pids, offs, kv_dtype: str):
+    """Scatter one new token row per sequence into quantized pages,
+    rescaling each touched page when the new row widens its range.
+
+    ``pages``: ``(Hkv, P, ps, hd)`` codes; ``scales``: ``(Hkv, P)`` fp32;
+    ``rows``: ``(Hkv, B, hd)`` fp32 new K (or V) rows; ``pids``/``offs``:
+    ``(B,)`` int32 physical page / in-page offset per sequence (distinct
+    pages across the batch by construction — every live row owns its tail
+    page exclusively, COW guarantees it). Returns ``(pages, scales)``
+    updated functionally (jit/donation-friendly).
+
+    The rescale is the one place quantized pages lose information beyond
+    the format itself: existing codes shrink by ``old_scale / new_scale``
+    (<= 1) when a louder token arrives. fp32 degenerates to the plain
+    scatter with ``scales`` passed through untouched (``None``).
+    """
+    validate_kv_dtype(kv_dtype)
+    rows = jnp.asarray(rows, jnp.float32)
+    if kv_dtype == "fp32":
+        return pages.at[:, pids, offs].set(rows.astype(pages.dtype)), scales
+    qmax = QMAX[kv_dtype]
+    old_s = scales[:, pids]                       # (Hkv, B)
+    row_amax = jnp.max(jnp.abs(rows), axis=-1)    # (Hkv, B)
+    new_s = jnp.maximum(old_s, row_amax / qmax)
+    # Rescale the touched pages' existing codes to the widened scale.
+    touched = jnp.asarray(pages[:, pids], jnp.float32)   # (Hkv, B, ps, hd)
+    ratio = (old_s / _safe(new_s))[..., None, None]
+    rescaled = _encode(touched * ratio, kv_dtype)
+    new_codes = _encode(rows / _safe(new_s)[..., None], kv_dtype)
+    rescaled = rescaled.at[:, jnp.arange(pids.shape[0]), offs].set(new_codes)
+    pages = pages.at[:, pids].set(rescaled)
+    scales = scales.at[:, pids].set(new_s)
+    return pages, scales
+
+
+def scatter_pages(pages, scales, new, pids, kv_dtype: str):
+    """Write whole freshly-computed pages into the pool (prefill tail
+    scatter): ``new`` is ``(..., n, ps, hd)`` fp32 page-shaped content,
+    ``pids`` the ``(n,)`` destination physical ids along the pool's pages
+    axis (third from the end). Quantized pools store codes and set the
+    destinations' scale entries; fp32 degenerates to the plain set with
+    ``scales`` passed through (``None``). Destinations are freshly
+    allocated (or the write-sink null page), so per-page amax
+    quantization is exact — nothing pre-existing to rescale."""
+    validate_kv_dtype(kv_dtype)
+    if kv_dtype == "fp32":
+        return pages.at[..., pids, :, :].set(new.astype(pages.dtype)), scales
+    codes, s = quantize_pages(new, kv_dtype)
+    pages = pages.at[..., pids, :, :].set(codes.astype(pages.dtype))
+    scales = scales.at[..., pids].set(s.astype(scales.dtype))
+    return pages, scales
+
+
+def cow_scales(scales, src, dst):
+    """Copy-on-write metadata step: the scale entry follows the page copy
+    (``dst`` dequantizes identically to ``src``). fp32 passthrough. The
+    pages axis is last in the scale layout, so this serves both the flat
+    ``(Hkv, P)`` arrays and the scanned stacks' ``(periods, Hkv, P)``."""
+    if scales is None:
+        return scales
+    return scales.at[..., dst].set(scales[..., src])

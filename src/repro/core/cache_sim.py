@@ -415,6 +415,101 @@ def simulate_paged_decode(
     )
 
 
+# -----------------------------------------------------------------------------
+# Hierarchical tier: device pool LRU backed by a host page store
+# -----------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TieredSimResult:
+    """One replayed serving trace over the device↔host KV tier."""
+
+    device_hits: int     # page reads served by the device pool
+    promotions: int      # reads served by restoring a demoted host page
+    demotions: int       # device-capacity evictions that landed host-side
+    recomputes: int      # reads absent from both tiers (prefill again)
+    link_bytes: int      # device<->host traffic (both directions)
+    hbm_bytes: int       # device fills (promotions + recomputes)
+    elapsed: float       # seconds: HBM + host-link + recompute terms
+
+    @property
+    def device_hit_rate(self) -> float:
+        tot = self.device_hits + self.promotions + self.recomputes
+        return self.device_hits / tot if tot else 0.0
+
+    @property
+    def rescue_rate(self) -> float:
+        """Of the reads that missed the device pool, the fraction the host
+        tier rescued from recompute — the number tiering exists to move."""
+        cold = self.promotions + self.recomputes
+        return self.promotions / cold if cold else 0.0
+
+
+def simulate_tiered_decode(
+    access_trace,
+    *,
+    page_bytes: int,
+    device_pages: int,
+    host_pages: int,
+    topo: Topology,
+    recompute_s_per_page: float,
+) -> TieredSimResult:
+    """Replay a page-access trace through a two-tier LRU: a device pool of
+    ``device_pages`` physical pages in front of a host store of
+    ``host_pages``. A device miss checks the host tier: resident pages
+    *promote* (one page over the host link, then a device fill); absent
+    pages *recompute* (``recompute_s_per_page`` — the extend-prefill cost
+    the page's tokens would need). Device-capacity evictions *demote*
+    into the host LRU instead of vanishing. This is the event-level
+    cross-check of ``perf_model.estimate_tier_transfer`` pricing: it sees
+    what the analytic form assumes away — host-LRU churn when the cold
+    set outgrows ``host_pages``, and promotion ping-pong when the device
+    pool is too small for the live working set.
+
+    ``access_trace``: iterable of hashable page keys in read order (e.g.
+    ``(head, pid)`` pairs, or chain hashes from a serving trace)."""
+    from repro.core import perf_model
+
+    device: OrderedDict = OrderedDict()
+    host: OrderedDict = OrderedDict()
+    device_hits = promotions = demotions = recomputes = 0
+    link_bytes = hbm_bytes = 0
+    for key in access_trace:
+        if key in device:
+            device.move_to_end(key)
+            device_hits += 1
+            continue
+        if key in host:
+            del host[key]
+            promotions += 1
+            link_bytes += page_bytes
+        else:
+            recomputes += 1
+        hbm_bytes += page_bytes
+        device[key] = True
+        while len(device) > max(device_pages, 1):
+            victim, _ = device.popitem(last=False)
+            demotions += 1
+            link_bytes += page_bytes
+            host[victim] = True
+            while len(host) > max(host_pages, 0):
+                host.popitem(last=False)
+    elapsed = (
+        hbm_bytes / topo.hbm_bw
+        + link_bytes / perf_model.HOST_LINK_BW
+        + recomputes * max(recompute_s_per_page, 0.0)
+    )
+    return TieredSimResult(
+        device_hits=device_hits,
+        promotions=promotions,
+        demotions=demotions,
+        recomputes=recomputes,
+        link_bytes=link_bytes,
+        hbm_bytes=hbm_bytes,
+        elapsed=elapsed,
+    )
+
+
 def compare_mappings(
     workload: AttentionWorkload,
     topo: Topology,

@@ -222,6 +222,32 @@ def amortized_host_overhead(steps_per_sync: int) -> float:
     is paid once per sync and spread over the N tokens it produced."""
     return HOST_SYNC_OVERHEAD_S / max(int(steps_per_sync), 1)
 
+
+#: Device<->host page-transfer bandwidth (B/s) for the hierarchical KV
+#: tier: PCIe-Gen4-x16-class (~32 GB/s sustained), i.e. one to two orders
+#: below HBM but vastly above "recompute the prefill behind the page".
+#: The tiering backend prices demotion/promotion against recompute with
+#: this — the same honesty contract the decode estimates follow.
+HOST_LINK_BW = 32e9
+
+
+def estimate_tier_transfer(nbytes: int) -> float:
+    """Modeled seconds to move ``nbytes`` of demoted/promoted KV pages
+    across the device<->host link, charged one host sync for the
+    round-trip dispatch. Linear in bytes: page payloads are large
+    contiguous copies, so latency is sync-dominated only for tiny runs."""
+    return HOST_SYNC_OVERHEAD_S + max(int(nbytes), 0) / HOST_LINK_BW
+
+
+def tier_transfer_beats_recompute(nbytes: int, recompute_s: float) -> bool:
+    """The demote-vs-preempt policy question in one predicate: is
+    restoring ``nbytes`` of pages over the host link modeled faster than
+    recomputing them (``recompute_s``, e.g. the extend-prefill delta)?
+    True is the normal case — page transfer is orders of magnitude
+    cheaper than re-prefilling the tokens behind it; False flags shapes
+    (tiny prefixes) where eviction-and-recompute is honest."""
+    return estimate_tier_transfer(nbytes) < max(recompute_s, 0.0)
+
 #: Default cap on the split sweep. The model plateaus well before this on
 #: every topology we carry (waves stop shrinking once cells x splits covers
 #: the domains, and the combine term grows linearly), so the cap only

@@ -244,7 +244,11 @@ def paged_cache_specs(mesh: Mesh, caches_shape):
     Pool arrays are ``(Hkv, num_pages, ps, hd)`` per rem layer and
     ``(n_periods, Hkv, num_pages, ps, hd)`` for scanned stacks — the head
     axis is rank-4-from-the-right in both, so the spec right-aligns.
-    Non-pool leaves (conv/ssm states, if any) replicate."""
+    Quantized pools add ``(Hkv, num_pages)`` scale metadata (scanned:
+    ``(n_periods, Hkv, num_pages)``): same head split, rank-2-from-the-
+    right, so each device holds exactly the scales its page slices
+    dequantize with. Non-pool leaves (conv/ssm states, if any)
+    replicate."""
 
     def spec(path, leaf):
         key = ""
@@ -255,6 +259,10 @@ def paged_cache_specs(mesh: Mesh, caches_shape):
         rank = leaf.ndim
         if key in ("k_pages", "v_pages") and rank >= 4:
             tail = P(MODEL_AXIS, None, None, None)
+            pad = (None,) * (rank - len(tail))
+            return fix_spec(P(*(pad + tuple(tail))), leaf.shape, mesh)
+        if key in ("k_scales", "v_scales") and rank >= 2:
+            tail = P(MODEL_AXIS, None)
             pad = (None,) * (rank - len(tail))
             return fix_spec(P(*(pad + tuple(tail))), leaf.shape, mesh)
         return P()

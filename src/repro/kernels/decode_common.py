@@ -54,6 +54,7 @@ def chunk_relevant(chunk_start, chunk_len: int, length, window):
 def accumulate_kv_block(
     q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
     *, scale, softcap, window, block_start, block_len: int, length,
+    k_scale=None, v_scale=None,
 ):
     """One online-softmax step over a KV unit, shared by all four decode
     kernel bodies (dense/paged x one-pass/split-K).
@@ -66,10 +67,20 @@ def accumulate_kv_block(
     or past ``length`` (and outside the sliding window) are masked
     per-element; the caller gates whole irrelevant units with
     :func:`chunk_relevant`.
+
+    ``k_scale`` / ``v_scale`` are the quantized pools' per-(head, page)
+    dequant factors (traced SMEM scalars, prefetched next to the page
+    table): the unit's 1-byte codes widen to fp32 here, in VMEM, right
+    before the matmuls — HBM streamed only the codes. ``None`` keeps the
+    fp32 pools untouched.
     """
     q = q_ref[0, 0].astype(jnp.float32)      # (G, D)
     k = k_ref[0, 0].astype(jnp.float32)      # (block_len, D)
     v = v_ref[0, 0].astype(jnp.float32)
+    if k_scale is not None:
+        k = k * k_scale
+    if v_scale is not None:
+        v = v * v_scale
     s = jax.lax.dot_general(
         q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     ) * scale

@@ -400,31 +400,40 @@ def paged_decode_attention(
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
     window: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
     impl: str = "auto",
     plan: Optional[AttentionPlan] = None,
 ) -> jnp.ndarray:
     """Paged single-token decode. q: (B,Hq,D); k/v_pages: (Hkv,P,ps,D)
     head-major; page_table: (B,max_pages) physical ids (null-page padded);
     lengths: (B,). The pallas path consumes the page table natively via
-    scalar prefetch; xla/ref gathers a dense view first (oracle/dry-run)."""
+    scalar prefetch; xla/ref gathers a dense view first (oracle/dry-run).
+
+    ``k_scales``/``v_scales`` — (Hkv, P) fp32 per-page dequant factors for
+    quantized pools (``cache.quant``); they ride the same scalar-prefetch
+    path as the page table, and ``None`` means the pools are fp32.
+    """
     b, hq, d = q.shape
     hkv, _, ps, _ = k_pages.shape
     if plan is None:
         plan = plan_attention(
             (b, hq, hkv, 1, page_table.shape[1] * ps, d),
             phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED, page_size=ps,
-            window=window, dtype_bytes=q.dtype.itemsize, impl=impl,
+            window=window, dtype_bytes=k_pages.dtype.itemsize, impl=impl,
         )
     if plan.impl in ("xla", "ref"):
         return ref_mod.paged_decode_attention(
             q, k_pages, v_pages, page_table, lengths,
             softcap=softcap, scale=scale, window=window,
+            k_scales=k_scales, v_scales=v_scales,
         )
     if plan.impl != "pallas":
         raise ValueError(f"unknown impl {plan.impl!r}")
     return paged_flash_decode(
         q, k_pages, v_pages, page_table, lengths,
         softcap=softcap, scale=scale, window=window,
+        k_scales=k_scales, v_scales=v_scales,
         num_splits=plan.num_splits,
         interpret=plan.interpret,
     )
@@ -443,6 +452,8 @@ def paged_prefill_attention(
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
     window: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
     impl: str = "auto",
     plan: Optional[AttentionPlan] = None,
 ) -> jnp.ndarray:
@@ -457,6 +468,9 @@ def paged_prefill_attention(
 
     The pallas path reads the prefix straight from the page table (no
     gather, no dense copy); xla/ref is the gather-based oracle.
+    ``k_scales``/``v_scales`` are the quantized pools' (Hkv, P) per-page
+    dequant factors (``None`` for fp32 pools); the tail K/V is always
+    fresh fp32 activations and never quantized.
     """
     b, hq, st, d = q.shape
     hkv, _, ps, _ = k_pages.shape
@@ -472,6 +486,7 @@ def paged_prefill_attention(
             q, k_pages, v_pages, page_table, k_tail, v_tail,
             prefix_len, tail_len,
             softcap=softcap, scale=scale, window=window,
+            k_scales=k_scales, v_scales=v_scales,
         )
     if plan.impl != "pallas":
         raise ValueError(f"unknown impl {plan.impl!r}")
@@ -479,6 +494,7 @@ def paged_prefill_attention(
         q, k_pages, v_pages, page_table, k_tail, v_tail,
         prefix_len, tail_len,
         softcap=softcap, scale=scale, window=window,
+        k_scales=k_scales, v_scales=v_scales,
         interpret=plan.interpret,
     )
 

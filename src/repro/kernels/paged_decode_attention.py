@@ -59,13 +59,19 @@ from repro.kernels import decode_common
 NEG_INF = decode_common.NEG_INF
 
 
-def paged_kv_index_map(b_, h_, p_, pt, ln):
+def paged_kv_index_map(b_, h_, p_, pt, ln, *scales):
     """K/V BlockSpec index map of the one-pass paged kernel: grid cell
     (batch, kv-head, logical page) DMAs physical page ``pt[b, p]`` of head
     ``h``. Module-level (not a closure) so the domain-purity access tracer
     (``repro.analysis.access_trace``) replays the *same* function the
-    kernel hands to ``pallas_call``."""
+    kernel hands to ``pallas_call``. The trailing ``*scales`` absorbs the
+    quantized pools' prefetched scale tables (unused for addressing — the
+    physical page id keys both the pool and its scales)."""
     return (h_, pt[b_, p_], 0, 0)
+
+
+def _q_index_map(b_, h_, p_, pt, ln, *scales):
+    return (b_, h_, 0, 0)
 
 
 def split_kv_index_map(pps, max_pages):
@@ -74,19 +80,32 @@ def split_kv_index_map(pps, max_pages):
     clamped to the last table slot — the DMA must name a valid page; the
     kernel's range test skips its compute."""
 
-    def kv_index(b_, h_, s_, j_, pt, ln):
+    def kv_index(b_, h_, s_, j_, pt, ln, *scales):
         return (h_, pt[b_, jnp.minimum(s_ * pps + j_, max_pages - 1)], 0, 0)
 
     return kv_index
 
 
+def _split_q_index_map(b_, h_, s_, j_, pt, ln, *scales):
+    return (b_, h_, 0, 0)
+
+
+def _split_out_index_map(b_, h_, s_, j_, pt, ln, *scales):
+    return (b_, h_, s_, 0, 0)
+
+
 def _paged_decode_kernel(
     pt_ref, len_ref,            # scalar-prefetch: (B, max_pages), (B,)
-    q_ref, k_ref, v_ref, o_ref,
-    acc_ref, m_ref, l_ref,
-    *, scale, softcap, window, page_size, max_pages,
+    *refs,                      # [ks_ref, vs_ref,] q, k, v, o, acc, m, l
+    scale, softcap, window, page_size, max_pages, quantized,
 ):
+    if quantized:
+        ks_ref, vs_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref = refs
+        ks_ref = vs_ref = None
     b_idx = pl.program_id(0)
+    h_idx = pl.program_id(1)
     p_idx = pl.program_id(2)
     length = len_ref[b_idx]
 
@@ -102,10 +121,17 @@ def _paged_decode_kernel(
         decode_common.chunk_relevant(page_start, page_size, length, window)
     )
     def _compute():
+        if quantized:
+            pid = pt_ref[b_idx, p_idx]
+            k_scale = ks_ref[h_idx, pid]
+            v_scale = vs_ref[h_idx, pid]
+        else:
+            k_scale = v_scale = None
         decode_common.accumulate_kv_block(
             q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
             scale=scale, softcap=softcap, window=window,
             block_start=page_start, block_len=page_size, length=length,
+            k_scale=k_scale, v_scale=v_scale,
         )
 
     @pl.when(p_idx == max_pages - 1)
@@ -116,17 +142,24 @@ def _paged_decode_kernel(
 
 def _paged_decode_split_kernel(
     pt_ref, len_ref,            # scalar-prefetch: (B, max_pages), (B,)
-    q_ref, k_ref, v_ref,
-    acc_out, m_out, l_out,
-    acc_ref, m_ref, l_ref,
-    *, scale, softcap, window, page_size, max_pages, pages_per_split,
+    *refs,                      # [ks, vs,] q, k, v, acc/m/l out, acc/m/l
+    scale, softcap, window, page_size, max_pages, pages_per_split,
+    quantized,
 ):
     """Stage one of paged split-K decode: one (b, hkv, split) cell walks
     its page range (domain-pure under the head-major pool) and emits raw
     ``(acc, m, l)``. Overhanging tail-split steps (non-divisible ranges:
     their DMA is clamped to the last table slot) are skipped by the range
     test and contribute the empty state."""
+    if quantized:
+        (ks_ref, vs_ref, q_ref, k_ref, v_ref,
+         acc_out, m_out, l_out, acc_ref, m_ref, l_ref) = refs
+    else:
+        (q_ref, k_ref, v_ref,
+         acc_out, m_out, l_out, acc_ref, m_ref, l_ref) = refs
+        ks_ref = vs_ref = None
     b_idx = pl.program_id(0)
+    h_idx = pl.program_id(1)
     s_idx = pl.program_id(2)
     j_idx = pl.program_id(3)
     length = len_ref[b_idx]
@@ -145,10 +178,17 @@ def _paged_decode_split_kernel(
 
     @pl.when(relevant)
     def _compute():
+        if quantized:
+            pid = pt_ref[b_idx, jnp.minimum(p_global, max_pages - 1)]
+            k_scale = ks_ref[h_idx, pid]
+            v_scale = vs_ref[h_idx, pid]
+        else:
+            k_scale = v_scale = None
         decode_common.accumulate_kv_block(
             q_ref, k_ref, v_ref, acc_ref, m_ref, l_ref,
             scale=scale, softcap=softcap, window=window,
             block_start=page_start, block_len=page_size, length=length,
+            k_scale=k_scale, v_scale=v_scale,
         )
 
     @pl.when(j_idx == pages_per_split - 1)
@@ -170,6 +210,8 @@ def paged_flash_decode(
     window: Optional[int] = None,
     num_splits: int = 1,
     interpret: bool = False,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """q: (B, Hq, D); k/v_pages: (Hkv, P, page_size, D) head-major;
     page_table: (B, max_pages) int32 physical page ids (entries past a
@@ -179,6 +221,12 @@ def paged_flash_decode(
     ``num_splits > 1`` runs the sequence-parallel (split-K) path over
     domain-aligned page ranges (clamped to the table width; 1 keeps the
     one-pass kernel).
+
+    ``k_scales`` / ``v_scales`` (``(Hkv, P)`` fp32, both or neither) mark
+    the pools as quantized codes (``cache.quant``): the scales prefetch
+    into SMEM next to the page table — metadata keyed by the *physical*
+    page id the table resolves — and the kernel bodies dequantize each
+    page in VMEM right before the matmuls.
     """
     b, hq, d = q.shape
     hkv, num_pages, page_size, _ = k_pages.shape
@@ -188,6 +236,9 @@ def paged_flash_decode(
         scale = 1.0 / d**0.5
     if page_size % 8:
         raise ValueError(f"page_size {page_size} must be a sublane multiple (8)")
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("k_scales and v_scales must be passed together")
+    quantized = k_scales is not None
 
     gp = max(8, -(-group // 8) * 8)  # pad GQA group to the sublane quantum
     qg = q.reshape(b, hkv, group, d)
@@ -201,26 +252,28 @@ def paged_flash_decode(
             qg, k_pages, v_pages, page_table, lengths, ranges,
             scale=scale, softcap=softcap, window=window,
             max_pages=max_pages, gp=gp, group=group, interpret=interpret,
-            out_dtype=q.dtype,
+            out_dtype=q.dtype, k_scales=k_scales, v_scales=v_scales,
         )
 
+    prefetch = [page_table.astype(jnp.int32), lengths.astype(jnp.int32)]
+    if quantized:
+        prefetch += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
     fn = pl.pallas_call(
         functools.partial(
             _paged_decode_kernel,
             scale=scale, softcap=softcap, window=window,
-            page_size=page_size, max_pages=max_pages,
+            page_size=page_size, max_pages=max_pages, quantized=quantized,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=len(prefetch),
             grid=(b, hkv, max_pages),
             in_specs=[
-                pl.BlockSpec((1, 1, gp, d), lambda b_, h_, p_, pt, ln: (b_, h_, 0, 0)),
+                pl.BlockSpec((1, 1, gp, d), _q_index_map),
                 pl.BlockSpec((1, 1, page_size, d), paged_kv_index_map),
                 pl.BlockSpec((1, 1, page_size, d), paged_kv_index_map),
             ],
-            out_specs=pl.BlockSpec(
-                (1, 1, gp, d), lambda b_, h_, p_, pt, ln: (b_, h_, 0, 0)
-            ),
+            out_specs=pl.BlockSpec((1, 1, gp, d), _q_index_map),
             scratch_shapes=[
                 pltpu.VMEM((gp, d), jnp.float32),
                 pltpu.VMEM((gp, 128), jnp.float32),
@@ -238,60 +291,54 @@ def paged_flash_decode(
         cost_estimate=pl.CostEstimate(
             flops=int(4.0 * b * hq * max_pages * page_size * d),
             bytes_accessed=int(
-                q.dtype.itemsize
-                * b * (2 * hkv * max_pages * page_size * d + 2 * hq * d)
+                b * (2 * k_pages.dtype.itemsize * hkv * max_pages
+                     * page_size * d + 2 * q.dtype.itemsize * hq * d)
             ),
             transcendentals=int(b * hq * max_pages * page_size),
         ),
         interpret=interpret,
         name="paged_flash_decode",
     )
-    out = fn(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
-             qg, k_pages, v_pages)
+    out = fn(*prefetch, qg, k_pages, v_pages)
     return out[:, :, :group, :].reshape(b, hq, d)
 
 
 def _paged_flash_decode_split(
     qg, k_pages, v_pages, page_table, lengths, ranges,
     *, scale, softcap, window, max_pages, gp, group, interpret, out_dtype,
+    k_scales=None, v_scales=None,
 ):
     b = qg.shape[0]
     hkv, _, page_size, d = k_pages.shape
     num_splits = len(ranges)
     pps = ranges[0][1] - ranges[0][0]  # pages per split (tail may be short)
+    quantized = k_scales is not None
 
     kv_index = split_kv_index_map(pps, max_pages)
+    prefetch = [page_table.astype(jnp.int32), lengths.astype(jnp.int32)]
+    if quantized:
+        prefetch += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
 
     fn = pl.pallas_call(
         functools.partial(
             _paged_decode_split_kernel,
             scale=scale, softcap=softcap, window=window,
             page_size=page_size, max_pages=max_pages, pages_per_split=pps,
+            quantized=quantized,
         ),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=len(prefetch),
             grid=(b, hkv, num_splits, pps),
             in_specs=[
-                pl.BlockSpec(
-                    (1, 1, gp, d),
-                    lambda b_, h_, s_, j_, pt, ln: (b_, h_, 0, 0),
-                ),
+                pl.BlockSpec((1, 1, gp, d), _split_q_index_map),
                 pl.BlockSpec((1, 1, page_size, d), kv_index),
                 pl.BlockSpec((1, 1, page_size, d), kv_index),
             ],
             out_specs=[
-                pl.BlockSpec(
-                    (1, 1, 1, gp, d),
-                    lambda b_, h_, s_, j_, pt, ln: (b_, h_, s_, 0, 0),
-                ),
-                pl.BlockSpec(
-                    (1, 1, 1, gp, 128),
-                    lambda b_, h_, s_, j_, pt, ln: (b_, h_, s_, 0, 0),
-                ),
-                pl.BlockSpec(
-                    (1, 1, 1, gp, 128),
-                    lambda b_, h_, s_, j_, pt, ln: (b_, h_, s_, 0, 0),
-                ),
+                pl.BlockSpec((1, 1, 1, gp, d), _split_out_index_map),
+                pl.BlockSpec((1, 1, 1, gp, 128), _split_out_index_map),
+                pl.BlockSpec((1, 1, 1, gp, 128), _split_out_index_map),
             ],
             scratch_shapes=[
                 pltpu.VMEM((gp, d), jnp.float32),
@@ -323,7 +370,6 @@ def _paged_flash_decode_split(
         interpret=interpret,
         name="paged_flash_decode_split",
     )
-    acc, m, l = fn(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
-                   qg, k_pages, v_pages)
+    acc, m, l = fn(*prefetch, qg, k_pages, v_pages)
     out = decode_common.combine_split_states(acc, m[..., :1], l[..., :1])
     return out[:, :, :group, :].reshape(b, hkv * group, d).astype(out_dtype)

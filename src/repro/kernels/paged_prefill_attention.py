@@ -57,7 +57,7 @@ def prefix_page_index_map(mp):
     Module-level so the domain-purity access tracer replays the exact
     function handed to ``pallas_call``."""
 
-    def page_idx(b_, h_, s_, pt, plen, tlen):
+    def page_idx(b_, h_, s_, pt, plen, tlen, *scales):
         return (h_, pt[b_, jnp.minimum(s_, mp - 1)], 0, 0)
 
     return page_idx
@@ -65,11 +65,19 @@ def prefix_page_index_map(mp):
 
 def _paged_prefill_kernel(
     pt_ref, plen_ref, tlen_ref,   # scalar-prefetch: (B, mp), (B,), (B,)
-    q_ref, kp_ref, vp_ref, kt_ref, vt_ref, o_ref,
-    acc_ref, m_ref, l_ref,
-    *, scale, softcap, window, page_size, num_prefix, num_tail, seq_tail,
+    *refs,                        # [ks, vs,] q, kp, vp, kt, vt, o, acc, m, l
+    scale, softcap, window, page_size, num_prefix, num_tail, seq_tail,
+    quantized,
 ):
+    if quantized:
+        (ks_ref, vs_ref, q_ref, kp_ref, vp_ref, kt_ref, vt_ref, o_ref,
+         acc_ref, m_ref, l_ref) = refs
+    else:
+        (q_ref, kp_ref, vp_ref, kt_ref, vt_ref, o_ref,
+         acc_ref, m_ref, l_ref) = refs
+        ks_ref = vs_ref = None
     b_idx = pl.program_id(0)
+    h_idx = pl.program_id(1)
     s_idx = pl.program_id(2)
     plen = plen_ref[b_idx]
     tlen = tlen_ref[b_idx]
@@ -124,6 +132,13 @@ def _paged_prefill_kernel(
     def _prefix():
         k = kp_ref[0, 0].astype(jnp.float32)     # (page_size, D)
         v = vp_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # The prefix pages are quantized codes; their per-(head, page)
+            # scales prefetched next to the page table dequantize them
+            # here, in VMEM. The dense tail (phase B) is fresh fp32.
+            pid = pt_ref[b_idx, jnp.minimum(s_idx, num_prefix - 1)]
+            k = k * ks_ref[h_idx, pid]
+            v = v * vs_ref[h_idx, pid]
         col = s_idx * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (1, page_size), 1
         )
@@ -172,6 +187,8 @@ def paged_flash_prefill(
     scale: Optional[float] = None,
     window: Optional[int] = None,
     interpret: bool = False,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Prefix-extension prefill over paged prefix K/V + dense tail K/V.
 
@@ -183,6 +200,13 @@ def paged_flash_prefill(
     prefix_len: (B,) live prefix tokens (<= max_prefix_pages * page_size,
     need not be a page multiple); tail_len: (B,) live tail tokens (rows
     past it emit zeros). Returns (B, Hq, St, D).
+
+    ``k_scales`` / ``v_scales`` (``(Hkv, P)`` fp32, both or neither):
+    quantized-pool mode — the prefix pages hold 1-byte codes and their
+    scales prefetch into SMEM next to the page table; the kernel
+    dequantizes each prefix page in VMEM. The dense tail K/V stays fp32
+    either way (it was just projected; quantization happens when the
+    engine scatters it into pages).
     """
     b, hq, st, d = q.shape
     hkv, _, page_size, _ = k_pages.shape
@@ -221,37 +245,48 @@ def paged_flash_prefill(
     rows = group * st_p
     qg = q.reshape(b, hkv, rows, d)
 
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("k_scales and v_scales must be passed together")
+    quantized = k_scales is not None
+
     grid = (b, hkv, mp + num_tail)
     kernel = functools.partial(
         _paged_prefill_kernel,
         scale=scale, softcap=softcap, window=window,
         page_size=page_size, num_prefix=mp, num_tail=num_tail, seq_tail=st_p,
+        quantized=quantized,
     )
 
     page_idx = prefix_page_index_map(mp)
 
-    def tail_idx(b_, h_, s_, pt, plen, tlen):
+    def tail_idx(b_, h_, s_, pt, plen, tlen, *scales):
         return (b_, h_, jnp.clip(s_ - mp, 0, num_tail - 1), 0)
+
+    def q_idx(b_, h_, s_, pt, plen, tlen, *scales):
+        return (b_, h_, 0, 0)
+
+    prefetch = [
+        page_table.astype(jnp.int32),
+        prefix_len.astype(jnp.int32),
+        tail_len.astype(jnp.int32),
+    ]
+    if quantized:
+        prefetch += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
 
     fn = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
+            num_scalar_prefetch=len(prefetch),
             grid=grid,
             in_specs=[
-                pl.BlockSpec(
-                    (1, 1, rows, d),
-                    lambda b_, h_, s_, pt, plen, tlen: (b_, h_, 0, 0),
-                ),
+                pl.BlockSpec((1, 1, rows, d), q_idx),
                 pl.BlockSpec((1, 1, page_size, d), page_idx),
                 pl.BlockSpec((1, 1, page_size, d), page_idx),
                 pl.BlockSpec((1, 1, page_size, d), tail_idx),
                 pl.BlockSpec((1, 1, page_size, d), tail_idx),
             ],
-            out_specs=pl.BlockSpec(
-                (1, 1, rows, d),
-                lambda b_, h_, s_, pt, plen, tlen: (b_, h_, 0, 0),
-            ),
+            out_specs=pl.BlockSpec((1, 1, rows, d), q_idx),
             scratch_shapes=[
                 pltpu.VMEM((rows, d), jnp.float32),
                 pltpu.VMEM((rows, 128), jnp.float32),
@@ -278,10 +313,5 @@ def paged_flash_prefill(
         interpret=interpret,
         name="paged_flash_prefill",
     )
-    out = fn(
-        page_table.astype(jnp.int32),
-        prefix_len.astype(jnp.int32),
-        tail_len.astype(jnp.int32),
-        qg, k_pages, v_pages, k_tail, v_tail,
-    )
+    out = fn(*prefetch, qg, k_pages, v_pages, k_tail, v_tail)
     return out.reshape(b, hq, st_p, d)[:, :, :st]

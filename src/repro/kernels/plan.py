@@ -107,6 +107,10 @@ class AttentionPlan:
     placement: Optional[str] = None     # paged: head_aligned | interleaved
     num_splits: int = 1            # DECODE: split-K ranges (occupancy model)
     num_devices: int = 1           # mesh width the plan was scored for
+    #: Paged pools' storage format (``cache.quant``): "fp32" | "int8" |
+    #: "fp8". Quantized plans expect per-page scales next to the page
+    #: table at call time; dense layouts are always fp32.
+    kv_dtype: str = "fp32"
     #: DECODE on a mesh: True when the joint (domain, device) model kept
     #: split-K ranges device-pure (head-sharded pool, every range local to
     #: its owner's HBM); False when striping the pool across devices won
@@ -455,6 +459,7 @@ def _plan_cached(
     vmem_budget_bytes: int,
     num_devices: int,
     device_link_bw: Optional[float],
+    kv_dtype: str,
 ) -> AttentionPlan:
     if mapping_name != "auto":
         mapping = PAPER_MAPPINGS[mapping_name]  # KeyError = fail fast
@@ -539,6 +544,7 @@ def _plan_cached(
         num_splits=num_splits,
         num_devices=num_devices,
         split_device_pure=split_device_pure,
+        kv_dtype=kv_dtype,
     )
 
 
@@ -558,6 +564,7 @@ def plan_attention(
     vmem_budget_bytes: int = MappingConfig.vmem_budget_bytes,
     num_devices: int = 1,
     device_link_bw: Optional[float] = None,
+    kv_dtype: str = "fp32",
 ) -> AttentionPlan:
     """Resolve the best :class:`AttentionPlan` for an attention shape.
 
@@ -589,6 +596,18 @@ def plan_attention(
         raise ValueError(f"unknown kv layout {kv_layout!r}")
     if kv_layout == PAGED and page_size is None:
         raise ValueError("paged plans require page_size")
+    from repro.cache import quant as quant_lib
+
+    quant_lib.validate_kv_dtype(kv_dtype)
+    if kv_dtype != "fp32" and kv_layout != PAGED:
+        raise ValueError(
+            f"kv_dtype={kv_dtype!r} requires the paged KV layout "
+            "(dense stripes are always fp32)"
+        )
+    if kv_dtype != "fp32":
+        # Quantized pools stream 1-byte codes: the traffic/occupancy models
+        # score the bytes that actually move.
+        dtype_bytes = quant_lib.kv_itemsize(kv_dtype)
     b, hq, hkv, sq, skv, d = (int(x) for x in shape)
     backend = backend or compat.default_backend()
     if interpret is None:
@@ -604,6 +623,7 @@ def plan_attention(
         int(vmem_budget_bytes),
         int(num_devices),
         float(device_link_bw) if device_link_bw is not None else None,
+        kv_dtype,
     )
 
 
@@ -671,6 +691,7 @@ def plan_for_config(
     interpret: Optional[bool] = None,
     num_devices: int = 1,
     device_link_bw: Optional[float] = None,
+    kv_dtype: str = "fp32",
 ) -> AttentionPlan:
     """:func:`plan_attention` with the schedule/impl policy read from a
     ``ModelConfig``. Models, engines and benchmarks call this instead of
@@ -693,6 +714,7 @@ def plan_for_config(
         impl=getattr(cfg, "attn_impl", "auto"),
         num_devices=num_devices,
         device_link_bw=device_link_bw,
+        kv_dtype=kv_dtype,
     )
 
 

@@ -226,15 +226,27 @@ def split_decode_attention(
     return o.astype(q.dtype)
 
 
-def gather_pages(pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
-    """Materialize a dense cache view from head-major pages.
+def gather_pages(
+    pages: jnp.ndarray,
+    page_table: jnp.ndarray,
+    scales: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Materialize a dense fp32 cache view from head-major pages.
 
     pages: (Hkv, P, page_size, D); page_table: (B, max_pages) physical ids.
     Returns (B, Hkv, max_pages * page_size, D) — logical order per sequence.
+
+    ``scales`` (``(Hkv, P)`` fp32) marks the pool as quantized codes
+    (``cache.quant``): each gathered page is dequantized by its
+    per-(head, page) scale — the oracle form of the kernels' in-VMEM
+    dequant, keyed by the same physical page ids.
     """
     hkv, _, ps, d = pages.shape
     b, mp = page_table.shape
     g = jnp.take(pages, page_table.reshape(-1), axis=1)  # (Hkv, B*mp, ps, D)
+    if scales is not None:
+        s = jnp.take(scales, page_table.reshape(-1), axis=1)  # (Hkv, B*mp)
+        g = g.astype(jnp.float32) * s[..., None, None]
     return g.reshape(hkv, b, mp * ps, d).transpose(1, 0, 2, 3)
 
 
@@ -251,6 +263,8 @@ def paged_prefill_attention(
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
     window: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
     """Prefix-extension prefill oracle: gather the prefix pages to a dense
     view (exactly what the paged prefill kernel avoids), concatenate the
@@ -258,13 +272,19 @@ def paged_prefill_attention(
 
     q/k_tail/v_tail: (B, H*, St, D); k/v_pages: (Hkv, P, ps, D);
     page_table: (B, mp); prefix_len/tail_len: (B,) live prefix/tail tokens.
-    Rows at or past ``tail_len`` emit exact zeros. Returns (B, Hq, St, D).
+    Rows at or past ``tail_len`` emit exact zeros. ``k_scales``/
+    ``v_scales`` dequantize quantized pools (see :func:`gather_pages`).
+    Returns (B, Hq, St, D).
     """
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("k_scales and v_scales must be passed together")
     b, hq, st, d = q.shape
     hkv = k_pages.shape[0]
     group = hq // hkv
-    kp = gather_pages(k_pages, page_table)        # (B, Hkv, sp, D)
-    vp = gather_pages(v_pages, page_table)
+    kp = gather_pages(k_pages, page_table, k_scales)  # (B, Hkv, sp, D)
+    vp = gather_pages(v_pages, page_table, v_scales)
+    kp = kp.astype(k_tail.dtype)
+    vp = vp.astype(v_tail.dtype)
     sp = kp.shape[2]
     k = _expand_kv(jnp.concatenate([kp, k_tail], axis=2), group)
     v = _expand_kv(jnp.concatenate([vp, v_tail], axis=2), group)
@@ -317,11 +337,16 @@ def paged_decode_attention(
     softcap: Optional[float] = None,
     scale: Optional[float] = None,
     window: Optional[int] = None,
+    k_scales: Optional[jnp.ndarray] = None,
+    v_scales: Optional[jnp.ndarray] = None,
 ) -> jnp.ndarray:
-    """Paged decode oracle: gather pages to a dense cache, then the dense
+    """Paged decode oracle: gather pages to a dense cache (dequantizing
+    quantized pools by their per-(head, page) scales), then the dense
     oracle. The gather is exactly what the paged Pallas kernel avoids."""
-    k = gather_pages(k_pages, page_table)
-    v = gather_pages(v_pages, page_table)
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("k_scales and v_scales must be passed together")
+    k = gather_pages(k_pages, page_table, k_scales)
+    v = gather_pages(v_pages, page_table, v_scales)
     return decode_attention(
         q, k, v, lengths, softcap=softcap, scale=scale, window=window
     )

@@ -149,7 +149,8 @@ def _per_device_accounting(engine, cfg, done, peak_pages: int):
     }
     pool = getattr(b, "pool", None)
     if pool is not None:
-        slice_bytes = b._page_slice_bytes(cfg, b.page_size, num_devices)
+        slice_bytes = b._page_slice_bytes(
+            cfg, b.page_size, num_devices, b.kv_dtype)
         out.update({
             "page_slice_bytes": slice_bytes,
             "pool_pages": pool.num_pages,
@@ -222,6 +223,8 @@ def run_one(args, kv_layout: str, *, cfg=None) -> Dict:
     steps = getattr(args, "steps_per_sync", 1)
     if steps != "auto":
         steps = int(steps)
+    kv_dtype = getattr(args, "kv_dtype", "fp32") or "fp32"
+    host_pool = int(getattr(args, "host_pool_bytes", 0) or 0)
     params = transformer.init_model(jax.random.PRNGKey(args.seed), cfg)
     telemetry = Telemetry.create()
     engine = LLMEngine(
@@ -235,6 +238,8 @@ def run_one(args, kv_layout: str, *, cfg=None) -> Dict:
         telemetry=telemetry,
         mesh=mesh_n if mesh_n > 1 else None,
         steps_per_sync=steps,
+        kv_dtype=kv_dtype,
+        host_pool_bytes=host_pool or None,
     )
     rng = np.random.default_rng(args.seed)
     workload = build_workload(
@@ -322,6 +327,10 @@ def run_one(args, kv_layout: str, *, cfg=None) -> Dict:
     stem = f"loadgen_{engine.kv_layout}" + (f"_n{n}" if n > 1 else "")
     if engine.backend.num_devices > 1:
         stem += f"_d{engine.backend.num_devices}"
+    if host_pool:
+        # Tiered runs get their own artifact: the demote/promote counters
+        # in payload["prefix"] are the demonstration CI reads.
+        stem = "loadgen_tiered"
     json_path = write_json_artifact(
         stem, payload,
         metrics=telemetry.metrics,
@@ -513,6 +522,18 @@ def main(argv=None):
                     help="mesh sweep: decode rows per device "
                          "(max_batch = devices * this; default "
                          "--max-batch)")
+    ap.add_argument("--kv-dtype", choices=("fp32", "int8", "fp8"),
+                    default="fp32",
+                    help="paged pool storage dtype (quantized codes + "
+                         "per-page-per-head scales for int8/fp8)")
+    ap.add_argument("--host-pool-bytes", type=int, default=0,
+                    help="host-DRAM KV tier budget (0 = off); a tiered "
+                         "run writes loadgen_tiered.json")
+    ap.add_argument("--smoke-tiered", action="store_true",
+                    help="CI: one paged run with a device pool too small "
+                         "for the workload plus a host tier; asserts "
+                         "demotions > 0 with zero preemptions and a "
+                         "leak-free close")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out-dir", default=None,
                     help="artifact directory (default "
@@ -521,6 +542,26 @@ def main(argv=None):
 
     if args.mesh_sweep:
         run_sharded_sweep(args)
+        return
+
+    if args.smoke_tiered:
+        # Tiered acceptance: the device pool is (deliberately) too small
+        # for the workload's working set, the host tier takes the spill.
+        # The run must finish everything, demote real pages, and reclaim
+        # capacity through demotion INSTEAD of preemption — then prove
+        # the pool drained leak-free (run_one's engine.close()).
+        if not args.host_pool_bytes:
+            args.host_pool_bytes = 1 << 20
+        payload = run_one(args, "paged")
+        _smoke_check(payload)
+        pf = payload["prefix"]
+        assert pf["demoted_pages"] > 0, pf
+        assert payload["preemptions"] == 0, (
+            "capacity pressure should resolve by demotion, not preemption",
+            payload["preemptions"])
+        print(f"[loadgen] tiered smoke OK: {int(pf['demoted_pages'])} "
+              f"demoted / {int(pf['promoted_pages'])} promoted, "
+              f"0 preemptions, leak-free close")
         return
 
     if args.smoke:

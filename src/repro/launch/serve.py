@@ -13,6 +13,8 @@ Examples:
       --temperature 0.8 --top-k 40 --top-p 0.95
   python -m repro.launch.serve --arch llama3-8b --smoke --mesh 4 \
       --steps-per-sync auto
+  python -m repro.launch.serve --arch llama3-8b --smoke --kv-dtype int8 \
+      --host-pool-bytes 1048576
 """
 
 from __future__ import annotations
@@ -57,6 +59,14 @@ def main(argv=None):
                     help="fused decode ticks per host sync: an int, or "
                          "'auto' to let the scheduler pick from the live "
                          "batch's modeled tick time")
+    ap.add_argument("--kv-dtype", choices=("fp32", "int8", "fp8"),
+                    default="fp32",
+                    help="paged pool storage dtype; int8/fp8 store "
+                         "quantized codes + per-page-per-head scales")
+    ap.add_argument("--host-pool-bytes", type=int, default=0,
+                    help="host-DRAM KV tier budget in bytes (0 = off): "
+                         "cold pages demote host-side under pool "
+                         "pressure and promote back on prefix match")
     args = ap.parse_args(argv)
 
     cfg = (registry.get_smoke_config if args.smoke else registry.get_config)(args.arch)
@@ -84,6 +94,8 @@ def main(argv=None):
         prompt_buckets=(args.prompt_len, 2 * args.prompt_len),
         mesh=args.mesh if args.mesh > 1 else None,
         steps_per_sync=steps,
+        kv_dtype=args.kv_dtype,
+        host_pool_bytes=args.host_pool_bytes or None,
     )
     print(f"kv_layout={engine.kv_layout} (requested {args.kv_layout}) "
           f"devices={engine.backend.num_devices}")

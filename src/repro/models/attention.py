@@ -19,6 +19,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.cache import quant as quant_lib
 from repro.configs.base import LayerSpec, ModelConfig
 from repro.kernels import ops
 from repro.kernels import plan as plan_lib
@@ -43,12 +44,14 @@ def init_attention(key, cfg: ModelConfig) -> dict:
 
 
 def _plan(cfg: ModelConfig, shape, *, phase, window=None, kv_layout=plan_lib.DENSE,
-          page_size=None, prefix_pages=0, dtype_bytes=None) -> plan_lib.AttentionPlan:
+          page_size=None, prefix_pages=0, dtype_bytes=None,
+          kv_dtype="fp32") -> plan_lib.AttentionPlan:
     """The layer's attention plan: schedule + impl for this call shape,
     resolved (and LRU-cached) by the plan layer from the config policy."""
     return plan_lib.plan_for_config(
         cfg, shape, phase=phase, window=window, kv_layout=kv_layout,
         page_size=page_size, prefix_pages=prefix_pages, dtype_bytes=dtype_bytes,
+        kv_dtype=kv_dtype,
     )
 
 
@@ -175,6 +178,7 @@ def attention_prefill_paged(
     b, s, d = x.shape
     q, k, v = _project_qkv(params, x, cfg, positions, spec.rope_theta)
     k_pages, v_pages = cache["k_pages"], cache["v_pages"]
+    kv_dtype = quant_lib.kv_dtype_of(k_pages.dtype)
     if plan is None:
         plan = _plan(
             cfg,
@@ -183,10 +187,12 @@ def attention_prefill_paged(
             phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
             page_size=k_pages.shape[2], prefix_pages=page_table.shape[1],
             window=spec.window, dtype_bytes=q.dtype.itemsize,
+            kv_dtype=kv_dtype,
         )
     o = ops.paged_prefill_attention(
         q, k_pages, v_pages, page_table, k, v, prefix_len, tail_len,
         softcap=cfg.attn_softcap, window=spec.window, plan=plan,
+        k_scales=cache.get("k_scales"), v_scales=cache.get("v_scales"),
     )
     o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.head_dim)
     pad = cache_len - k.shape[2]
@@ -271,26 +277,35 @@ def attention_decode_paged(
     idx = jnp.maximum(lengths - 1, 0)
     pids = jnp.take_along_axis(page_table, (idx // ps)[:, None], axis=1)[:, 0]
     offs = idx % ps
+    kv_dtype = quant_lib.kv_dtype_of(k_pages.dtype)
     # (B, Hkv, 1, hd) -> (Hkv, B, hd); scatter one row per (head, sequence).
-    k_pages = k_pages.at[:, pids, offs].set(
-        k_new[:, :, 0].transpose(1, 0, 2).astype(k_pages.dtype)
+    # Quantized pools append through the rescale-on-append path (the page's
+    # codes shrink when a louder token widens its scale); fp32 degenerates
+    # to the plain scatter with scales passed through as None.
+    k_pages, ksc = quant_lib.append_rows(
+        k_pages, cache.get("k_scales"), k_new[:, :, 0].transpose(1, 0, 2),
+        pids, offs, kv_dtype,
     )
-    v_pages = v_pages.at[:, pids, offs].set(
-        v_new[:, :, 0].transpose(1, 0, 2).astype(v_pages.dtype)
+    v_pages, vsc = quant_lib.append_rows(
+        v_pages, cache.get("v_scales"), v_new[:, :, 0].transpose(1, 0, 2),
+        pids, offs, kv_dtype,
     )
     plan = _plan(
         cfg, (b, h, hkv, 1, page_table.shape[1] * ps, hd),
         phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED, page_size=ps,
-        window=spec.window, dtype_bytes=q.dtype.itemsize,
+        window=spec.window, dtype_bytes=q.dtype.itemsize, kv_dtype=kv_dtype,
     )
     o = ops.paged_decode_attention(
         q[:, :, 0], k_pages, v_pages, page_table, lengths,
         softcap=cfg.attn_softcap, window=spec.window, plan=plan,
+        k_scales=ksc, v_scales=vsc,
     )
     o = o.reshape(b, 1, h * hd)
-    return o @ params["wo_md"].astype(x.dtype), {
-        "k_pages": k_pages, "v_pages": v_pages,
-    }
+    cache_out = {"k_pages": k_pages, "v_pages": v_pages}
+    if ksc is not None:
+        cache_out["k_scales"] = ksc
+        cache_out["v_scales"] = vsc
+    return o @ params["wo_md"].astype(x.dtype), cache_out
 
 
 def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
@@ -301,11 +316,26 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype) -> dict:
     }
 
 
-def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int, dtype) -> dict:
+def init_paged_cache(cfg: ModelConfig, num_pages: int, page_size: int, dtype,
+                     kv_dtype: str = "fp32") -> dict:
     """Head-major page pool for one layer: all pages of a KV head are
-    contiguous (``cache.layout.HEAD_ALIGNED`` placement by construction)."""
+    contiguous (``cache.layout.HEAD_ALIGNED`` placement by construction).
+
+    ``kv_dtype`` != "fp32" stores 1-byte codes (``cache.quant``) plus one
+    fp32 scale per (kv head, physical page) for K and V each — the scale
+    arrays are page-table metadata and ride next to it into the kernels.
+    """
     hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    quant_lib.validate_kv_dtype(kv_dtype)
+    if kv_dtype == "fp32":
+        return {
+            "k_pages": jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+            "v_pages": jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+        }
+    sdt = quant_lib.storage_dtype(kv_dtype)
     return {
-        "k_pages": jnp.zeros((hkv, num_pages, page_size, hd), dtype),
-        "v_pages": jnp.zeros((hkv, num_pages, page_size, hd), dtype),
+        "k_pages": jnp.zeros((hkv, num_pages, page_size, hd), sdt),
+        "v_pages": jnp.zeros((hkv, num_pages, page_size, hd), sdt),
+        "k_scales": jnp.zeros((hkv, num_pages), jnp.float32),
+        "v_scales": jnp.zeros((hkv, num_pages), jnp.float32),
     }

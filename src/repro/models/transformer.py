@@ -488,12 +488,15 @@ def init_caches(params: Params, cfg: ModelConfig, batch: int, cache_len: int,
 
 
 def init_paged_caches(
-    params: Params, cfg: ModelConfig, num_pages: int, page_size: int
+    params: Params, cfg: ModelConfig, num_pages: int, page_size: int,
+    kv_dtype: str = "fp32",
 ) -> Params:
     """Paged zero caches: one head-major page pool per attention layer, all
     indexed by the same physical page ids (one allocator drives every
     layer, vLLM-style). Only pure-attention stacks support paging — SSM
-    state and cross-attention K/V are not page-structured."""
+    state and cross-attention K/V are not page-structured. ``kv_dtype``
+    selects the pool storage format (``cache.quant``): quantized pools
+    carry per-(head, page) scale arrays next to the code pools."""
     dt = jnp.dtype(cfg.compute_dtype)
     pattern, rem = cfg.pattern_for_depth()
     for spec in list(pattern) + list(rem):
@@ -504,7 +507,9 @@ def init_paged_caches(
             )
 
     def one(_spec: LayerSpec):
-        return {"attn": attn_lib.init_paged_cache(cfg, num_pages, page_size, dt)}
+        return {"attn": attn_lib.init_paged_cache(
+            cfg, num_pages, page_size, dt, kv_dtype=kv_dtype
+        )}
 
     scanned = tuple(
         jax.tree.map(

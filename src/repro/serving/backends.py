@@ -8,8 +8,10 @@ layouts — cache plumbing — behind one protocol the scheduler and the
 
   * ``try_admit(req, resume_tokens, pending_hashes)`` reserves a decode
     row (and, paged, its pages) and returns an admission record — or
-    ``None`` (does not fit) / ``scheduler.DEFERRED`` (its prefix is one
-    flush away from being shareable);
+    ``None`` (does not fit). A request whose prefix is being prefilled
+    by a record admitted earlier in the *same* round shares those
+    in-flight pages block-level (``flush`` orders the launches so the
+    borrower's extend reads published content);
   * ``flush(records)`` runs the reserved prefills — one launch per shared
     jit key with the admitted rows stacked on the batch axis — and
     returns each row's last-position logits (sampling is the engine's
@@ -50,12 +52,14 @@ from repro.cache.pool import (
     SequencePages,
     SequenceReleasedError,
 )
+from repro.cache import quant
 from repro.cache.prefix import PrefixCache, page_hashes
+from repro.cache.tier import HostPageStore
 from repro.configs.base import ModelConfig
 from repro.kernels import plan as plan_lib
 from repro.models import transformer
 from repro.serving import sampling as sampling_lib
-from repro.serving.scheduler import DEFERRED, default_choose_victim
+from repro.serving.scheduler import default_choose_victim
 
 
 class _SeqState:
@@ -558,9 +562,12 @@ class PagedBackend(_Backend):
         batch_prefills: bool = True,
         mesh=None,
         device_hbm_bytes=None,
+        kv_dtype: str = "fp32",
+        host_pool_bytes=None,
     ):
         if cfg.num_codebooks != 1:
             raise ValueError("paged backend supports single-codebook models")
+        self.kv_dtype = quant.validate_kv_dtype(kv_dtype)
         num_devices = self._check_head_shards(cfg, mesh)
         # Per-device page budgets: each device holds a (Hkv/D)-head slice
         # of every page, so a byte budget translates to a per-device page
@@ -579,7 +586,9 @@ class PagedBackend(_Backend):
                     f"device_hbm_bytes has {len(budgets)} entries for "
                     f"{num_devices} devices"
                 )
-            slice_bytes = self._page_slice_bytes(cfg, page_size, num_devices)
+            slice_bytes = self._page_slice_bytes(
+                cfg, page_size, num_devices, kv_dtype
+            )
             caps = tuple(int(b // slice_bytes) for b in budgets)
             clamp = min(caps)
             if clamp < 1 + max_pages_per_seq:
@@ -620,8 +629,31 @@ class PagedBackend(_Backend):
 
         self.pool = PagePool(num_pages, page_size)
         self.prefix = PrefixCache(self.pool)
+        # Host tier: an LRU store of demoted pages behind the device pool,
+        # keyed by the same chain hashes the prefix cache uses — so it is
+        # only reachable with prefix sharing on (the hash chain IS the
+        # promotion key; without it nothing ever demotes).
+        self.host: Optional[HostPageStore] = None
+        if host_pool_bytes:
+            if not prefix_sharing:
+                raise ValueError(
+                    "host_pool_bytes requires prefix_sharing=True: demoted "
+                    "pages are keyed by the prefix hash chain"
+                )
+            self.host = HostPageStore(
+                int(host_pool_bytes),
+                self._page_slice_bytes(cfg, page_size, 1, kv_dtype),
+            )
+        self.stats.update({
+            "demoted_pages": 0, "promoted_pages": 0,
+            "inflight_pages_reused": 0,
+        })
+        #: Same-flush block-level sharing: chain hash -> (physical page,
+        #: publishing request uid) for pages admitted-but-not-yet-flushed
+        #: this round. Cleared by :meth:`flush` once everything published.
+        self._pending_pages: Dict[bytes, Tuple[int, int]] = {}
         self.caches = transformer.init_paged_caches(
-            params, cfg, num_pages, page_size
+            params, cfg, num_pages, page_size, kv_dtype=kv_dtype
         )
         specs = None
         if mesh is not None:
@@ -652,19 +684,51 @@ class PagedBackend(_Backend):
                 self._copy_page(caches, src, dst)
             )
         )
+        self._restore_jit = jax.jit(
+            lambda caches, payload, dst: constrain(
+                self._restore_page(caches, payload, dst)
+            )
+        )
 
     # -- capacity ----------------------------------------------------------
 
     @staticmethod
     def _page_slice_bytes(cfg: ModelConfig, page_size: int,
-                          num_devices: int) -> int:
+                          num_devices: int, kv_dtype: str = "fp32") -> int:
         """Bytes one physical page occupies in ONE device's HBM: the
         (Hkv / D)-head K+V slice of that page, summed over every layer
-        (one pool per attention layer, all driven by the same ids)."""
+        (one pool per attention layer, all driven by the same ids).
+        Quantized pools store 1-byte codes plus one fp32 scale per
+        (kv head, page) for K and V each."""
         heads_dev = -(-cfg.n_kv_heads // max(num_devices, 1))
-        itemsize = jnp.dtype(cfg.compute_dtype).itemsize
-        return 2 * cfg.n_layers * heads_dev * page_size \
-            * cfg.head_dim * itemsize
+        if kv_dtype in quant.QMAX:
+            per_head = page_size * cfg.head_dim * quant.kv_itemsize(kv_dtype) + 4
+        else:
+            per_head = (
+                page_size * cfg.head_dim
+                * jnp.dtype(cfg.compute_dtype).itemsize
+            )
+        return 2 * cfg.n_layers * heads_dev * per_head
+
+    def kv_pool_bytes(self) -> int:
+        """Total device bytes the paged pools (+ scale metadata) occupy
+        across the mesh — the capacity headline the kv_dtype knob shrinks
+        (int8 lands at ~0.25x the fp32 pool)."""
+        return (
+            self._page_slice_bytes(
+                self.cfg, self.page_size, self.num_devices, self.kv_dtype
+            )
+            * self.pool.num_pages * self.num_devices
+        )
+
+    @property
+    def _kv_dtype_bytes(self) -> int:
+        """Per-element pool bytes the perf models should price: the code
+        width for quantized pools (HBM traffic shrinks with storage —
+        dequant happens in VMEM), the compute itemsize otherwise."""
+        if self.kv_dtype in quant.QMAX:
+            return quant.kv_itemsize(self.kv_dtype)
+        return jnp.dtype(self.cfg.compute_dtype).itemsize
 
     def device_page_budgets(self) -> Optional[Dict[str, object]]:
         """Per-device page capacities under ``device_hbm_bytes`` (None
@@ -702,17 +766,26 @@ class PagedBackend(_Backend):
 
     def quote(self, req) -> Tuple[int, int]:
         """Page-budget quote for the scheduler: (total pages the prompt
-        needs, prefix-cache pages it would reuse). A pure peek — nothing
-        is reserved, LRU order and hit-rate counters stay untouched (the
-        scheduler may price a blocked request every round)."""
+        needs, shared pages it would reuse *without allocating*). A pure
+        peek — nothing is reserved, LRU order and hit-rate counters stay
+        untouched (the scheduler may price a blocked request every
+        round). Reuse counts device prefix-cache matches plus the
+        in-flight continuation (pages a record admitted this round will
+        publish at flush — the borrower increfs rather than allocates).
+        Host-tier matches are deliberately **excluded**: a promoted page
+        still consumes a fresh device page, so for the page budget it is
+        indistinguishable from a prefill — only
+        :meth:`prefill_time_saved` prices the recompute it avoids."""
         n = len(req.prompt)
         total = self.pool.pages_needed(n)
         matched = 0
         if self.prefix_sharing and n > 1:
+            limit = (n - 1) // self.page_size
             hashes = req.page_hashes(self.page_size)
-            matched = len(self.prefix.lookup(
-                hashes[: (n - 1) // self.page_size], touch=False
-            ))
+            matched = len(self.prefix.lookup(hashes[:limit], touch=False))
+            while (matched < limit
+                   and hashes[matched] in self._pending_pages):
+                matched += 1
         return total, matched
 
     @property
@@ -743,7 +816,7 @@ class PagedBackend(_Backend):
             mean_len=(max(int(mean_len), self.page_size) if mean_len
                       else max(self.cache_len // 2, self.page_size)),
             page_size=self.page_size, head_dim=self.cfg.head_dim,
-            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
+            dtype_bytes=self._kv_dtype_bytes,
         )
         chip = plan_lib._topology_for(compat.default_backend())
         if self.num_devices > 1:
@@ -753,22 +826,35 @@ class PagedBackend(_Backend):
         return perf_model.estimate_paged_decode(topo=chip, **kw).time
 
     def prefill_time_saved(self, req) -> float:
-        """Modeled prefill seconds a prefix-cache hit would save this
-        request if admitted *now* — the scheduler's cost-aware tie-break
-        within a priority class. Priced as (full prefill) minus (extend
-        over the matched paged prefix), both via
-        :func:`core.perf_model.estimate_extend_prefill`; zero when the
-        prefix cache matches nothing."""
+        """Modeled prefill seconds cache reuse would save this request if
+        admitted *now* — the scheduler's cost-aware tie-break within a
+        priority class. Priced as (full prefill) minus (extend over the
+        matched prefix), both via
+        :func:`core.perf_model.estimate_extend_prefill`; a host-tier
+        continuation of the match adds its saved recompute **minus** the
+        device<->host transfer (:func:`core.perf_model.
+        estimate_tier_transfer`) — promotion is only credited where the
+        link beats the FLOPs, which is exactly the demote-vs-recompute
+        call the tier exists to win. Zero when nothing matches."""
         from repro import compat
         from repro.core import perf_model
 
         _, matched = self.quote(req)
-        if matched <= 0:
-            return 0.0
         n = len(req.prompt)
+        limit = (n - 1) // self.page_size
+        host_run = 0
+        if self.host is not None and matched < limit:
+            hashes = req.page_hashes(self.page_size)
+            for h in hashes[matched:limit]:
+                if h not in self.host:
+                    break
+                host_run += 1
+        if matched <= 0 and host_run <= 0:
+            return 0.0
         prefix = min(matched * self.page_size, n - 1)
+        both = min((matched + host_run) * self.page_size, n - 1)
         topo = plan_lib._topology_for(compat.default_backend())
-        dtype_bytes = jnp.dtype(self.cfg.compute_dtype).itemsize
+        dtype_bytes = self._kv_dtype_bytes
 
         def _t(prefix_len: int) -> float:
             return perf_model.estimate_extend_prefill(
@@ -779,7 +865,13 @@ class PagedBackend(_Backend):
                 dtype_bytes=dtype_bytes, topo=topo,
             ).time
 
-        return max(_t(0) - _t(prefix), 0.0)
+        saved = max(_t(0) - _t(prefix), 0.0)
+        if host_run > 0:
+            transfer = perf_model.estimate_tier_transfer(
+                host_run * self.host.page_nbytes
+            )
+            saved += max(_t(prefix) - _t(both) - transfer, 0.0)
+        return saved
 
     # -- jitted cache plumbing ---------------------------------------------
 
@@ -791,11 +883,15 @@ class PagedBackend(_Backend):
         sequence in the (possibly batched) prefill; entries past a tail's
         real pages are the null page (their writes are garbage sinks by
         design — with several rows the null page takes whichever write
-        lands last, all equally garbage).
+        lands last, all equally garbage). Quantized pools store per-page
+        codes and set the destinations' scale entries in the same jitted
+        program (``cache.quant.scatter_pages``); the pages axis is third
+        from the end for both the flat and the scanned stacks, so one
+        reshape serves both.
         """
         flat = pids.reshape(-1)
 
-        def s(pages, dense, scanned):
+        def s(pages, scales, dense, scanned, kv_dtype):
             if scanned:
                 npp, rows, hkv, bucket, hd = dense.shape
                 ps = pages.shape[3]
@@ -803,20 +899,27 @@ class PagedBackend(_Backend):
                 new = new.transpose(0, 2, 1, 3, 4, 5).reshape(
                     npp, hkv, rows * (bucket // ps), ps, hd
                 )
-                return pages.at[:, :, flat].set(new.astype(pages.dtype))
-            rows, hkv, bucket, hd = dense.shape
-            ps = pages.shape[2]
-            new = dense.reshape(rows, hkv, bucket // ps, ps, hd)
-            new = new.transpose(1, 0, 2, 3, 4).reshape(
-                hkv, rows * (bucket // ps), ps, hd
-            )
-            return pages.at[:, flat].set(new.astype(pages.dtype))
+            else:
+                rows, hkv, bucket, hd = dense.shape
+                ps = pages.shape[2]
+                new = dense.reshape(rows, hkv, bucket // ps, ps, hd)
+                new = new.transpose(1, 0, 2, 3, 4).reshape(
+                    hkv, rows * (bucket // ps), ps, hd
+                )
+            return quant.scatter_pages(pages, scales, new, flat, kv_dtype)
 
         def layer(c, t, scanned):
-            return {"attn": {
-                "k_pages": s(c["attn"]["k_pages"], t["attn"]["k"], scanned),
-                "v_pages": s(c["attn"]["v_pages"], t["attn"]["v"], scanned),
-            }}
+            a = c["attn"]
+            kv_dtype = quant.kv_dtype_of(a["k_pages"].dtype)
+            kp, ks = s(a["k_pages"], a.get("k_scales"), t["attn"]["k"],
+                       scanned, kv_dtype)
+            vp, vs = s(a["v_pages"], a.get("v_scales"), t["attn"]["v"],
+                       scanned, kv_dtype)
+            out = {"k_pages": kp, "v_pages": vp}
+            if ks is not None:
+                out["k_scales"] = ks
+                out["v_scales"] = vs
+            return {"attn": out}
 
         return {
             "scanned": tuple(
@@ -831,7 +934,9 @@ class PagedBackend(_Backend):
 
     @staticmethod
     def _copy_page(caches, src, dst):
-        """Physical page copy (copy-on-write), every layer at once."""
+        """Physical page copy (copy-on-write), every layer at once. The
+        scale entry follows the page (``cache.quant.cow_scales``) so a
+        forked quantized page dequantizes identically."""
 
         def cp(pages, scanned):
             if scanned:
@@ -839,14 +944,85 @@ class PagedBackend(_Backend):
             return pages.at[:, dst].set(pages[:, src])
 
         def layer(c, scanned):
-            return {"attn": {
-                "k_pages": cp(c["attn"]["k_pages"], scanned),
-                "v_pages": cp(c["attn"]["v_pages"], scanned),
-            }}
+            a = c["attn"]
+            out = {
+                "k_pages": cp(a["k_pages"], scanned),
+                "v_pages": cp(a["v_pages"], scanned),
+            }
+            if "k_scales" in a:
+                out["k_scales"] = quant.cow_scales(a["k_scales"], src, dst)
+                out["v_scales"] = quant.cow_scales(a["v_scales"], src, dst)
+            return {"attn": out}
 
         return {
             "scanned": tuple(layer(c, True) for c in caches["scanned"]),
             "rem": tuple(layer(c, False) for c in caches["rem"]),
+        }
+
+    @staticmethod
+    def _restore_page(caches, payload, dst):
+        """Inverse of :meth:`_page_payload`: write one promoted page's
+        host payload (codes + scale entries, every layer) into physical
+        page ``dst``. ``dst`` is traced, so one compilation serves every
+        promotion."""
+
+        def put(pages, page, scanned):
+            page = jnp.asarray(page).astype(pages.dtype)
+            if scanned:
+                return pages.at[:, :, dst].set(page)
+            return pages.at[:, dst].set(page)
+
+        def layer(c, pl, scanned):
+            a = c["attn"]
+            out = {
+                "k_pages": put(a["k_pages"], pl["k"], scanned),
+                "v_pages": put(a["v_pages"], pl["v"], scanned),
+            }
+            if "k_scales" in a:
+                out["k_scales"] = a["k_scales"].at[..., dst].set(
+                    jnp.asarray(pl["ks"], a["k_scales"].dtype)
+                )
+                out["v_scales"] = a["v_scales"].at[..., dst].set(
+                    jnp.asarray(pl["vs"], a["v_scales"].dtype)
+                )
+            return {"attn": out}
+
+        return {
+            "scanned": tuple(
+                layer(c, p, True)
+                for c, p in zip(caches["scanned"], payload["scanned"])
+            ),
+            "rem": tuple(
+                layer(c, p, False)
+                for c, p in zip(caches["rem"], payload["rem"])
+            ),
+        }
+
+    def _page_payload(self, pid: int):
+        """Host (numpy) copy of one physical page across every layer's
+        pools — codes plus scale entries, the opaque payload the
+        :class:`HostPageStore` holds and :meth:`_restore_page` writes
+        back. Pages-axis indexing mirrors the pool layouts: scanned
+        stacks carry a leading periods axis."""
+
+        def grab(c, scanned):
+            a = c["attn"]
+            idx = (
+                (slice(None), slice(None), pid) if scanned
+                else (slice(None), pid)
+            )
+            out = {
+                "k": np.asarray(a["k_pages"][idx]),
+                "v": np.asarray(a["v_pages"][idx]),
+            }
+            if "k_scales" in a:
+                out["ks"] = np.asarray(a["k_scales"][..., pid])
+                out["vs"] = np.asarray(a["v_scales"][..., pid])
+            return out
+
+        return {
+            "scanned": tuple(grab(c, True) for c in self.caches["scanned"]),
+            "rem": tuple(grab(c, False) for c in self.caches["rem"]),
         }
 
     # -- prefill -----------------------------------------------------------
@@ -889,6 +1065,7 @@ class PagedBackend(_Backend):
                      prefix_pages * self.page_size + bucket, cfg.head_dim),
                     phase=plan_lib.EXTEND, kv_layout=plan_lib.PAGED,
                     page_size=self.page_size, prefix_pages=prefix_pages,
+                    kv_dtype=self.kv_dtype,
                 )
 
                 def f(params, tokens, last_positions, caches, page_table,
@@ -907,13 +1084,57 @@ class PagedBackend(_Backend):
 
     def _make_room(self, pages_needed: int) -> bool:
         """Free pages until ``pages_needed`` fit: evict idle prefix-cache
-        pages first (pure capacity, nothing recomputes), then report
-        whether the caller should preempt."""
+        pages first (pure capacity — with a host tier their content
+        demotes instead of being lost, so nothing recomputes either way),
+        then report whether the caller should preempt."""
         short = pages_needed - self.pool.free_pages
         if short > 0 and len(self.prefix):
-            self.stats["prefix_evictions"] += self.prefix.evict(short)
+            on_evict = self._demote_entry if self.host is not None else None
+            self.stats["prefix_evictions"] += self.prefix.evict(
+                short, on_evict=on_evict
+            )
             short = pages_needed - self.pool.free_pages
         return short <= 0
+
+    def _demote_entry(self, h: bytes, pid: int) -> None:
+        """Prefix-eviction hook: copy the page's payload host-side before
+        the device page frees. Runs under pool pressure only (cold pages:
+        prefix-cache LRU tail — which includes preempted and finished
+        sequences' published prefixes)."""
+        if self.host.admit(h, self._page_payload(pid)):
+            self.stats["demoted_pages"] += 1
+
+    def _promote_chain(self, hashes) -> List[int]:
+        """Continue a device prefix miss into the host tier: restore the
+        longest host-resident run of ``hashes`` into freshly allocated
+        device pages and publish them to the device prefix cache, so the
+        caller extends off them exactly as if they had never left.
+        Residency stays exclusive: :meth:`HostPageStore.take` consumes
+        the host copy as each device page lands. Stops early (keeping
+        what it restored evictable) when the pool cannot free a page."""
+        run = self.host.lookup_chain(hashes)
+        pids: List[int] = []
+        for h in run:
+            if not self._make_room(1):
+                break
+            try:
+                pid = self.pool.alloc()
+            except OutOfPages:
+                break
+            if h not in self.host:
+                # _make_room's own demotions overflowed the host LRU onto
+                # this very entry: the run is broken, stop cleanly.
+                self.pool.decref(pid)
+                break
+            payload = self.host.take(h)
+            self.caches = self._restore_jit(
+                self.caches, payload, jnp.asarray(pid, jnp.int32)
+            )
+            self.prefix.insert([h], [pid])
+            self.pool.decref(pid)  # the prefix cache owns it now
+            pids.append(pid)
+            self.stats["promoted_pages"] += 1
+        return pids
 
     def _reserve(self, num_tokens: int, matched) -> Optional[SequencePages]:
         """Page-table reservation for one admission attempt: pin the matched
@@ -944,15 +1165,19 @@ class PagedBackend(_Backend):
         Prefix-cache lookup happens first: shared full pages are reused
         (prefilled once, by whoever computed them) and only the tail is
         prefilled — through the paged prefill kernel, which reads the
-        prefix straight from its pages. Returns an admission record for
-        :meth:`flush`; None when the pool/rows cannot hold the request;
-        or :data:`~repro.serving.scheduler.DEFERRED` when the request's
-        next unmatched prefix page is in ``pending_hashes`` (pages a
-        record admitted earlier in the *same* round will publish) —
-        admitting it now would re-prefill a prefix that is one flush away
-        from being shareable. The row is claimed here (so subsequent
-        admissions in the same round see it taken); the caller must flush
-        before the next decode tick.
+        prefix straight from its pages. The match then continues
+        block-level through pages a record admitted earlier in the
+        *same* round will publish at flush (the borrower shares those
+        in-flight pages instead of re-prefilling them; :meth:`flush`
+        orders its launch after the publisher's), and finally into the
+        host tier, promoting the longest demoted run back into fresh
+        device pages. Returns an admission record for :meth:`flush`;
+        None when the pool/rows cannot hold the request.
+        ``pending_hashes`` is accepted for protocol compatibility but
+        unused — the backend's own in-flight page map is authoritative.
+        The row is claimed here (so subsequent admissions in the same
+        round see it taken); the caller must flush before the next
+        decode tick.
 
         ``resume_tokens``: tokens a preempted run of this request already
         generated. They are replayed through the same extend path (they
@@ -988,13 +1213,27 @@ class PagedBackend(_Backend):
             hashes = req.page_hashes(ps)   # memoized on the request
         # Reuse at most (n-1)//ps pages: at least one tail token must be
         # prefilled here to produce the next-token logits.
-        matched = self.prefix.lookup(hashes[: (n - 1) // ps])
-        m0 = len(matched)
-        if pending_hashes and m0 < (n - 1) // ps and hashes[m0] in pending_hashes:
-            # The next page this prompt could share is being prefilled by a
-            # record already admitted this round: wait one round and extend
-            # off the published pages instead of recomputing the prefix.
-            return DEFERRED
+        limit = (n - 1) // ps
+        matched = self.prefix.lookup(hashes[:limit])
+        after: set = set()
+        if self.prefix_sharing:
+            # Continue block-level through same-round in-flight pages: the
+            # borrower increfs the publisher's pages and records the
+            # dependency so flush publishes before it extends.
+            inflight = 0
+            while (len(matched) < limit
+                   and hashes[len(matched)] in self._pending_pages):
+                pid, owner = self._pending_pages[hashes[len(matched)]]
+                matched.append(pid)
+                after.add(owner)
+                inflight += 1
+            self.stats["inflight_pages_reused"] += inflight
+            # ... and finally into the host tier: promote the longest
+            # demoted run back into fresh device pages.
+            if self.host is not None and len(matched) < limit:
+                matched.extend(
+                    self._promote_chain(hashes[len(matched):limit])
+                )
 
         # Validate the prefill bucket before touching the allocator (a late
         # ValueError must not leak pages).
@@ -1029,6 +1268,7 @@ class PagedBackend(_Backend):
             # Prompts only servable *through* reuse stay queued instead
             # (pages free up as sequences finish).
             matched = []
+            after = set()
             seq = self._reserve(n, matched)
         if seq is None:
             return None
@@ -1051,26 +1291,59 @@ class PagedBackend(_Backend):
         self.active[row] = True
         self.out[row] = list(resume_tokens)
         self.stats["resumed_tokens"] += len(resume_tokens)
+        if self.prefix_sharing:
+            # Expose the fresh full pages this record will prefill for
+            # same-round block-level sharing (matched ones are already
+            # published, pending, or just promoted).
+            for i in range(m, n // ps):
+                self._pending_pages[hashes[i]] = (seq.pages[i], req.uid)
         return {
             "req": req, "row": row, "seq": seq, "matched": matched,
             "tail": tail, "bucket": bucket, "n": n, "hashes": hashes,
             "mb": self._prefix_page_bucket(m) if m else 0,
             "pending_publish": tuple(hashes[: n // ps]),
+            "after": frozenset(after),
         }
 
     def flush(self, records) -> Dict[int, np.ndarray]:
-        """Run the admitted records' tail prefills: one launch per shared
-        (tail-bucket, prefix-page-bucket) jit key with the admitted rows
-        stacked on the batch axis (``batch_prefills=False`` launches one
-        row at a time — the bit-exactness oracle in tests). The paged
-        prefill kernel takes per-row ``prefix_len`` / ``tail_len``, so
-        rows with different live lengths share a launch; rows are
-        independent (per-row page tables, per-row online softmax), so
-        outputs are bit-exact either way. Prefix pages publish after each
-        group's scatter: a record never reads pages whose contents this
-        same flush still owes. Returns per-row last-position logits."""
-        ps = self.page_size
+        """Run the admitted records' tail prefills in **dependency
+        waves**: a borrower of same-round in-flight pages launches
+        strictly after every record it borrows from has scattered and
+        published (its ``after`` uid set), so an extend never reads pages
+        whose contents this same flush still owes. Dependencies always
+        point to earlier admissions, so the partition terminates.
+        Within a wave, one launch per shared (tail-bucket,
+        prefix-page-bucket) jit key with the admitted rows stacked on the
+        batch axis (``batch_prefills=False`` launches one row at a time —
+        the bit-exactness oracle in tests). Returns per-row last-position
+        logits."""
         first_logits: Dict[int, np.ndarray] = {}
+        todo = list(records)
+        published: set = set()
+        while todo:
+            wave = [
+                r for r in todo if r.get("after", frozenset()) <= published
+            ]
+            if not wave:  # unreachable by construction; never deadlock
+                wave = list(todo)
+            done = {id(r) for r in wave}
+            todo = [r for r in todo if id(r) not in done]
+            self._flush_wave(wave, first_logits)
+            published.update(r["req"].uid for r in wave)
+        # Everything admitted this round is now published (or matched):
+        # later rounds share through the prefix cache proper.
+        self._pending_pages.clear()
+        return first_logits
+
+    def _flush_wave(self, records, first_logits: Dict[int, np.ndarray]):
+        """One dependency wave of :meth:`flush`: group by jit key, run
+        the tail prefills, scatter each row's K/V into its fresh pages,
+        publish full pages to the prefix cache. The paged prefill kernel
+        takes per-row ``prefix_len`` / ``tail_len``, so rows with
+        different live lengths share a launch; rows are independent
+        (per-row page tables, per-row online softmax), so outputs are
+        bit-exact regardless of batching."""
+        ps = self.page_size
         groups: Dict[Tuple[int, int], list] = {}
         if self.batch_prefills:
             for rec in records:
@@ -1124,11 +1397,17 @@ class PagedBackend(_Backend):
                 # Publish this prompt's full pages for later requests.
                 if self.prefix_sharing:
                     nfull = r["n"] // ps
+                    if self.host is not None:
+                        # A freshly prefilled page supersedes any host
+                        # copy under the same hash (the content is hash-
+                        # determined): drop it so residency stays
+                        # exclusive — device OR host, never both.
+                        for h in r["hashes"][:nfull]:
+                            self.host.discard(h)
                     self.prefix.insert(
                         r["hashes"][:nfull], r["seq"].pages[:nfull]
                     )
                 first_logits[r["row"]] = logits_np[i]
-        return first_logits
 
     # -- preemption / decode ----------------------------------------------
 
@@ -1311,6 +1590,9 @@ class PagedBackend(_Backend):
             if self.seqs[row] is not None:
                 self.release(row)
         self.prefix.drain()
+        if self.host is not None:
+            self.host.drain()
+        self._pending_pages.clear()
         self.pool.check_leaks()
 
     # -- introspection -----------------------------------------------------
@@ -1331,6 +1613,7 @@ class PagedBackend(_Backend):
              1, self.cache_len, self.cfg.head_dim),
             phase=plan_lib.DECODE, kv_layout=plan_lib.PAGED,
             page_size=self.page_size, num_devices=self.num_devices,
+            kv_dtype=self.kv_dtype,
         )
 
     def modeled_kv_layout(self) -> str:
@@ -1343,7 +1626,7 @@ class PagedBackend(_Backend):
              max(mean_len, 1), self.cfg.head_dim),
             capacity=self.cache_len,
             page_size=self.page_size,
-            dtype_bytes=jnp.dtype(self.cfg.compute_dtype).itemsize,
+            dtype_bytes=self._kv_dtype_bytes,
         )
 
     def prefix_stats(self) -> Dict[str, object]:
@@ -1365,4 +1648,18 @@ class PagedBackend(_Backend):
             "batched_prefills": float(self.stats["batched_prefills"]),
             "cow_copies": float(self.stats["cow_copies"]),
             "free_pages": float(self.pool.free_pages),
+            "inflight_pages_reused": float(
+                self.stats["inflight_pages_reused"]
+            ),
+            "kv_dtype": self.kv_dtype,
+            "kv_pool_bytes": float(self.kv_pool_bytes()),
+            "demoted_pages": float(self.stats["demoted_pages"]),
+            "promoted_pages": float(self.stats["promoted_pages"]),
+            "host_entries": (
+                float(len(self.host)) if self.host is not None else 0.0
+            ),
+            "host_bytes_resident": (
+                float(self.host.bytes_resident)
+                if self.host is not None else 0.0
+            ),
         }

@@ -39,10 +39,11 @@ over the facade; nothing outside ``repro.serving`` may construct them
 
 from __future__ import annotations
 
+import asyncio
 import dataclasses
 import time
 import warnings
-from typing import Dict, Iterable, List, Optional
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -123,10 +124,22 @@ class LLMEngine:
         mesh=None,
         shard_params: bool = False,
         device_hbm_bytes=None,
+        kv_dtype: str = "fp32",
+        host_pool_bytes=None,
+        detokenizer: Optional[Callable[[Sequence], str]] = None,
     ):
         if kv_layout not in KV_LAYOUTS:
             raise ValueError(
                 f"kv_layout must be one of {KV_LAYOUTS}, got {kv_layout!r}"
+            )
+        # Quantized pools and the host tier are paged-subsystem features:
+        # force the layout rather than silently dropping the knobs when
+        # "auto" would have resolved dense.
+        if (kv_dtype != "fp32" or host_pool_bytes) and kv_layout == "auto":
+            kv_layout = "paged"
+        if (kv_dtype != "fp32" or host_pool_bytes) and kv_layout == "dense":
+            raise ValueError(
+                "kv_dtype / host_pool_bytes require the paged KV layout"
             )
         # "auto": the scheduler re-picks N from the live batch's modeled
         # tick time before every sync (perf_model.choose_steps_per_sync);
@@ -205,6 +218,8 @@ class LLMEngine:
                 batch_prefills=batch_prefills,
                 mesh=mesh,
                 device_hbm_bytes=device_hbm_bytes,
+                kv_dtype=kv_dtype,
+                host_pool_bytes=host_pool_bytes,
             )
         self.cfg = cfg
         self.scheduler = scheduler or Scheduler()
@@ -222,6 +237,14 @@ class LLMEngine:
         self._pending: Dict[int, np.ndarray] = {}   # row -> next token
         self._last_ticks = 0                        # live ticks, last scan
         self._streamed: Dict[int, int] = {}         # uid -> tokens emitted
+        #: uid -> buffered outputs for live stream() consumers. Only uids
+        #: with an open stream() generator have an entry; everything else
+        #: flows through step()/generate() unchanged.
+        self._stream_q: Dict[int, List[RequestOutput]] = {}
+        #: Optional token->text hook: when set, every streamed
+        #: RequestOutput carries ``text`` = detokenizer(new_tokens) — the
+        #: incremental piece, not the whole completion.
+        self._detokenizer = detokenizer
         self._completed: List[RequestOutput] = []
         self._next_uid = 0
         self._tokens_generated = 0
@@ -263,6 +286,21 @@ class LLMEngine:
             "serving_running", "active decode rows")
         self._g_waiting = m.gauge(
             "serving_waiting", "queued + requeued requests")
+        self._m_demotions = m.counter(
+            "serving_kv_demotions_total",
+            "KV pages demoted device -> host tier")
+        self._m_promotions = m.counter(
+            "serving_kv_promotions_total",
+            "KV pages promoted host tier -> device")
+        self._g_device_kv = m.gauge(
+            "serving_kv_device_bytes_resident",
+            "device KV pool bytes held by live pages")
+        self._g_host_kv = m.gauge(
+            "serving_kv_host_bytes_resident",
+            "host-tier KV bytes held by demoted pages")
+        # Backend tier counters are monotonic totals; the engine exports
+        # deltas so telemetry resets don't double-count.
+        self._tier_seen = {"demoted_pages": 0, "promoted_pages": 0}
 
     # -- public surface ----------------------------------------------------
 
@@ -377,6 +415,7 @@ class LLMEngine:
         self._m_steps.inc()
         self._g_running.set(self.backend.num_active)
         self._g_waiting.set(self.scheduler.num_waiting)
+        self._observe_tier()
         dt_all = time.perf_counter() - t0
         self._h_step.observe(dt_all)
         self._elapsed += dt_all
@@ -387,7 +426,10 @@ class LLMEngine:
         increments: first_token on the first emission, one ``tokens``
         event per emission (the measured inter-token stream), finish on
         termination."""
+        detok = self._detokenizer
         for o in outputs:
+            if detok is not None:
+                o.text = detok(o.new_tokens)
             n = len(o.new_tokens)
             if n:
                 self._m_tokens.inc(n)
@@ -401,6 +443,32 @@ class LLMEngine:
                 self._tr.request_event(o.uid, "finish",
                                        reason=o.finish_reason,
                                        tokens=len(o.tokens))
+            # Route a copy to any open stream() consumer of this uid —
+            # whoever drives step() (generate, a load harness, another
+            # stream), the push iterator still sees its own increments.
+            buf = self._stream_q.get(o.uid)
+            if buf is not None:
+                buf.append(o)
+
+    def _observe_tier(self) -> None:
+        """Export the KV-tier residency picture once per step: demotion /
+        promotion deltas since last observation plus bytes resident on
+        each side. Separate from step() so the instruments are only
+        *used* (inc/set) in the hot path, never looked up."""
+        b = self.backend
+        stats = getattr(b, "stats", None)
+        if not stats or "demoted_pages" not in stats:
+            return
+        for key, ctr in (("demoted_pages", self._m_demotions),
+                         ("promoted_pages", self._m_promotions)):
+            delta = stats[key] - self._tier_seen[key]
+            if delta:
+                ctr.inc(delta)
+                self._tier_seen[key] = stats[key]
+        page_bytes = b.kv_pool_bytes() // max(b.pool.num_pages, 1)
+        self._g_device_kv.set(b.pool.used_pages * page_bytes)
+        self._g_host_kv.set(
+            b.host.bytes_resident if b.host is not None else 0)
 
     def generate(self, requests: Iterable = ()) -> List[RequestOutput]:
         """Blocking convenience: queue ``requests``, drive :meth:`step`
@@ -426,6 +494,52 @@ class LLMEngine:
                 err.completed = done  # don't lose finished work
                 raise err
         return done
+
+    async def stream(
+        self,
+        request=None,
+        *,
+        prompt=None,
+        sampling: Optional[SamplingParams] = None,
+        priority: Optional[int] = None,
+    ):
+        """Push-style consumption of one request::
+
+            async for out in engine.stream(prompt=toks, sampling=sp):
+                print(out.text or out.new_tokens, end="")
+
+        Queues the request and yields its :class:`RequestOutput`
+        increments as they are produced, ending after the finished
+        output. The iterator *drives* ``step()`` whenever it has nothing
+        buffered; concurrent consumers (several streams, or a stream
+        alongside ``generate()``) cooperate — every ``step()`` caller
+        routes increments into each open stream's buffer, so each
+        consumer sees exactly its own outputs regardless of who ticked
+        the engine. Yields control to the event loop between ticks, so
+        streams interleave under any asyncio runner. Raises
+        ``OutOfPages`` (like :meth:`generate`) when the request can never
+        be admitted."""
+        uid = self.add_request(request, prompt=prompt, sampling=sampling,
+                               priority=priority)
+        q = self._stream_q.setdefault(uid, [])
+        try:
+            while True:
+                while q:
+                    out = q.pop(0)
+                    yield out
+                    if out.finished:
+                        return
+                idle_before = not self.backend.active.any()
+                outs = self.step()
+                if (idle_before and not outs
+                        and not self.backend.active.any() and not q):
+                    raise OutOfPages(
+                        "pool too small for any queued request; grow "
+                        "num_pages or shrink prompts"
+                    )
+                await asyncio.sleep(0)
+        finally:
+            self._stream_q.pop(uid, None)
 
     def close(self) -> None:
         """Teardown: release every live row and (for the paged backend)
@@ -462,6 +576,10 @@ class LLMEngine:
             decode_elapsed_s=self._decode_elapsed,
             steps_per_sync=self.steps_per_sync,
             num_devices=b.num_devices,
+            kv_dtype=str(prefix.get("kv_dtype", "fp32")),
+            demoted_pages=int(prefix.get("demoted_pages", 0)),
+            promoted_pages=int(prefix.get("promoted_pages", 0)),
+            host_bytes_resident=int(prefix.get("host_bytes_resident", 0)),
         )
 
     def drift_model_fn(self):

@@ -144,7 +144,8 @@ class RequestOutput:
     emission for this request (replayed tokens after a preemption resume
     are *not* re-streamed); ``tokens`` is the full accumulated output.
     ``finish_reason`` is ``None`` while decoding, else ``FINISH_STOP`` /
-    ``FINISH_LENGTH``.
+    ``FINISH_LENGTH``. ``text`` is the detokenized form of ``new_tokens``
+    when the engine was built with a ``detokenizer`` hook, else ``None``.
     """
 
     uid: int
@@ -153,3 +154,4 @@ class RequestOutput:
     tokens: List
     finished: bool = False
     finish_reason: Optional[str] = None
+    text: Optional[str] = None

@@ -114,13 +114,23 @@ class SchedulerStats:
     decode_elapsed_s: float = 0.0  # decode-phase wall time (measured)
     steps_per_sync: int = 1        # fused decode ticks per host sync (live)
     num_devices: int = 1           # serving-mesh width (1 = single device)
+    kv_dtype: str = "fp32"         # pool storage dtype (fp32/int8/fp8)
+    demoted_pages: int = 0         # pages demoted device -> host tier
+    promoted_pages: int = 0        # pages promoted host tier -> device
+    host_bytes_resident: int = 0   # host-tier bytes currently held
 
     def summary(self) -> str:
         prefix = ("n/a" if self.prefix_hit_rate is None
                   else f"{self.prefix_hit_rate:.2f}")
         mesh = f" x{self.num_devices}dev" if self.num_devices > 1 else ""
+        tier = ""
+        if self.demoted_pages or self.promoted_pages:
+            tier = (f" | tier {self.demoted_pages} demoted / "
+                    f"{self.promoted_pages} promoted "
+                    f"({self.host_bytes_resident} host bytes)")
+        dtype = f" {self.kv_dtype}" if self.kv_dtype != "fp32" else ""
         return (
-            f"[{self.kv_layout}{mesh} N={self.steps_per_sync}] "
+            f"[{self.kv_layout}{dtype}{mesh} N={self.steps_per_sync}] "
             f"{self.completed} done / {self.running} "
             f"running / {self.waiting} waiting | "
             f"{self.tokens_generated} tokens in {self.elapsed_s:.2f}s "
@@ -133,6 +143,7 @@ class SchedulerStats:
             f"({self.resumed_tokens} tokens resumed) | "
             f"{self.prefill_launches} prefill launches "
             f"({self.batched_prefills} batched)"
+            f"{tier}"
         )
 
 

@@ -19,7 +19,17 @@ SANITIZED_MODULES = {
     "test_serving",
     "test_paged_cache",
     "test_fused_decode",
+    "test_tiering",
     "sharded_engine_cases",
+}
+
+#: Modules whose PagedBackends additionally run with the ShadowTier
+#: residency sanitizer attached (host store + device prefix cache):
+#: double-demote / promote-after-free / stale-device-read checking on
+#: every tiering test, for free.
+TIER_SANITIZED_MODULES = {
+    "test_tiering",
+    "test_serving",
 }
 
 
@@ -48,4 +58,32 @@ def _page_pool_sanitizer(request, monkeypatch):
     # leak proof call engine.close() / backend.check_leaks() themselves.
     for shadow in shadows:
         shadow.assert_sync()
+        shadow.detach()
+
+
+@pytest.fixture(autouse=True)
+def _tier_sanitizer(request, monkeypatch):
+    """Attach a ShadowTier to every tiered PagedBackend constructed in
+    the tiering suites: host-store residency transitions (and the device
+    prefix cache's reads/inserts) are validated on every operation."""
+    module = getattr(request.node, "module", None)
+    name = getattr(module, "__name__", "").rpartition(".")[2]
+    if name not in TIER_SANITIZED_MODULES:
+        yield
+        return
+
+    from repro.analysis.pool_sanitizer import attach_tier
+    from repro.serving.backends import PagedBackend
+
+    shadows = []
+    orig_init = PagedBackend.__init__
+
+    def instrumented_init(self, *args, **kwargs):
+        orig_init(self, *args, **kwargs)
+        if self.host is not None:
+            shadows.append(attach_tier(self.host, self.prefix))
+
+    monkeypatch.setattr(PagedBackend, "__init__", instrumented_init)
+    yield
+    for shadow in shadows:
         shadow.detach()

@@ -217,6 +217,48 @@ def test_collectives_rule_allows_sanctioned_modules():
                        rules=["collectives-only-in-combine"]) == []
 
 
+def test_kv_scales_rule_fires_on_indexing_and_arithmetic():
+    bad_index = (
+        "def peek(cache, pid):\n"
+        "    k_scales = cache['k_scales']\n"
+        "    return k_scales[:, pid]\n"
+    )
+    vs = _fires(bad_index, "src/repro/serving/backends.py",
+                "kv-scales-ride-page-table")
+    assert "k_scales" in vs[0].message
+    bad_math = (
+        "def dequant(codes, v_scales):\n"
+        "    return codes * v_scales\n"
+    )
+    _fires(bad_math, "src/repro/serving/engine.py",
+           "kv-scales-ride-page-table")
+    _fires(bad_math, "examples/serve_longctx.py",
+           "kv-scales-ride-page-table")
+
+
+def test_kv_scales_rule_allows_opaque_passthrough_and_kernel_math():
+    # Dict-key plumbing (how serving hands scales to the kernel call) and
+    # keyword threading never touch the array's values — allowed anywhere.
+    ok = (
+        "def pack(cache):\n"
+        "    return {'k_scales': cache['k_scales'],\n"
+        "            'v_scales': cache.get('v_scales')}\n"
+        "def call(op, cache):\n"
+        "    return op(k_scales=cache['k_scales'])\n"
+    )
+    assert lint_source(ok, "src/repro/serving/backends.py",
+                       rules=["kv-scales-ride-page-table"]) == []
+    # Inside the kernel / quantization layers the math is the point.
+    math = (
+        "def dequant(codes, k_scales, pid):\n"
+        "    return codes * k_scales[:, pid]\n"
+    )
+    assert lint_source(math, "src/repro/kernels/paged_decode_attention.py",
+                       rules=["kv-scales-ride-page-table"]) == []
+    assert lint_source(math, "src/repro/cache/quant.py",
+                       rules=["kv-scales-ride-page-table"]) == []
+
+
 # --- registry / CLI / live tree ----------------------------------------------
 
 
@@ -227,6 +269,7 @@ def test_every_registered_rule_has_a_bad_fixture_test():
         "no-legacy-engine-construction", "decode-relevance-shared",
         "pallas-call-via-compat", "no-host-sync-in-decode-hot-loop",
         "obs-no-hot-loop-allocs", "collectives-only-in-combine",
+        "kv-scales-ride-page-table",
     }
     assert set(RULES) == covered
 
